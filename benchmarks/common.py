@@ -1,0 +1,39 @@
+"""Benchmark utilities: wall-clock timing of jitted callables + CSV output."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+RESULTS: List[Dict] = []
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, repeats: int = 5) -> float:
+    """Median wall-time (seconds) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def record(name: str, seconds: float, derived: str = ""):
+    us = seconds * 1e6
+    RESULTS.append({"name": name, "us_per_call": us, "derived": derived})
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def emit_header():
+    print("name,us_per_call,derived", flush=True)
+
+
+def paper_cost(m: int, k: int, n: int, s: float) -> float:
+    """The paper's cost model C(M,K,N,s) = M*N*(1 + s*K) fadds (§2)."""
+    return m * n * (1.0 + s * k)

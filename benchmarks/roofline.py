@@ -1,0 +1,78 @@
+"""Roofline aggregation: read experiments/dryrun/*.json (written by
+``repro.launch.dryrun``) and emit the §Roofline table (CSV + markdown)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_PER_CHIP = 16 * 2**30   # v5e-class
+
+
+def load(out_dir: str = "experiments/dryrun") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_rows(recs: List[Dict], mesh: str = "16x16") -> List[Dict]:
+    rows = []
+    for r in recs:
+        if r.get("mesh") != mesh or r.get("quant") not in ("none", ""):
+            continue
+        if r.get("overrides"):
+            continue
+        row = {"arch": r["arch"], "shape": r["shape"], "status": r["status"]}
+        if r["status"] == "ok":
+            tc, tm, tl = (r["t_compute_s"], r["t_memory_s"],
+                          r["t_collective_s"])
+            dom = r["dominant"]
+            t_bound = max(tc, tm, tl)
+            row.update({
+                "t_compute_s": f"{tc:.3e}", "t_memory_s": f"{tm:.3e}",
+                "t_collective_s": f"{tl:.3e}", "dominant": dom,
+                "roofline_frac": f"{tc / t_bound:.3f}" if t_bound else "",
+                "useful_ratio": f"{(r.get('useful_flops_ratio') or 0):.2f}",
+                "hbm_frac": f"{(r['memory'].get('argument_size_in_bytes', 0) + r['memory'].get('temp_size_in_bytes', 0)) / HBM_PER_CHIP:.2f}"
+                if r.get("memory") else "",
+            })
+        else:
+            row["dominant"] = r.get("reason", r.get("error", ""))[:60]
+        rows.append(row)
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    if not rows:
+        return "(no dry-run records yet)"
+    cols = ["arch", "shape", "status", "t_compute_s", "t_memory_s",
+            "t_collective_s", "dominant", "roofline_frac", "useful_ratio",
+            "hbm_frac"]
+    out = ["| " + " | ".join(cols) + " |",
+           "|" + "|".join("---" for _ in cols) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(r.get(c, "")) for c in cols) + " |")
+    return "\n".join(out)
+
+
+def main(out_dir: str = "experiments/dryrun"):
+    recs = load(out_dir)
+    for mesh in ("16x16", "2x16x16"):
+        rows = roofline_rows(recs, mesh)
+        if not rows:
+            continue
+        print(f"\n== roofline {mesh} ==")
+        for r in rows:
+            print(",".join(str(r.get(c, "")) for c in
+                           ("arch", "shape", "status", "dominant",
+                            "t_compute_s", "t_memory_s", "t_collective_s")))
+
+
+if __name__ == "__main__":
+    main()

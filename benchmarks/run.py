@@ -1,0 +1,28 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes for CI-speed runs")
+    ap.add_argument("--only", default="",
+                    help="comma-separated benchmark names (fig6,fig8,...)")
+    args = ap.parse_args()
+
+    from benchmarks import kernel_bench, paper_figs, roofline
+    from benchmarks.common import emit_header
+
+    emit_header()
+    benches = {f.__name__: f for f in paper_figs.ALL + kernel_bench.ALL}
+    selected = (args.only.split(",") if args.only else list(benches))
+    for name in selected:
+        benches[name](quick=args.quick)
+
+    # roofline table from whatever dry-run records exist
+    roofline.main()
+
+
+if __name__ == "__main__":
+    main()

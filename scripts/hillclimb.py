@@ -1,0 +1,133 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""§Perf hillclimb driver: run one cell with config overrides, print the
+three roofline terms + per-opcode byte/flop breakdown (hypothesis fuel), and
+append the iteration record to experiments/perf/<tag>.json.
+
+Usage:
+  PYTHONPATH=src python scripts/hillclimb.py --arch granite-3-8b \
+      --shape decode_32k --tag baseline
+  ... --set attn_impl=naive --set logits_chunk=1024 --tag iterN
+"""
+import argparse
+import json
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.configs.base import ModelConfig  # noqa: E402
+from repro.distributed import sharding as shlib  # noqa: E402
+from repro.launch import hlo_cost, steps as steps_lib  # noqa: E402
+from repro.launch.dryrun import (HBM_BW, ICI_BW, PEAK_FLOPS,  # noqa: E402
+                                 model_flops)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import LM, set_mesh  # noqa: E402
+
+
+def lower_cell(arch, shape_name, overrides, multi_pod=False, mesh=None):
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch, **overrides)
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    set_mesh(mesh)
+    model = LM(cfg)
+    p_shapes, p_sh = steps_lib.model_shardings(model, cfg, mesh)
+    batch = steps_lib.input_specs(cfg, shape)
+    batch_sh = shlib.batch_sharding(batch, mesh)
+    if shape.kind == "train":
+        train_step, opt_init = steps_lib.make_train_step(model, cfg)
+        opt_shapes = jax.eval_shape(opt_init, p_shapes)
+        opt_sh = shlib.opt_state_shardings(p_sh, opt_shapes, mesh)
+        return jax.jit(train_step, in_shardings=(p_sh, opt_sh, batch_sh),
+                       donate_argnums=(0, 1)).lower(p_shapes, opt_shapes,
+                                                    batch), cfg, mesh
+    if shape.kind == "prefill":
+        prefill_step = steps_lib.make_prefill_step(model, cfg, shape.seq_len)
+        return jax.jit(prefill_step, in_shardings=(p_sh, batch_sh)).lower(
+            p_shapes, batch), cfg, mesh
+    decode_step = steps_lib.make_decode_step(model, cfg)
+    cache_shapes, cache_pspec = steps_lib.cache_specs_shapes(model, cfg, shape)
+    if cfg.decode_cache_shard == "auto":
+        cache_sh = jax.tree.map(lambda _: None, cache_shapes)
+    else:
+        cache_sh = shlib.resolve_specs(cache_pspec, cache_shapes, mesh,
+                                       fsdp=True)
+    return jax.jit(decode_step,
+                   in_shardings=(p_sh, cache_sh, batch_sh["tokens"]),
+                   donate_argnums=(1,)).lower(
+        p_shapes, cache_shapes, batch["tokens"]), cfg, mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", action="append", default=[])
+    ap.add_argument("--top", type=int, default=14)
+    ap.add_argument("--kernel-model", action="store_true",
+                    help="cost dequant+dot through the fused Pallas kernel")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        f = ModelConfig.__dataclass_fields__[k]
+        typ = f.type if isinstance(f.type, type) else eval(f.type)  # noqa: S307
+        overrides[k] = (v.lower() in ("1", "true")) if typ is bool else typ(v)
+
+    t0 = time.time()
+    lowered, cfg, mesh = lower_cell(args.arch, args.shape, overrides,
+                                    args.multi_pod)
+    compiled = lowered.compile()
+    walked = hlo_cost.analyze(compiled.as_text(),
+                              kernel_dequant=args.kernel_model)
+    mem = compiled.memory_analysis()
+    shape = SHAPES[args.shape]
+    mf = model_flops(cfg, shape)
+    chips = mesh.devices.size
+    t_comp = walked.flops / PEAK_FLOPS
+    t_mem = walked.bytes / HBM_BW
+    t_coll = walked.total_collective() / ICI_BW
+    rec = {
+        "arch": args.arch, "shape": args.shape, "tag": args.tag,
+        "overrides": {k: str(v) for k, v in overrides.items()},
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": max((("compute", t_comp), ("memory", t_mem),
+                         ("collective", t_coll)), key=lambda kv: kv[1])[0],
+        "flops_per_chip": walked.flops, "bytes_per_chip": walked.bytes,
+        "collective_by_type": walked.collective_bytes,
+        "useful_ratio": (mf / chips) / walked.flops if walked.flops else None,
+        "hbm_gb": (getattr(mem, "argument_size_in_bytes", 0)
+                   + getattr(mem, "temp_size_in_bytes", 0)) / 2**30,
+        "compile_s": round(time.time() - t0, 1),
+        "top_bytes_by_op": [(k, b, f) for k, b, f in walked.top_bytes(args.top)],
+    }
+    os.makedirs("experiments/perf", exist_ok=True)
+    rec["kernel_model"] = args.kernel_model
+    path = f"experiments/perf/{args.arch}_{args.shape}_{args.tag}.json"
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"== {args.arch} {args.shape} [{args.tag}] chips={chips} ==")
+    print(f" t_compute={t_comp:.4e}s t_memory={t_mem:.4e}s "
+          f"t_collective={t_coll:.4e}s dominant={rec['dominant']}")
+    print(f" useful_ratio={rec['useful_ratio']:.3f} hbm={rec['hbm_gb']:.1f}GB "
+          f"compile={rec['compile_s']}s")
+    print(" top ops by bytes (op, GB, GFLOP):")
+    for k, b, fl in rec["top_bytes_by_op"]:
+        print(f"   {k:24s} {b / 1e9:12.2f} {fl / 1e9:12.2f}")
+    print(" collectives:", {k: f"{v / 1e9:.2f}GB"
+                            for k, v in walked.collective_bytes.items()})
+
+
+if __name__ == "__main__":
+    main()

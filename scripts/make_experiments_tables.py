@@ -1,0 +1,90 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from
+experiments/dryrun/*.json. Usage:
+  PYTHONPATH=src python scripts/make_experiments_tables.py > /tmp/tables.md
+"""
+import glob
+import json
+import os
+import sys
+
+ARCH_ORDER = ["seamless-m4t-large-v2", "mistral-nemo-12b", "command-r-35b",
+              "granite-3-8b", "deepseek-coder-33b", "jamba-v0.1-52b",
+              "kimi-k2-1t-a32b", "mixtral-8x22b", "mamba2-130m",
+              "internvl2-76b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh):
+    recs = {}
+    for f in glob.glob("experiments/dryrun/*.json"):
+        r = json.load(open(f))
+        if r.get("mesh") == mesh and not r.get("overrides") \
+                and r.get("quant") in ("none", ""):
+            recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def fmt(x, p=2):
+    if x is None:
+        return ""
+    return f"{x:.{p}e}"
+
+
+def roofline_table(recs):
+    print("| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) "
+          "| dominant | roofline frac | useful ratio | GB/chip |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s))
+            if r is None:
+                print(f"| {a} | {s} | — | — | — | (missing) | | | |")
+                continue
+            if r["status"] == "skipped":
+                print(f"| {a} | {s} | — | — | — | skipped: "
+                      f"{r['reason'][:48]} | | | |")
+                continue
+            tc, tm, tl = (r["t_compute_s"], r["t_memory_s"],
+                          r["t_collective_s"])
+            bound = max(tc, tm, tl)
+            gb = (r["memory"].get("argument_size_in_bytes", 0)
+                  + r["memory"].get("temp_size_in_bytes", 0)) / 2**30
+            print(f"| {a} | {s} | {fmt(tc)} | {fmt(tm)} | {fmt(tl)} "
+                  f"| {r['dominant']} | {tc / bound:.3f} "
+                  f"| {(r.get('useful_flops_ratio') or 0):.2f} | {gb:.1f} |")
+
+
+def dryrun_table(recs, mesh):
+    ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    sk = sum(1 for r in recs.values() if r["status"] == "skipped")
+    er = sum(1 for r in recs.values() if r["status"] == "error")
+    print(f"mesh {mesh}: {ok} compiled ok, {sk} documented skips, {er} errors")
+    print()
+    print("| arch | shape | compile (s) | FLOPs/chip | bytes/chip "
+          "| coll. bytes/chip | args+temp GB/chip |")
+    print("|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s))
+            if r is None or r["status"] != "ok":
+                continue
+            gb = (r["memory"].get("argument_size_in_bytes", 0)
+                  + r["memory"].get("temp_size_in_bytes", 0)) / 2**30
+            print(f"| {a} | {s} | {r['compile_s']} "
+                  f"| {fmt(r['hlo_flops_per_chip'])} "
+                  f"| {fmt(r['hlo_bytes_per_chip'])} "
+                  f"| {fmt(r['collective_bytes_per_chip'].get('total', 0))} "
+                  f"| {gb:.1f} |")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    for mesh in ("16x16", "2x16x16"):
+        recs = load(mesh)
+        if not recs:
+            continue
+        print(f"\n### Dry-run — mesh {mesh}\n")
+        dryrun_table(recs, mesh)
+        if mesh == "16x16" and which != "dryrun":
+            print("\n### Roofline — single pod (16x16, 256 chips)\n")
+            roofline_table(recs)

@@ -1,0 +1,134 @@
+"""Mesh-agnostic checkpointing.
+
+Checkpoints store the *logical* (unsharded) state as one ``.npz`` per save
+plus a small JSON manifest — restore works onto any mesh / device count
+(elastic scaling: save on 512 chips, restore on 256, or on 1 CPU for tests).
+Atomic rename prevents torn checkpoints on failure mid-save; ``latest_step``
++ step-tagged directories give restartability.
+
+For multi-host deployments, ``save`` is called on the leader only (process
+index 0); leaves are fetched with ``jax.device_get`` which assembles the
+logical array from shards.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def _to_savable(v: np.ndarray) -> np.ndarray:
+    """numpy can't serialize ml_dtypes (bfloat16, fp8) through savez — store
+    them as same-width unsigned ints; the manifest records the true dtype."""
+    if v.dtype.kind == "V" or str(v.dtype) in ("bfloat16", "float8_e4m3fn",
+                                               "float8_e5m2"):
+        return v.view({1: np.uint8, 2: np.uint16, 4: np.uint32}[v.dtype.itemsize])
+    return v
+
+
+def _from_saved(arr: np.ndarray, dtype_str: str) -> np.ndarray:
+    if str(arr.dtype) != dtype_str:
+        import ml_dtypes
+        try:
+            return arr.view(np.dtype(dtype_str))
+        except TypeError:
+            return arr.view(ml_dtypes.bfloat16 if dtype_str == "bfloat16"
+                            else np.dtype(dtype_str))
+    return arr
+
+
+def save(ckpt_dir: str, step: int, state: Any) -> str:
+    """Atomically write state under ckpt_dir/step_<n>/ ."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = {k: np.asarray(jax.device_get(v)) for k, v in _flatten(state).items()}
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        np.savez(os.path.join(tmp, "state.npz"),
+                 **{k.replace(SEP, "|"): _to_savable(v)
+                    for k, v in flat.items()})
+        manifest = {
+            "step": step,
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in flat.items()},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: Optional[int] = None, target: Any = None,
+            shardings: Any = None) -> Tuple[int, Any]:
+    """Restore (step, state). ``target`` (a pytree of arrays or
+    ShapeDtypeStructs) fixes the tree structure; ``shardings`` (matching
+    pytree of NamedSharding) places leaves onto the *current* mesh —
+    re-meshing happens here."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "state.npz"))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat = {}
+    for k in data.files:
+        key = k.replace("|", SEP)
+        dt = manifest["leaves"].get(key, {}).get("dtype", "")
+        flat[key] = _from_saved(data[k], dt) if dt else data[k]
+    if target is None:
+        return step, flat
+
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(target)
+    shard_flat = (_flatten(shardings) if shardings is not None else {})
+    out = []
+    for path_k, leaf in leaves_with_path:
+        key = SEP.join(_path_str(p) for p in path_k)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        want = getattr(leaf, "dtype", None)
+        if want is not None and arr.dtype != want:
+            arr = arr.astype(want)
+        sh = shard_flat.get(key)
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.numpy.asarray(arr))
+    return step, jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,27 @@
+"""The paper's own benchmark configuration (§4): Y = X·W + b microbenchmark
+shapes, exposed as a pseudo-architecture so the benchmark harness and
+quickstart can select it. A small decoder-only LM whose every projection is
+ternary-quantized, mirroring the paper's target use (ternary-quantized LLM
+inference), with K-range covering the paper's sweep (1024..16384).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="ternary-paper",
+    family="dense",
+    num_layers=12,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=32768,
+    quantization="ternary",
+    ternary_min_dim=512,
+    fsdp=False,
+)
+
+# The paper's microbenchmark parameter grid (Figs 6-11)
+PAPER_SPARSITIES = (0.5, 0.25, 0.125, 0.0625)
+PAPER_K_RANGE = (1024, 2048, 4096, 8192, 16384)
+PAPER_BLOCK_SIZE = 4096

@@ -1,0 +1,3 @@
+from repro.core import formats, quantize
+
+__all__ = ["formats", "quantize"]

@@ -1,0 +1,335 @@
+"""Sparse ternary weight formats.
+
+This module is the JAX/TPU adaptation of the paper's data-format contributions:
+
+* ``TCSC``            -- the paper's baseline Ternary Compressed Sparse Column.
+* ``BlockedTCSC``     -- K-axis blocked TCSC (paper's cache-window insight).
+* ``InterleavedTCSC`` -- single-pass interleaved +/- index groups.
+* ``pack_bitplanes``  -- two packed bit-masks (plus/minus plane). Structural
+                         sign encoding, vector-decodable (TPU-native TCSC).
+* ``pack_2bit``       -- 2-bit codes, 16 weights / int32 word: the format the
+                         Pallas kernel consumes.
+* ``pack_base3``      -- the paper's 5-values-per-byte base-3 compression
+                         (prototyped & dropped in the paper; kept here for the
+                         benchmark record).
+
+Construction happens host-side in numpy; all ``decode_*`` functions are pure
+jnp and jittable (they run inside the XLA ternary path and the tests).
+
+Conventions: the ternary matrix ``W`` has shape ``(K, N)`` with values in
+{-1, 0, +1} (stored as int8). ``Y = X @ W`` with ``X: (M, K)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "TCSC",
+    "BlockedTCSC",
+    "InterleavedTCSC",
+    "pack_bitplanes",
+    "decode_bitplanes",
+    "pack_2bit",
+    "decode_2bit",
+    "pack_base3",
+    "decode_base3",
+    "base3_lut",
+    "random_ternary",
+]
+
+
+# ---------------------------------------------------------------------------
+# Random ternary generation (benchmark / test input, paper §4 setup)
+# ---------------------------------------------------------------------------
+
+def random_ternary(rng: np.random.Generator, k: int, n: int, sparsity: float) -> np.ndarray:
+    """Random ternary (K, N) int8 matrix with ``sparsity`` nnz fraction.
+
+    Follows the paper's convention: ``sparsity`` is the *fraction of non-zero*
+    elements (s in {1/2, 1/4, 1/8, 1/16}), split evenly between +1 and -1.
+    """
+    nnz = int(round(k * n * sparsity))
+    w = np.zeros(k * n, dtype=np.int8)
+    idx = rng.choice(k * n, size=nnz, replace=False)
+    signs = rng.integers(0, 2, size=nnz, dtype=np.int8) * 2 - 1
+    w[idx] = signs
+    return w.reshape(k, n)
+
+
+# ---------------------------------------------------------------------------
+# TCSC -- the paper's baseline format (§2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TCSC:
+    """Ternary Compressed Sparse Column.
+
+    For column j: +1 rows are ``row_index_pos[col_start_pos[j]:col_start_pos[j+1]]``
+    and -1 rows are ``row_index_neg[col_start_neg[j]:col_start_neg[j+1]]``.
+    Sign is structural (array choice); no value array exists.
+    """
+
+    col_start_pos: np.ndarray  # (N+1,) int32
+    col_start_neg: np.ndarray  # (N+1,) int32
+    row_index_pos: np.ndarray  # (nnz_pos,) int32
+    row_index_neg: np.ndarray  # (nnz_neg,) int32
+    shape: Tuple[int, int]     # (K, N)
+
+    @classmethod
+    def from_dense(cls, w: np.ndarray) -> "TCSC":
+        k, n = w.shape
+        col_start_pos = np.zeros(n + 1, dtype=np.int32)
+        col_start_neg = np.zeros(n + 1, dtype=np.int32)
+        rows_pos, rows_neg = [], []
+        for j in range(n):
+            pos = np.nonzero(w[:, j] > 0)[0]
+            neg = np.nonzero(w[:, j] < 0)[0]
+            rows_pos.append(pos)
+            rows_neg.append(neg)
+            col_start_pos[j + 1] = col_start_pos[j] + len(pos)
+            col_start_neg[j + 1] = col_start_neg[j] + len(neg)
+        cat = lambda xs: (np.concatenate(xs).astype(np.int32) if xs else np.zeros(0, np.int32))
+        return cls(col_start_pos, col_start_neg, cat(rows_pos), cat(rows_neg), (k, n))
+
+    def to_dense(self) -> np.ndarray:
+        k, n = self.shape
+        w = np.zeros((k, n), dtype=np.int8)
+        for j in range(n):
+            w[self.row_index_pos[self.col_start_pos[j]:self.col_start_pos[j + 1]], j] = 1
+            w[self.row_index_neg[self.col_start_neg[j]:self.col_start_neg[j + 1]], j] = -1
+        return w
+
+    # Flattened (segment-sum friendly) views used by the jnp reference kernels.
+    def segment_ids_pos(self) -> np.ndarray:
+        return np.repeat(np.arange(self.shape[1], dtype=np.int32), np.diff(self.col_start_pos))
+
+    def segment_ids_neg(self) -> np.ndarray:
+        return np.repeat(np.arange(self.shape[1], dtype=np.int32), np.diff(self.col_start_neg))
+
+    def nbytes(self) -> int:
+        return (self.col_start_pos.nbytes + self.col_start_neg.nbytes
+                + self.row_index_pos.nbytes + self.row_index_neg.nbytes)
+
+
+# ---------------------------------------------------------------------------
+# BlockedTCSC -- §3 "Blocking"
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockedTCSC:
+    """TCSC re-organized block-by-block along K (block size B).
+
+    Iteration order becomes: for each block b, for each column j, process rows
+    in [b*B, (b+1)*B) -- confining the X gather window to B elements. Arrays
+    are the per-block TCSC arrays concatenated; ``blocks[b]`` is a TCSC whose
+    row indices are *relative to the block base* (so the gather window is
+    [0, B) for every phase, exactly the paper's locality property).
+    """
+
+    block_size: int
+    blocks: Tuple[TCSC, ...]
+    shape: Tuple[int, int]
+
+    @classmethod
+    def from_dense(cls, w: np.ndarray, block_size: int = 4096) -> "BlockedTCSC":
+        k, n = w.shape
+        blocks = []
+        for b0 in range(0, k, block_size):
+            blocks.append(TCSC.from_dense(w[b0:b0 + block_size, :]))
+        return cls(block_size, tuple(blocks), (k, n))
+
+    def to_dense(self) -> np.ndarray:
+        return np.concatenate([b.to_dense() for b in self.blocks], axis=0)
+
+    def nbytes(self) -> int:
+        return sum(b.nbytes() for b in self.blocks)
+
+
+# ---------------------------------------------------------------------------
+# InterleavedTCSC -- §3 "Interleaving"
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InterleavedTCSC:
+    """Interleaved +/- groups in a single index vector (group size G).
+
+    Per column, three segments (paper's ``col_segment_ptr``):
+      1. interleaved groups: G positive indices then G negative indices,
+         repeated while both signs have >= G left;
+      2. remaining positives;
+      3. remaining negatives.
+    ``col_segment_ptr`` has 3 pointers per column + final end: shape (3N+1,).
+    """
+
+    group: int
+    all_indices: np.ndarray      # (nnz,) int32
+    col_segment_ptr: np.ndarray  # (3N+1,) int32
+    shape: Tuple[int, int]
+
+    @classmethod
+    def from_dense(cls, w: np.ndarray, group: int = 4) -> "InterleavedTCSC":
+        k, n = w.shape
+        idx_chunks = []
+        ptr = [0]
+        total = 0
+        for j in range(n):
+            pos = np.nonzero(w[:, j] > 0)[0].astype(np.int32)
+            neg = np.nonzero(w[:, j] < 0)[0].astype(np.int32)
+            g = min(len(pos), len(neg)) // group
+            inter = np.empty(2 * g * group, dtype=np.int32)
+            for t in range(g):
+                inter[2 * t * group: (2 * t + 1) * group] = pos[t * group:(t + 1) * group]
+                inter[(2 * t + 1) * group: (2 * t + 2) * group] = neg[t * group:(t + 1) * group]
+            rem_pos = pos[g * group:]
+            rem_neg = neg[g * group:]
+            idx_chunks += [inter, rem_pos, rem_neg]
+            total += len(inter)
+            ptr.append(total)          # end of interleaved segment
+            total += len(rem_pos)
+            ptr.append(total)          # end of remaining-positive segment
+            total += len(rem_neg)
+            ptr.append(total)          # end of remaining-negative segment
+        all_indices = (np.concatenate(idx_chunks).astype(np.int32)
+                       if idx_chunks else np.zeros(0, np.int32))
+        return cls(group, all_indices, np.asarray(ptr, dtype=np.int32), (k, n))
+
+    def to_dense(self) -> np.ndarray:
+        k, n = self.shape
+        w = np.zeros((k, n), dtype=np.int8)
+        g = self.group
+        for j in range(n):
+            s0, s1, s2, s3 = self.col_segment_ptr[3 * j:3 * j + 4]
+            inter = self.all_indices[s0:s1]
+            for t in range(len(inter) // (2 * g)):
+                w[inter[2 * t * g:(2 * t + 1) * g], j] = 1
+                w[inter[(2 * t + 1) * g:(2 * t + 2) * g], j] = -1
+            w[self.all_indices[s1:s2], j] = 1
+            w[self.all_indices[s2:s3], j] = -1
+        return w
+
+    def signs(self) -> np.ndarray:
+        """+1/-1 sign per entry of ``all_indices`` (decoded structurally)."""
+        n = self.shape[1]
+        g = self.group
+        out = np.empty_like(self.all_indices, dtype=np.int8)
+        for j in range(n):
+            s0, s1, s2, s3 = self.col_segment_ptr[3 * j:3 * j + 4]
+            span = s1 - s0
+            pattern = np.tile(np.repeat(np.array([1, -1], np.int8), g), span // (2 * g) + 1)
+            out[s0:s1] = pattern[:span]
+            out[s1:s2] = 1
+            out[s2:s3] = -1
+        return out
+
+    def segment_ids(self) -> np.ndarray:
+        counts = self.col_segment_ptr[3::3] - self.col_segment_ptr[:-1:3]
+        return np.repeat(np.arange(self.shape[1], dtype=np.int32), counts)
+
+    def nbytes(self) -> int:
+        return self.all_indices.nbytes + self.col_segment_ptr.nbytes
+
+
+# ---------------------------------------------------------------------------
+# Bitplane packing -- TPU-native structural-sign format
+# ---------------------------------------------------------------------------
+
+def pack_bitplanes(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Pack (K, N) ternary into two uint8 bitplanes of shape (ceil(K/8), N).
+
+    Bit ``r`` of ``plus[q, n]`` is 1 iff ``w[8q + r, n] == +1`` (same for
+    minus/-1). The sign lives in *which plane* the bit occupies -- the
+    paper's structural-sign-encoding insight, in vector-decodable form.
+    """
+    k, n = w.shape
+    kp = -(-k // 8) * 8
+    wp = np.zeros((kp, n), dtype=np.int8)
+    wp[:k] = w
+    plus = (wp == 1).astype(np.uint8).reshape(kp // 8, 8, n)
+    minus = (wp == -1).astype(np.uint8).reshape(kp // 8, 8, n)
+    shifts = (1 << np.arange(8, dtype=np.uint8)).reshape(1, 8, 1)
+    return ((plus * shifts).sum(1).astype(np.uint8),
+            (minus * shifts).sum(1).astype(np.uint8))
+
+
+def decode_bitplanes(plus: jnp.ndarray, minus: jnp.ndarray, k: int,
+                     dtype=jnp.bfloat16) -> jnp.ndarray:
+    """jnp decode: two (K/8, N) uint8 planes -> (k, N) ±1/0 matrix."""
+    q, n = plus.shape
+    shifts = jnp.arange(8, dtype=jnp.uint8).reshape(1, 8, 1)
+    p = (plus[:, None, :] >> shifts) & 1
+    m = (minus[:, None, :] >> shifts) & 1
+    vals = (p.astype(jnp.int8) - m.astype(jnp.int8)).reshape(q * 8, n)
+    return vals[:k].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# 2-bit packing -- the Pallas kernel format (16 weights / int32 word)
+# ---------------------------------------------------------------------------
+# Codes: 0 -> 0, 1 -> +1, 2 -> -1 (3 unused). decode(c) = (c & 1) - ((c>>1)&1).
+
+def pack_2bit(w: np.ndarray, word: int = 32) -> np.ndarray:
+    """Pack (K, N) ternary into (ceil(K/(word/2)), N) u{word} codes.
+
+    With the default 32-bit words, row q holds k = word/2 = 16 consecutive
+    K-entries: bits [2r, 2r+2) of word[q, n] encode w[16q + r, n].
+    """
+    assert word in (8, 32)
+    per = word // 2
+    k, n = w.shape
+    kp = -(-k // per) * per
+    codes = np.zeros((kp, n), dtype=np.uint32)
+    codes[:k][w == 1] = 1
+    codes[:k][w == -1] = 2
+    codes = codes.reshape(kp // per, per, n)
+    shifts = (2 * np.arange(per, dtype=np.uint32)).reshape(1, per, 1)
+    packed = np.bitwise_or.reduce(codes << shifts, axis=1)
+    return packed.astype(np.uint8 if word == 8 else np.uint32)
+
+
+def decode_2bit(packed: jnp.ndarray, k: int, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """jnp decode: (K/per, N) packed words -> (k, N) ±1/0 matrix."""
+    word = 8 * packed.dtype.itemsize
+    per = word // 2
+    q, n = packed.shape
+    shifts = (2 * jnp.arange(per, dtype=packed.dtype)).reshape(1, per, 1)
+    c = (packed[:, None, :] >> shifts) & 3
+    vals = ((c & 1).astype(jnp.int8) - ((c >> 1) & 1).astype(jnp.int8))
+    return vals.reshape(q * per, n)[:k].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Base-3 value compression -- paper §3 "Value Compression" (dropped there;
+# kept here for the benchmark record, decode needs a 243-entry LUT gather)
+# ---------------------------------------------------------------------------
+
+def base3_lut() -> np.ndarray:
+    """(243, 5) int8 lookup: code -> five {-1,0,+1} values (digit 0 first)."""
+    codes = np.arange(243)
+    digits = np.stack([(codes // 3**t) % 3 for t in range(5)], axis=1)
+    return (digits.astype(np.int8) - (digits == 2).astype(np.int8) * 3)
+
+
+def pack_base3(w: np.ndarray) -> np.ndarray:
+    """Pack (K, N) ternary into (ceil(K/5), N) uint8 base-3 codes."""
+    k, n = w.shape
+    kp = -(-k // 5) * 5
+    trits = np.zeros((kp, n), dtype=np.uint8)
+    trits[:k][w == 1] = 1
+    trits[:k][w == -1] = 2
+    trits = trits.reshape(kp // 5, 5, n)
+    weights = (3 ** np.arange(5, dtype=np.uint32)).reshape(1, 5, 1)
+    return (trits.astype(np.uint32) * weights).sum(1).astype(np.uint8)
+
+
+def decode_base3(packed: jnp.ndarray, k: int, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """jnp decode via the 243-entry LUT (a gather -- the reason this format
+    loses on TPU, mirroring the paper's drop decision on CPU)."""
+    lut = jnp.asarray(base3_lut())  # (243, 5) int8
+    q, n = packed.shape
+    vals = lut[packed.astype(jnp.int32)]          # (q, n, 5) gather
+    vals = jnp.transpose(vals, (0, 2, 1)).reshape(q * 5, n)
+    return vals[:k].astype(dtype)

@@ -1,0 +1,97 @@
+"""Ternary quantization: TWN-style absmean thresholding + QAT (STE).
+
+The paper consumes ternary matrices produced by quantization (its §1 cites
+ternary quantization of LLM weights); this module is the substrate that
+*produces* them, so the technique is integrated end-to-end:
+
+* ``ternarize``                -- TWN: threshold Δ = t·mean|W|, per-channel
+                                  scale α = mean|W| over the surviving mask.
+* ``ternarize_target_sparsity``-- exact-sparsity variant (paper benchmarks
+                                  sweep s ∈ {1/2, 1/4, 1/8, 1/16}).
+* ``ste_ternarize``            -- straight-through estimator for QAT: forward
+                                  quantizes, backward is identity (clipped).
+
+All functions are pure-jnp and jittable; per-channel means per output column
+(axis 0 of the (K, N) weight).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ternarize",
+    "ternarize_target_sparsity",
+    "ste_ternarize",
+    "effective_weight",
+]
+
+
+def ternarize(w: jnp.ndarray, threshold_factor: float = 0.7,
+              per_channel: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """TWN ternarization. Returns (T int8 in {-1,0,1}, alpha f32 scale).
+
+    Δ = threshold_factor · mean(|W|);  T = sign(W)·1[|W| > Δ];
+    α = mean(|W| over |W| > Δ)  (the L1-optimal scale for the mask).
+    """
+    absw = jnp.abs(w)
+    axes = (0,) if per_channel else None
+    delta = threshold_factor * jnp.mean(absw, axis=axes, keepdims=True)
+    mask = absw > delta
+    t = jnp.sign(w) * mask
+    denom = jnp.maximum(jnp.sum(mask, axis=axes, keepdims=True), 1)
+    alpha = jnp.sum(absw * mask, axis=axes, keepdims=True) / denom
+    return t.astype(jnp.int8), alpha.astype(jnp.float32)
+
+
+def ternarize_target_sparsity(w: jnp.ndarray, sparsity: float,
+                              per_channel: bool = True
+                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Ternarize keeping exactly a ``sparsity`` fraction of nonzeros
+    (paper convention: sparsity = nnz fraction). Threshold is the
+    (1 - sparsity) |W|-quantile per channel."""
+    absw = jnp.abs(w)
+    axes = 0 if per_channel else None
+    delta = jnp.quantile(absw.astype(jnp.float32), 1.0 - sparsity, axis=axes,
+                         keepdims=True)
+    mask = absw >= delta
+    t = jnp.sign(w) * mask
+    denom = jnp.maximum(jnp.sum(mask, axis=(0,) if per_channel else None,
+                                keepdims=True), 1)
+    alpha = jnp.sum(absw * mask, axis=(0,) if per_channel else None,
+                    keepdims=True) / denom
+    return t.astype(jnp.int8), alpha.astype(jnp.float32)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def ste_ternarize(w: jnp.ndarray, threshold_factor: float = 0.7) -> jnp.ndarray:
+    """QAT forward: effective ternary weight α·T. Backward: straight-through
+    (gradient clipped to |w| <= 1 range scale, standard STE practice)."""
+    t, alpha = ternarize(w, threshold_factor)
+    return (t.astype(w.dtype) * alpha.astype(w.dtype))
+
+
+def _ste_fwd(w, threshold_factor):
+    return ste_ternarize(w, threshold_factor), w
+
+
+def _ste_bwd(threshold_factor, w, g):
+    # Straight-through with soft clipping: pass gradients where |w| is not
+    # saturated far beyond the quantization range.
+    scale = jnp.mean(jnp.abs(w), axis=0, keepdims=True) + 1e-8
+    passthrough = (jnp.abs(w) <= 2.0 * scale).astype(g.dtype)
+    return (g * passthrough,)
+
+
+ste_ternarize.defvjp(_ste_fwd, _ste_bwd)
+
+
+def effective_weight(w: jnp.ndarray, quantization: str,
+                     threshold_factor: float = 0.7) -> jnp.ndarray:
+    """Forward weight under a quantization mode: 'none' | 'ternary'."""
+    if quantization == "ternary":
+        return ste_ternarize(w, threshold_factor)
+    return w

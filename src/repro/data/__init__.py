@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLM
+
+__all__ = ["SyntheticLM"]

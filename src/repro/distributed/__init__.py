@@ -1,0 +1,3 @@
+from repro.distributed import compression, fault_tolerance, sharding
+
+__all__ = ["sharding", "compression", "fault_tolerance"]

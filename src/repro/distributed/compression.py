@@ -1,0 +1,68 @@
+"""Ternary gradient compression (TernGrad-style) with error feedback.
+
+The paper's value system {-1, 0, +1} applied to the *communication* layer:
+data-parallel gradient sync sends per-tensor scale + ternarized gradient
+instead of full-precision gradients. Used on the cross-pod axis of the DP
+trainer (``launch/train.py --compress-grads``), where inter-pod links are the
+scarcest bandwidth.
+
+Wire-format analysis (recorded in EXPERIMENTS.md, mirroring the paper's own
+"value compression dropped" finding): a ring all-reduce must *sum* at every
+hop, and sums of ternary values are no longer ternary — so the collective is
+expressed as a bf16 psum of the ternary codes (2x byte reduction vs f32)
+rather than a 2-bit wire format (a 2-bit all-gather would move
+(n-1) * size/16 bytes: worse than a ring reduce-scatter beyond n = 32).
+Error feedback keeps the compression unbiased over time.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ternarize_gradient", "compressed_psum", "init_error_state"]
+
+
+def ternarize_gradient(g: jnp.ndarray, err: jnp.ndarray,
+                       threshold_factor: float = 0.7
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(g + err) -> (ternary codes int8-valued bf16, scale, new_err)."""
+    gf = g.astype(jnp.float32) + err
+    absg = jnp.abs(gf)
+    delta = threshold_factor * jnp.mean(absg)
+    mask = absg > delta
+    t = jnp.sign(gf) * mask
+    nnz = jnp.maximum(jnp.sum(mask), 1)
+    scale = jnp.sum(absg * mask) / nnz
+    new_err = gf - scale * t
+    return t.astype(jnp.bfloat16), scale, new_err
+
+
+def compressed_psum(grads, err_state, axis_name: str,
+                    threshold_factor: float = 0.7):
+    """Inside shard_map/pmap: ternarize+psum each leaf across ``axis_name``.
+
+    Returns (synced grads, new error state). Scales are averaged across
+    workers (cheap scalar psum); codes go over the wire at bf16 width.
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def sync(g, err):
+        t, scale, new_err = ternarize_gradient(g, err, threshold_factor)
+        t_sum = jax.lax.psum(t, axis_name)              # bf16 on the wire
+        s_avg = jax.lax.psum(scale, axis_name) / n
+        return (t_sum.astype(jnp.float32) * s_avg / n).astype(g.dtype), new_err
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err_state)
+    pairs = [sync(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([p[0] for p in pairs]),
+            treedef.unflatten([p[1] for p in pairs]))
+
+
+def init_error_state(params):
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32)
+        if jnp.issubdtype(p.dtype, jnp.floating) else jnp.zeros((), jnp.float32),
+        params)

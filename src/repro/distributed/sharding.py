@@ -1,0 +1,114 @@
+"""Logical-axis PartitionSpec resolution.
+
+Model code emits PartitionSpecs with *logical* names ("fsdp", "model",
+"expert", plus literal mesh names like "pod"/"data" in cache specs).
+``resolve_specs`` turns them into mesh-valid specs against the actual mesh
+and the actual array shapes, enforcing:
+
+* divisibility — a dim not divisible by the axis (product) is replicated
+  (e.g. kv=8 heads on a 16-way model axis, batch=1 on the data axis);
+* no axis reuse within one spec (expert-parallelism steals the "model"
+  axis from the d_ff dim for E % model == 0 archs — DESIGN §6);
+* fsdp off -> "fsdp" resolves to None (params replicated over data axes).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+FSDP = "fsdp"
+MODEL = "model"
+EXPERT = "expert"
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def resolve_spec(spec: P, shape: Sequence[int], mesh: Mesh,
+                 fsdp: bool) -> P:
+    names = set(mesh.axis_names)
+    used = set()
+    out = []
+    entries = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    for dim, ax in zip(shape, entries):
+        resolved: Any = None
+        candidates: Tuple = ()
+        if ax is None:
+            candidates = ()
+        elif ax == FSDP:
+            candidates = (batch_axes(mesh),) if fsdp else ()
+        elif ax == EXPERT:
+            candidates = (MODEL,)
+        elif isinstance(ax, (tuple, list)):
+            kept = tuple(a for a in ax if a in names and a not in used)
+            candidates = (kept,) if kept else ()
+        else:
+            candidates = (ax,) if ax in names else ()
+        for cand in candidates:
+            cand_t = (cand,) if isinstance(cand, str) else tuple(cand)
+            if not cand_t or any(c in used for c in cand_t):
+                continue
+            if dim % _axes_size(mesh, cand_t) == 0:
+                resolved = cand if isinstance(cand, str) else cand_t
+                used.update(cand_t)
+                break
+        out.append(resolved)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def resolve_specs(spec_tree, shape_tree, mesh: Mesh, fsdp: bool):
+    """Map a logical spec tree + matching shape tree -> NamedSharding tree."""
+    def resolve(spec, shaped):
+        shape = getattr(shaped, "shape", ())
+        return NamedSharding(mesh, resolve_spec(spec, shape, mesh, fsdp))
+    return jax.tree.map(resolve, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_sharding(batch_tree, mesh: Mesh):
+    """Shard dim 0 (global batch) over ("pod","data") where divisible."""
+    axes = batch_axes(mesh)
+
+    def spec(x):
+        shape = getattr(x, "shape", ())
+        if shape and shape[0] % _axes_size(mesh, axes) == 0:
+            return NamedSharding(mesh, P(axes, *([None] * (len(shape) - 1))))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(spec, batch_tree)
+
+
+def replicated(tree, mesh: Mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def opt_state_shardings(param_shardings, opt_state_shape, mesh: Mesh):
+    """Adam m/v mirror the param shardings; scalars replicated."""
+    rep = NamedSharding(mesh, P())
+
+    def like(sub_shapes):
+        flat_p, treedef = jax.tree.flatten(param_shardings)
+        flat_s = treedef.flatten_up_to(sub_shapes)
+        out = [p if getattr(s, "ndim", 0) > 0 else rep
+               for p, s in zip(flat_p, flat_s)]
+        return treedef.unflatten(out)
+
+    return {"m": like(opt_state_shape["m"]),
+            "v": like(opt_state_shape["v"]),
+            "step": rep}

@@ -1,0 +1,6 @@
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ops import pack_weights, ternary_gemm
+from repro.kernels.ternary_gemm import K_PER_WORD, ternary_gemm_pallas
+
+__all__ = ["ternary_gemm", "pack_weights", "ternary_gemm_pallas",
+           "K_PER_WORD", "flash_attention_pallas"]

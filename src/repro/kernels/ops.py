@@ -1,0 +1,128 @@
+"""jit'd public wrappers around the ternary GEMM kernel.
+
+``ternary_gemm`` is the user-facing op: it pads to tile multiples, picks
+interpret mode off the backend (CPU container -> interpret=True; real TPU ->
+compiled Mosaic), and defines a custom VJP so the op is usable under
+``jax.grad`` (dY/dX = g @ T^T; packed weights are non-differentiable --
+training uses the QAT/STE latent-weight path in ``core.quantize``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats
+from repro.kernels import ref
+from repro.kernels.ternary_gemm import K_PER_WORD, ternary_gemm_pallas
+
+__all__ = ["ternary_gemm", "pack_weights", "TernaryGemmConfig"]
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pack_weights(t: np.ndarray) -> np.ndarray:
+    """Host-side: (K, N) {-1,0,1} -> (ceil(K/16), N) uint32 kernel format."""
+    return formats.pack_2bit(np.asarray(t), word=WORDS)
+
+
+WORDS = 32
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9, 10))
+def ternary_gemm(
+    x: jnp.ndarray,
+    w_packed: jnp.ndarray,
+    scale: Optional[jnp.ndarray] = None,
+    bias: Optional[jnp.ndarray] = None,
+    k: Optional[int] = None,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    fuse_prelu: bool = False,
+    prelu_alpha: float = 0.25,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Y = X @ decode(w_packed) * scale + bias (+PReLU). Any (M, K, N)."""
+    m, kx = x.shape
+    k = kx if k is None else k
+    kw, n = w_packed.shape
+    assert kw * K_PER_WORD >= k
+    interpret = _auto_interpret() if interpret is None else interpret
+
+    bm = min(block_m, max(8, 1 << (m - 1).bit_length()))
+    xp = _pad_to(_pad_to(x, 0, bm), 1, block_k)
+    wp = _pad_to(_pad_to(w_packed, 0, block_k // K_PER_WORD), 1, block_n)
+    sp = None if scale is None else _pad_to(scale.reshape(-1), 0, block_n)
+    bp = None if bias is None else _pad_to(bias.reshape(-1), 0, block_n)
+
+    y = ternary_gemm_pallas(
+        xp, wp, sp, bp,
+        block_m=bm, block_n=block_n, block_k=block_k,
+        fuse_prelu=fuse_prelu, prelu_alpha=prelu_alpha, interpret=interpret)
+    return y[:m, :n]
+
+
+def _fwd(x, w_packed, scale, bias, k, bm, bn, bk, fuse_prelu, prelu_alpha,
+         interpret):
+    y = ternary_gemm(x, w_packed, scale, bias, k, bm, bn, bk, fuse_prelu,
+                     prelu_alpha, interpret)
+    return y, (x, w_packed, scale, y if fuse_prelu else None)
+
+
+def _bwd(k, bm, bn, bk, fuse_prelu, prelu_alpha, interpret, res, g):
+    x, w_packed, scale, y = res
+    kk = x.shape[1] if k is None else k
+    if fuse_prelu:
+        g = jnp.where(y >= 0, g, prelu_alpha * g)
+    gb = jnp.sum(g, axis=0)                       # bias grad
+    if scale is not None:
+        # y_pre_scale is not stored; scale grad via recompute-free identity:
+        # dL/dscale = sum_m g * (x @ T)  = sum_m g * (y_lin); approximate via
+        # decode path (exact, costs one decode+matmul).
+        t = formats.decode_2bit(w_packed, kk, dtype=x.dtype)
+        ylin = jnp.dot(x, t, preferred_element_type=jnp.float32)
+        gscale = jnp.sum(g.astype(jnp.float32) * ylin, axis=0).astype(
+            scale.dtype).reshape(scale.shape)
+        g = g * scale.reshape(1, -1).astype(g.dtype)
+        gx = jnp.dot(g, t.T, preferred_element_type=jnp.float32).astype(x.dtype)
+    else:
+        t = formats.decode_2bit(w_packed, kk, dtype=x.dtype)
+        gscale = None
+        gx = jnp.dot(g, t.T, preferred_element_type=jnp.float32).astype(x.dtype)
+    return (gx, jnp.zeros_like(w_packed), gscale,
+            None if res[2] is None and gb is None else gb)
+
+
+ternary_gemm.defvjp(_fwd, _bwd)
+
+
+class TernaryGemmConfig:
+    """Block-shape configuration record used by the benchmark sweeps
+    (the TPU analogue of the paper's unroll-factor grid search, Figs 2-4)."""
+
+    def __init__(self, block_m=128, block_n=128, block_k=512):
+        self.block_m, self.block_n, self.block_k = block_m, block_n, block_k
+
+    def vmem_bytes(self, dtype_bytes=2) -> int:
+        x = self.block_m * self.block_k * dtype_bytes
+        w = (self.block_k // K_PER_WORD) * self.block_n * 4
+        dec = self.block_k * self.block_n * dtype_bytes
+        acc = self.block_m * self.block_n * 4
+        out = self.block_m * self.block_n * dtype_bytes
+        return x + w + dec + acc + out

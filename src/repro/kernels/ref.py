@@ -1,0 +1,133 @@
+"""Pure-jnp oracles for ternary GEMM + faithful ports of the paper's
+algorithm variants (BaseTCSC / BlockedTCSC / InterleavedTCSC).
+
+Every function computes Y = X @ (alpha * T) + bias (optionally PReLU'd),
+with T the {-1,0,+1} ternary matrix, and they all agree to float tolerance.
+These serve as (a) correctness oracles for the Pallas kernel, and (b) the
+paper-faithful baselines for the benchmark suite (benchmarks/paper_figs.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats
+
+__all__ = [
+    "prelu",
+    "ternary_matmul_dense",
+    "tcsc_matmul",
+    "tcsc_matmul_blocked",
+    "tcsc_matmul_interleaved",
+    "packed2bit_matmul",
+    "bitplane_matmul",
+    "base3_matmul",
+]
+
+
+def prelu(y: jnp.ndarray, a: float | jnp.ndarray) -> jnp.ndarray:
+    return jnp.where(y >= 0, y, a * y)
+
+
+def _epilogue(y, alpha, bias, prelu_alpha):
+    if alpha is not None:
+        y = y * jnp.asarray(alpha, y.dtype).reshape(1, -1)
+    if bias is not None:
+        y = y + jnp.asarray(bias, y.dtype).reshape(1, -1)
+    if prelu_alpha is not None:
+        y = prelu(y, prelu_alpha)
+    return y
+
+
+def ternary_matmul_dense(x: jnp.ndarray, t: jnp.ndarray,
+                         alpha: Optional[jnp.ndarray] = None,
+                         bias: Optional[jnp.ndarray] = None,
+                         prelu_alpha: Optional[float] = None) -> jnp.ndarray:
+    """Oracle: decoded dense matmul. t: (K, N) in {-1,0,1} (any int/float dtype)."""
+    y = jnp.dot(x, t.astype(x.dtype), preferred_element_type=jnp.float32)
+    return _epilogue(y, alpha, bias, prelu_alpha).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paper algorithm ports (gather + segment-sum = the JAX idiom for the
+# column-wise add/sub loops of the paper's scalar kernels)
+# ---------------------------------------------------------------------------
+
+def tcsc_matmul(x: jnp.ndarray, w: formats.TCSC,
+                alpha: Optional[jnp.ndarray] = None,
+                bias: Optional[jnp.ndarray] = None,
+                prelu_alpha: Optional[float] = None) -> jnp.ndarray:
+    """BaseTCSC: two passes (all positives, then all negatives) per column."""
+    _, n = w.shape
+    seg_p = jnp.asarray(w.segment_ids_pos())
+    seg_n = jnp.asarray(w.segment_ids_neg())
+    # gather columns of X by row index -> (nnz, M); segment-sum by column id.
+    xp = x.T[jnp.asarray(w.row_index_pos)]          # (nnz_pos, M)
+    xn = x.T[jnp.asarray(w.row_index_neg)]          # (nnz_neg, M)
+    yp = jax.ops.segment_sum(xp, seg_p, num_segments=n)
+    yn = jax.ops.segment_sum(xn, seg_n, num_segments=n)
+    y = (yp - yn).T
+    return _epilogue(y, alpha, bias, prelu_alpha).astype(x.dtype)
+
+
+def tcsc_matmul_blocked(x: jnp.ndarray, w: formats.BlockedTCSC,
+                        alpha: Optional[jnp.ndarray] = None,
+                        bias: Optional[jnp.ndarray] = None,
+                        prelu_alpha: Optional[float] = None) -> jnp.ndarray:
+    """BlockedTCSC: per K-block gathers confined to a [0, B) window."""
+    _, n = w.shape
+    y = jnp.zeros((n, x.shape[0]), dtype=jnp.float32)
+    for b, blk in enumerate(w.blocks):
+        base = b * w.block_size
+        xs = x.T[base:base + w.block_size]          # the B-window of X
+        xp = xs[jnp.asarray(blk.row_index_pos)]
+        xn = xs[jnp.asarray(blk.row_index_neg)]
+        y = y + jax.ops.segment_sum(xp, jnp.asarray(blk.segment_ids_pos()),
+                                    num_segments=n)
+        y = y - jax.ops.segment_sum(xn, jnp.asarray(blk.segment_ids_neg()),
+                                    num_segments=n)
+    return _epilogue(y.T, alpha, bias, prelu_alpha).astype(x.dtype)
+
+
+def tcsc_matmul_interleaved(x: jnp.ndarray, w: formats.InterleavedTCSC,
+                            alpha: Optional[jnp.ndarray] = None,
+                            bias: Optional[jnp.ndarray] = None,
+                            prelu_alpha: Optional[float] = None) -> jnp.ndarray:
+    """InterleavedTCSC: single pass over one index array, signs structural."""
+    _, n = w.shape
+    signs = jnp.asarray(w.signs().astype(np.float32))
+    seg = jnp.asarray(w.segment_ids())
+    xs = x.T[jnp.asarray(w.all_indices)] * signs[:, None]
+    y = jax.ops.segment_sum(xs, seg, num_segments=n).T
+    return _epilogue(y, alpha, bias, prelu_alpha).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Packed-format XLA paths (used inside distributed models for dry-runs)
+# ---------------------------------------------------------------------------
+
+def packed2bit_matmul(x: jnp.ndarray, packed: jnp.ndarray, k: int,
+                      alpha: Optional[jnp.ndarray] = None,
+                      bias: Optional[jnp.ndarray] = None,
+                      prelu_alpha: Optional[float] = None) -> jnp.ndarray:
+    t = formats.decode_2bit(packed, k, dtype=x.dtype)
+    return ternary_matmul_dense(x, t, alpha, bias, prelu_alpha)
+
+
+def bitplane_matmul(x: jnp.ndarray, plus: jnp.ndarray, minus: jnp.ndarray,
+                    k: int, alpha: Optional[jnp.ndarray] = None,
+                    bias: Optional[jnp.ndarray] = None,
+                    prelu_alpha: Optional[float] = None) -> jnp.ndarray:
+    t = formats.decode_bitplanes(plus, minus, k, dtype=x.dtype)
+    return ternary_matmul_dense(x, t, alpha, bias, prelu_alpha)
+
+
+def base3_matmul(x: jnp.ndarray, packed: jnp.ndarray, k: int,
+                 alpha: Optional[jnp.ndarray] = None,
+                 bias: Optional[jnp.ndarray] = None,
+                 prelu_alpha: Optional[float] = None) -> jnp.ndarray:
+    t = formats.decode_base3(packed, k, dtype=x.dtype)
+    return ternary_matmul_dense(x, t, alpha, bias, prelu_alpha)

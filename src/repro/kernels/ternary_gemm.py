@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: packed 2-bit sparse-ternary GEMM with fused epilogue.
+
+TPU adaptation of the paper's kernel (see DESIGN.md §2). The mapping:
+
+* paper's BlockedTCSC B-window  -> BlockSpec K-tiling: each grid step loads a
+  (block_k/16, block_n) packed-word tile + a (block_m, block_k) X tile into
+  VMEM, so every access the kernel makes is VMEM-resident (the paper's
+  "confine irregular accesses to a cache window", except on TPU we remove the
+  irregularity altogether and the window is the VMEM tile).
+* paper's structural sign encoding -> 2-bit codes (0,+1,-1) decoded with pure
+  VPU bit ops: v = (c & 1) - ((c >> 1) & 1). One pass, no ± branches -- the
+  interleaving insight expressed as data-parallel arithmetic.
+* paper's multi-accumulator unrolling -> f32 VMEM scratch accumulator carried
+  across the K grid dimension, MXU `jnp.dot(..., preferred_element_type=f32)`.
+* paper's symmetric SIMD padding -> zero-padding K/N to tile multiples
+  (code 0 decodes to 0.0 and contributes exactly nothing).
+* paper's fused PReLU (vectorized kernels) -> fused scale+bias+PReLU epilogue
+  on the last K step.
+
+Weight bandwidth is 2 bits/element = 16x less than f32 (8x less than bf16):
+on a memory-bound GEMM (the paper's own diagnosis of this workload) that is
+the roofline lever on TPU.
+
+Mosaic note: the decode uses a (bk/16, 16, bn) -> (bk, bn) sublane reshape;
+on real hardware a relayout may be inserted. Validated in interpret mode
+(this container is CPU-only); `ops.ternary_gemm` picks interpret
+automatically off the backend.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+WORD_BITS = 32
+K_PER_WORD = WORD_BITS // 2  # 16 ternary weights per uint32 word
+
+__all__ = ["ternary_gemm_pallas", "K_PER_WORD"]
+
+
+def _decode_tile(words: jnp.ndarray, out_dtype) -> jnp.ndarray:
+    """(bk/16, bn) uint32 -> (bk, bn) ±1/0 tile, pure VPU ops."""
+    q, bn = words.shape
+    shifts = 2 * jax.lax.broadcasted_iota(jnp.uint32, (1, K_PER_WORD, 1), 1)
+    c = (words[:, None, :] >> shifts) & 3
+    vals = (c & 1).astype(jnp.int8) - ((c >> 1) & 1).astype(jnp.int8)
+    return vals.reshape(q * K_PER_WORD, bn).astype(out_dtype)
+
+
+def _kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
+            nk: int, fuse_prelu: bool, prelu_alpha: float):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    t = _decode_tile(w_ref[...], x_ref.dtype)
+    acc_ref[...] += jnp.dot(x_ref[...], t,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        y = acc_ref[...]
+        if scale_ref is not None:
+            y = y * scale_ref[...].astype(jnp.float32)
+        if bias_ref is not None:
+            y = y + bias_ref[...].astype(jnp.float32)
+        if fuse_prelu:
+            y = jnp.where(y >= 0, y, prelu_alpha * y)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "fuse_prelu",
+                     "prelu_alpha", "interpret"),
+)
+def ternary_gemm_pallas(
+    x: jnp.ndarray,                    # (M, K)  f32/bf16, K % block_k == 0
+    w_packed: jnp.ndarray,             # (K / 16, N) uint32 2-bit codes
+    scale: Optional[jnp.ndarray] = None,   # (N,) per-channel alpha
+    bias: Optional[jnp.ndarray] = None,    # (N,)
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    fuse_prelu: bool = False,
+    prelu_alpha: float = 0.25,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Y = X @ decode(w_packed) * scale + bias (+ PReLU). Shapes must be
+    pre-padded to block multiples -- `ops.ternary_gemm` handles padding."""
+    m, k = x.shape
+    kw, n = w_packed.shape
+    assert kw * K_PER_WORD == k, (kw, k)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, \
+        (m, n, k, block_m, block_n, block_k)
+    nk = k // block_k
+    bkw = block_k // K_PER_WORD
+
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bkw, block_n), lambda i, j, kk: (kk, j)),
+    ]
+    operands = [x, w_packed]
+    if scale is not None:
+        in_specs.append(pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)))
+        operands.append(scale.reshape(1, n))
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)))
+        operands.append(bias.reshape(1, n))
+
+    def kernel(*refs):
+        x_ref, w_ref = refs[0], refs[1]
+        idx = 2
+        s_ref = b_ref = None
+        if scale is not None:
+            s_ref = refs[idx]; idx += 1
+        if bias is not None:
+            b_ref = refs[idx]; idx += 1
+        o_ref, acc_ref = refs[idx], refs[idx + 1]
+        _kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref,
+                nk=nk, fuse_prelu=fuse_prelu, prelu_alpha=prelu_alpha)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, n // block_n, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*operands)

@@ -1,0 +1,278 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if os.environ.get("REPRO_DRYRUN_DEVICES"):  # test hook: smaller fake fleet
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell on placeholder devices; extract memory / cost / collective-bytes
+for the roofline analysis (EXPERIMENTS.md §Dry-run, §Roofline).
+
+The two lines above MUST stay first — jax locks the device count on first
+init. Never set that flag globally (smoke tests and benches see 1 device).
+
+Usage:
+  python -m repro.launch.dryrun --arch mistral-nemo-12b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all [--multi-pod] \
+      [--quant ternary_packed] [--out experiments/dryrun]
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shlib
+from repro.launch import hlo_cost
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import LM, set_mesh
+
+# --- hardware constants (TPU v5e-class, per the assignment brief) ---
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (ring model, per chip)
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+
+_COLL_RE = re.compile(
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-chip link bytes by collective type, from the SPMD-partitioned HLO
+    (shapes printed there are already per-device). Ring model:
+    all-reduce = 2x operand (RS+AG), all-gather = result, others = operand."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None or "-done(" in line:
+            continue
+        op = m.group(1)
+        eq = line.index(" = ") if " = " in line else 0
+        paren = m.end()
+        results = _SHAPE_RE.findall(line[eq:paren])
+        operands = _SHAPE_RE.findall(line[paren:])
+        res_b = sum(_shape_bytes(d, s) for d, s in results)
+        opd_b = sum(_shape_bytes(d, s) for d, s in operands)
+        if op == "all-reduce":
+            byt = 2 * opd_b
+        elif op == "all-gather":
+            byt = res_b
+        else:
+            byt = opd_b
+        out[op] = out.get(op, 0.0) + byt
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def _mem_dict(mem) -> Dict[str, Any]:
+    keys = ["argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes"]
+    d = {}
+    for k in keys:
+        try:
+            d[k] = int(getattr(mem, k))
+        except Exception:  # noqa: BLE001
+            pass
+    return d
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Analytic 'useful' FLOPs per step: 6*N_active*D train, 2*N_active*D
+    inference (D = tokens processed in the step)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token/seq
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             quant: str = "", overrides: Dict[str, Any] | None = None,
+             mesh=None, reduced: bool = False) -> Dict[str, Any]:
+    shape = SHAPES[shape_name]
+    kw = dict(overrides or {})
+    if quant:
+        kw["quantization"] = quant
+    cfg = get_config(arch, reduced=reduced, **kw)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "quant": quant or cfg.quantization,
+        "overrides": {k: str(v) for k, v in (overrides or {}).items()},
+    }
+    ok, reason = cfg.supports_shape(shape_name)
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    else:
+        rec["mesh"] = "x".join(str(s) for s in mesh.devices.shape)
+    chips = mesh.devices.size
+    set_mesh(mesh)
+    model = LM(cfg)
+    t0 = time.time()
+
+    p_shapes, p_shardings = steps_lib.model_shardings(model, cfg, mesh)
+    batch = steps_lib.input_specs(cfg, shape)
+    batch_sh = shlib.batch_sharding(batch, mesh)
+
+    if shape.kind == "train":
+        train_step, opt_init = steps_lib.make_train_step(model, cfg)
+        opt_shapes = jax.eval_shape(opt_init, p_shapes)
+        opt_sh = shlib.opt_state_shardings(p_shardings, opt_shapes, mesh)
+        jitted = jax.jit(train_step,
+                         in_shardings=(p_shardings, opt_sh, batch_sh),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(p_shapes, opt_shapes, batch)
+    elif shape.kind == "prefill":
+        prefill_step = steps_lib.make_prefill_step(model, cfg, shape.seq_len)
+        jitted = jax.jit(prefill_step, in_shardings=(p_shardings, batch_sh))
+        lowered = jitted.lower(p_shapes, batch)
+    else:  # decode
+        decode_step = steps_lib.make_decode_step(model, cfg)
+        cache_shapes, cache_pspec = steps_lib.cache_specs_shapes(
+            model, cfg, shape)
+        cache_sh = shlib.resolve_specs(cache_pspec, cache_shapes, mesh,
+                                       fsdp=True)
+        jitted = jax.jit(decode_step,
+                         in_shardings=(p_shardings, cache_sh,
+                                       batch_sh["tokens"]),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(p_shapes, cache_shapes, batch["tokens"])
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    mem = _mem_dict(compiled.memory_analysis())
+    hlo_text = compiled.as_text()
+    # Trip-count-aware walk (XLA's cost_analysis counts scan bodies once —
+    # see hlo_cost.py); shapes in the SPMD module are per-device.
+    walked = hlo_cost.analyze(hlo_text)
+    coll = dict(walked.collective_bytes)
+    coll["total"] = walked.total_collective()
+
+    hlo_flops = walked.flops
+    hlo_bytes = walked.bytes
+    mf = model_flops(cfg, shape)
+    t_comp = hlo_flops / PEAK_FLOPS
+    t_mem = hlo_bytes / HBM_BW
+    t_coll = coll.get("total", 0.0) / ICI_BW
+    dominant = max((("compute", t_comp), ("memory", t_mem),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    rec.update(
+        status="ok",
+        chips=chips,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        hlo_flops_per_chip=hlo_flops,
+        hlo_bytes_per_chip=hlo_bytes,
+        collective_bytes_per_chip=coll,
+        xla_cost_analysis={"flops": float(cost.get("flops", 0.0)),
+                           "bytes": float(cost.get("bytes accessed", 0.0))},
+        memory=mem,
+        t_compute_s=t_comp,
+        t_memory_s=t_mem,
+        t_collective_s=t_coll,
+        dominant=dominant,
+        model_flops_total=mf,
+        model_flops_per_chip=mf / chips,
+        useful_flops_ratio=(mf / chips) / hlo_flops if hlo_flops else None,
+        params_total=cfg.param_count(),
+        params_active=cfg.active_param_count(),
+    )
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--quant", default="")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (repeatable)")
+    ap.add_argument("--mesh", default="",
+                    help="test hook: 'DxM' or 'PxDxM' mesh instead of production")
+    args = ap.parse_args(argv)
+
+    mesh = None
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        names = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
+        mesh = jax.make_mesh(dims, names)
+
+    archs = [a for a in list_archs() if a != "ternary-paper"] \
+        if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    overrides: Dict[str, Any] = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        f = ModelConfig.__dataclass_fields__[k]
+        typ = f.type if isinstance(f.type, type) else eval(f.type)  # noqa: S307
+        overrides[k] = (v.lower() in ("1", "true")) if typ is bool else typ(v)
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            tag = f"{arch}_{shape}_{'2x16x16' if args.multi_pod else '16x16'}"
+            if args.quant:
+                tag += f"_{args.quant}"
+            if overrides:
+                tag += "_" + "_".join(f"{k}-{v}" for k, v in overrides.items())
+            path = os.path.join(args.out, tag + ".json")
+            try:
+                rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                               quant=args.quant, overrides=overrides,
+                               mesh=mesh)
+            except Exception as e:  # noqa: BLE001
+                rec = {"arch": arch, "shape": shape, "status": "error",
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+                failures += 1
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1, default=str)
+            print(f"{tag}: {rec['status']} "
+                  + (f"dom={rec.get('dominant')} "
+                     f"t=({rec.get('t_compute_s', 0):.2e},"
+                     f"{rec.get('t_memory_s', 0):.2e},"
+                     f"{rec.get('t_collective_s', 0):.2e})s "
+                     f"compile={rec.get('compile_s')}s"
+                     if rec["status"] == "ok" else rec.get("reason", rec.get("error", ""))),
+                  flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

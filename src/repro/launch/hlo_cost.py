@@ -1,0 +1,526 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE — a
+``lax.scan`` over 61 layers contributes 1/61 of its true FLOPs (verified in
+EXPERIMENTS.md §Dry-run methodology). Since the whole framework scans over
+layers / microbatches / attention blocks, we walk the optimized HLO text
+ourselves:
+
+* computations are parsed into op lists + per-computation symbol tables
+  (operands are name references in compiled HLO; shapes come from the
+  defining line);
+* a call graph is built from ``fusion(calls=)``, ``call(to_apply=)``,
+  ``while(body=, condition=)`` and ``conditional(branch_computations=)``;
+* each ``while`` gets a trip count parsed from its condition computation
+  (the ``s32[] constant(N)`` fed into the LT compare that lax.scan emits);
+* costs roll up through the graph with trip multipliers.
+
+Cost model (mirrors XLA's HloCostAnalysis, with the loop fix):
+* flops: dot = 2 * prod(result) * prod(lhs contracting dims); elementwise /
+  reduce = element counts (transcendentals weighted). Counted inside fused
+  computations via the call graph, so fusion does not hide compute.
+* bytes: operands + results at fusion *boundaries* only — fused internal
+  traffic stays on-chip, matching the TPU HBM<->VMEM fusion model.
+* collective bytes: ring model — all-reduce 2x operand, all-gather result,
+  reduce-scatter / all-to-all / collective-permute operand; shapes in the
+  SPMD-partitioned module are already per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+                "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1,
+                "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1,
+                "u4": 1, "token": 0, "opaque": 0}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=()]*?\)?)\s([a-z][\w\-]*)\(")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_S32_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+ELEMENTWISE_1FLOP = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "not",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "floor", "ceil", "round-nearest-afz", "sign", "clamp", "remainder",
+}
+ELEMENTWISE_XFLOP = {
+    "exponential": 4, "log": 4, "rsqrt": 2, "sqrt": 2, "tanh": 6,
+    "logistic": 6, "power": 6, "cosine": 6, "sine": 6, "expm1": 4,
+    "log-plus-one": 4, "atan2": 8, "erf": 6, "cbrt": 6,
+}
+CONTROL_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "copy-start", "copy-done",
+    "domain", "opt-barrier",
+}
+COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute"}
+
+
+def _elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _text_shapes(text: str) -> List[Tuple[str, str]]:
+    return _SHAPE_RE.findall(text)
+
+
+def _shapes_bytes(shapes: List[Tuple[str, str]]) -> float:
+    return float(sum(_elems(dims) * _DTYPE_BYTES.get(dt, 4)
+                     for dt, dims in shapes))
+
+
+def _shapes_elems(shapes: List[Tuple[str, str]]) -> float:
+    return float(sum(_elems(dims) for _, dims in shapes))
+
+
+def _elems_of(shapes) -> float:
+    return float(sum(_elems(dims) for _, dims in shapes))
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # per-opcode [flops, bytes] — the §Perf hypothesis source
+    by_op: Dict[str, List[float]] = dataclasses.field(default_factory=dict)
+
+    def bump(self, opcode: str, flops: float, byt: float):
+        e = self.by_op.setdefault(opcode, [0.0, 0.0])
+        e[0] += flops
+        e[1] += byt
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) \
+                + v * mult
+        for k, (fl, by) in other.by_op.items():
+            e = self.by_op.setdefault(k, [0.0, 0.0])
+            e[0] += fl * mult
+            e[1] += by * mult
+
+    def total_collective(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def top_bytes(self, n: int = 12) -> List[Tuple[str, float, float]]:
+        rows = [(k, v[1], v[0]) for k, v in self.by_op.items()]
+        rows.sort(key=lambda r: -r[1])
+        return rows[:n]
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    opcode: str
+    result_shapes: List[Tuple[str, str]]
+    operand_names: List[str]
+    line: str
+
+
+class HloCostWalker:
+    def __init__(self, hlo_text: str, kernel_dequant: bool = False):
+        """kernel_dequant=True models the repo's Pallas fused dequant-GEMM
+        on the runtime path (kernels/ternary_gemm.py, validated in interpret
+        mode): 2-bit weight blocks are decoded VMEM-tile-wise inside the
+        kernel, so dots charge the *packed* operand bytes and the decode
+        fusion's HBM round-trip disappears. Off by default — the plain XLA
+        path materializes decoded weights."""
+        self._entry = ""
+        self.kernel_dequant = kernel_dequant
+        self.comps: Dict[str, List[_Op]] = {}
+        self.symtab: Dict[str, Dict[str, List[Tuple[str, str]]]] = {}
+        self._parse(hlo_text)
+        self._memo: Dict[Tuple[str, bool], Costs] = {}
+        self._dequant_ext: Dict[Tuple[str, str], float] = {}
+
+    def _dequant_bytes(self, comp: str, op: _Op) -> Optional[float]:
+        """If op is a 2-bit-dequant fusion, return its packed external
+        bytes; else None. Signature: fused computation uses shift/and bit
+        ops and expands >=4x from its integer inputs."""
+        key = (comp, op.name)
+        if key in self._dequant_ext:
+            return self._dequant_ext[key]
+        val: Optional[float] = None
+        m = _CALLS_RE.search(op.line)
+        if m and m.group(1) in self.comps:
+            fops = self.comps[m.group(1)]
+            has_bits = any(f.opcode in ("shift-right-logical", "and")
+                           for f in fops)
+            if has_bits:
+                ext = sum(_shapes_bytes(self.symtab[comp].get(n, ()))
+                          for n in op.operand_names)
+                res = _shapes_bytes(op.result_shapes)
+                if ext and res >= 4 * ext:
+                    val = float(ext)
+        self._dequant_ext[key] = val
+        return val
+
+    # ------------------------------------------------------------------
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            if cur is None:
+                m = _COMP_HDR_RE.match(line)
+                if m and line.rstrip().endswith("{"):
+                    cur = m.group(1)
+                    self.comps[cur] = []
+                    self.symtab[cur] = {}
+                    if line.startswith("ENTRY"):
+                        self._entry = cur
+            elif line.startswith("}"):
+                cur = None
+            else:
+                line = re.sub(r"/\*.*?\*/", "", line)  # strip HLO comments
+                m = _OP_RE.match(line)
+                if m is None:
+                    continue
+                name, result_text, opcode = m.groups()
+                # operand section: up to attributes (first "), " or ", x=")
+                rest = line[m.end():]
+                cut = len(rest)
+                for marker in ("metadata=", "calls=", "to_apply=",
+                               "condition=", "dimensions=", "sharding=",
+                               "dynamic_slice_sizes=", "slice=",
+                               "lhs_contracting_dims=", "replica_groups=",
+                               "branch_computations=", "channel_id=",
+                               "source_target_pairs=", "custom_call_target="):
+                    i = rest.find(marker)
+                    if i != -1:
+                        cut = min(cut, i)
+                operand_names = _OPERAND_RE.findall(rest[:cut])
+                op = _Op(name, opcode, _text_shapes(result_text),
+                         operand_names, line)
+                self.comps[cur].append(op)
+                self.symtab[cur][name] = op.result_shapes
+
+    def entry_name(self) -> str:
+        return self._entry
+
+    # ------------------------------------------------------------------
+    def _operand_shapes(self, comp: str, op: _Op) -> List[Tuple[str, str]]:
+        tab = self.symtab[comp]
+        out: List[Tuple[str, str]] = []
+        for n in op.operand_names:
+            out.extend(tab.get(n, ()))
+        return out
+
+    def _op_index(self, comp: str) -> Dict[str, str]:
+        idx = getattr(self, "_opcode_idx", None)
+        if idx is None:
+            idx = self._opcode_idx = {}
+        if comp not in idx:
+            idx[comp] = {o.name: o.opcode for o in self.comps.get(comp, ())}
+        return idx[comp]
+
+    def _fusion_operand_bytes(self, comp: str, op: _Op,
+                              fused_name: Optional[str]) -> float:
+        """Operand bytes at a fusion boundary. Two TPU-fusion rules:
+        * an operand consumed *only* by gather / dynamic-slice ops inside the
+          fused computation is read sparsely — count the consumers' result
+          bytes (embedding tables, KV-cache block reads);
+        * an operand produced directly by a `dot` fuses as the dot's output
+          epilogue on TPU (elementwise consumers of matmul results never
+          round-trip HBM) — count zero for it. XLA:CPU materializes these,
+          which would charge score-tensor traffic the TPU never pays."""
+        opcode_of = self._op_index(comp)
+        opd_shapes = [() if opcode_of.get(n) == "dot"
+                      else self.symtab[comp].get(n, ())
+                      for n in op.operand_names]
+        if fused_name is None or fused_name not in self.comps:
+            return float(sum(_shapes_bytes(s) for s in opd_shapes))
+        fops = self.comps[fused_name]
+        # parameter name by index
+        param_name = {}
+        for f in fops:
+            if f.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", f.line)
+                if m:
+                    param_name[int(m.group(1))] = f.name
+        total = 0.0
+        for i, shapes in enumerate(opd_shapes):
+            pname = param_name.get(i)
+            if pname is None:
+                total += _shapes_bytes(shapes)
+                continue
+            consumers = [f for f in fops if pname in f.operand_names]
+            sparse = {"gather", "dynamic-slice"}
+            if consumers and all(f.opcode in sparse for f in consumers):
+                total += sum(_shapes_bytes(f.result_shapes) for f in consumers)
+            elif consumers and all(
+                    f.opcode == "dynamic-update-slice"
+                    and f.operand_names and f.operand_names[0] == pname
+                    for f in consumers):
+                # in-place destination: only the written region moves
+                total += sum(
+                    _shapes_bytes(self.symtab[fused_name].get(
+                        f.operand_names[1], ())) if len(f.operand_names) > 1
+                    else 0.0
+                    for f in consumers)
+            else:
+                total += _shapes_bytes(shapes)
+        return total
+
+    _MIRROR_OPS = {"parameter", "constant", "convert", "bitcast", "copy",
+                   "select", "broadcast", "compare", "iota", "reshape",
+                   "dynamic-slice", "dynamic-update-slice", "tuple",
+                   "get-tuple-element"}
+
+    def _is_inplace_update_fusion(self, fused_name: Optional[str]) -> bool:
+        """True for fusions that are pure cache-update machinery: converts /
+        selects / in-place DUS with no real compute. On TPU these lower to a
+        predicated in-place write (bf16 dots are MXU-native, so the f32
+        mirror XLA:CPU maintains for such buffers does not exist); counting
+        the full-buffer convert traffic would charge a CPU-backend artifact
+        to the TPU roofline. Verified: compiling uniform-f32 (mirror-free)
+        halves measured bytes on decode cells."""
+        if fused_name is None or fused_name not in self.comps:
+            return False
+        has_dus = False
+        for f in self.comps[fused_name]:
+            if f.opcode == "dynamic-update-slice":
+                has_dus = True
+            elif f.opcode not in self._MIRROR_OPS:
+                return False
+        return has_dus
+
+    # dynamic-slice included: "slice a layer from the carried stack +
+    # convert" shims — the real read is charged at the consuming dot
+    _SHIM_OPS = {"parameter", "constant", "convert", "bitcast", "copy",
+                 "tuple", "get-tuple-element", "dynamic-slice"}
+
+    def _is_dtype_shim_fusion(self, fused_name: Optional[str]) -> bool:
+        """Pure dtype-conversion fusions (convert/bitcast/copy only). The
+        XLA:CPU backend upcasts bf16 dot inputs to f32 through these shims;
+        on TPU the MXU consumes bf16 natively and the shim does not exist —
+        and the *real* operand read is already counted at the consuming dot.
+        Charging the shim would double-count a backend artifact."""
+        if fused_name is None or fused_name not in self.comps:
+            return False
+        has_convert = False
+        for f in self.comps[fused_name]:
+            if f.opcode == "convert":
+                has_convert = True
+            elif f.opcode not in self._SHIM_OPS:
+                return False
+        return has_convert
+
+    def _fusion_result_bytes(self, op: _Op, fused_name: Optional[str],
+                             res_b: float) -> float:
+        """A fusion rooted in dynamic-update-slice writes only the update
+        region — XLA aliases the destination buffer in place (the lax.scan
+        ys pattern). Count the update bytes, not the full result."""
+        if fused_name is None or fused_name not in self.comps:
+            return res_b
+        fops = self.comps[fused_name]
+        root = None
+        for f in fops:
+            if "ROOT" in f.line:
+                root = f
+                break
+        if root is None:
+            return res_b
+        # unwrap converts/bitcasts at the root
+        tab = self.symtab[fused_name]
+        seen = 0
+        while root.opcode in ("convert", "bitcast", "copy") \
+                and root.operand_names and seen < 4:
+            nxt = [f for f in fops if f.name == root.operand_names[0]]
+            if not nxt:
+                break
+            root = nxt[0]
+            seen += 1
+        if root.opcode == "dynamic-update-slice" and len(root.operand_names) > 1:
+            upd = _shapes_bytes(tab.get(root.operand_names[1], ()))
+            if upd:
+                return upd
+        return res_b
+
+    def _trip_count(self, cond_name: str) -> float:
+        best = 1.0
+        stack, seen = [cond_name], set()
+        while stack:
+            name = stack.pop()
+            if name in seen or name not in self.comps:
+                continue
+            seen.add(name)
+            for op in self.comps[name]:
+                for c in _CONST_S32_RE.findall(op.line):
+                    best = max(best, float(c))
+                stack.extend(_CALLS_RE.findall(op.line))
+                stack.extend(_TO_APPLY_RE.findall(op.line))
+        return best
+
+    # ------------------------------------------------------------------
+    def computation_cost(self, name: str, in_fusion: bool = False) -> Costs:
+        key = (name, in_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        self._memo[key] = Costs()  # cycle guard
+        total = Costs()
+        for op in self.comps.get(name, ()):
+            oc = op.opcode
+            if oc in CONTROL_OPS:
+                continue
+            res_b = _shapes_bytes(op.result_shapes)
+            res_e = _shapes_elems(op.result_shapes)
+            opd_shapes = self._operand_shapes(name, op)
+            opd_b = _shapes_bytes(opd_shapes)
+
+            if oc == "fusion":
+                m = _CALLS_RE.search(op.line)
+                fname = m.group(1) if m else None
+                if m:
+                    total.add(self.computation_cost(fname, True))
+                if not in_fusion:
+                    if self.kernel_dequant:
+                        dq = self._dequant_bytes(name, op)
+                        if dq is not None:
+                            total.bytes += dq
+                            total.bump("dequant(packed)", 0.0, dq)
+                            continue
+                    res_eff = self._fusion_result_bytes(op, fname, res_b)
+                    if self._is_dtype_shim_fusion(fname):
+                        fb = 0.0
+                        total.bump("dtype-shim(free)", 0.0, fb)
+                    elif self._is_inplace_update_fusion(fname):
+                        # predicated in-place write: update-sized traffic
+                        fb = 2.0 * res_eff
+                        total.bump("inplace-update", 0.0, fb)
+                    else:
+                        fb = res_eff + self._fusion_operand_bytes(
+                            name, op, fname)
+                        total.bump("fusion-io", 0.0, fb)
+                    total.bytes += fb
+                continue
+            if oc == "call":
+                m = _TO_APPLY_RE.search(op.line)
+                if m:
+                    total.add(self.computation_cost(m.group(1), in_fusion))
+                continue
+            if oc == "while":
+                m = _WHILE_RE.search(op.line)
+                if m:
+                    trip = self._trip_count(m.group(1))
+                    total.add(self.computation_cost(m.group(2), in_fusion),
+                              trip)
+                    total.add(self.computation_cost(m.group(1), True), trip)
+                continue
+            if oc == "conditional":
+                m = _BRANCHES_RE.search(op.line)
+                if m:
+                    for n in m.group(1).split(","):
+                        n = n.strip().lstrip("%")
+                        if n:
+                            total.add(self.computation_cost(n, in_fusion))
+                continue
+
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if base in COLLECTIVES:
+                if base == "all-reduce":
+                    byt = 2.0 * opd_b
+                elif base == "all-gather":
+                    byt = res_b
+                else:
+                    byt = opd_b
+                total.collective_bytes[base] = \
+                    total.collective_bytes.get(base, 0.0) + byt
+                if not in_fusion:
+                    total.bytes += res_b + opd_b
+                    total.bump(base, 0.0, res_b + opd_b)
+                continue
+            if oc.endswith("-done"):
+                continue
+
+            # Sliced/indexed accesses touch only the moved elements (XLA
+            # aliases dynamic-update-slice in place on TPU; gathers read the
+            # gathered rows, not the whole table):
+            if oc in ("dynamic-slice", "gather"):
+                if not in_fusion:
+                    total.bytes += 2.0 * res_b
+                    total.bump(oc, 0.0, 2.0 * res_b)
+                continue
+            if oc == "dynamic-update-slice":
+                upd = _shapes_bytes(self.symtab[name].get(
+                    op.operand_names[1], ())) if len(op.operand_names) > 1 \
+                    else res_b
+                if not in_fusion:
+                    total.bytes += 2.0 * upd
+                    total.bump(oc, 0.0, 2.0 * upd)
+                continue
+            if oc in ("scatter", "select-and-scatter"):
+                upd = _shapes_bytes(self.symtab[name].get(
+                    op.operand_names[-1], ())) if op.operand_names else res_b
+                m = _TO_APPLY_RE.search(op.line)
+                if m:
+                    total.add(self.computation_cost(m.group(1), True))
+                total.flops += _elems_of(self.symtab[name].get(
+                    op.operand_names[-1], ())) if op.operand_names else 0.0
+                if not in_fusion:
+                    total.bytes += 3.0 * upd
+                continue
+
+            flops = 0.0
+            if oc == "dot":
+                cd = _LHS_CDIMS_RE.search(op.line)
+                contr = 1
+                if opd_shapes and cd:
+                    lhs_dims = [int(d) for d in opd_shapes[0][1].split(",") if d]
+                    for ci in cd.group(1).split(","):
+                        if ci:
+                            contr *= lhs_dims[int(ci)]
+                flops = 2.0 * res_e * contr
+                if self.kernel_dequant:
+                    # operands produced by dequant fusions are read packed
+                    # inside the fused kernel
+                    ops_in_comp = {o.name: o for o in self.comps.get(name, ())}
+                    for on in op.operand_names:
+                        src = ops_in_comp.get(on)
+                        if src is not None and src.opcode == "fusion":
+                            dq = self._dequant_bytes(name, src)
+                            if dq is not None:
+                                opd_b -= _shapes_bytes(src.result_shapes)
+            elif oc == "convolution":
+                flops = 2.0 * res_e
+            elif oc in ("reduce", "reduce-window", "scatter",
+                        "select-and-scatter", "sort", "map"):
+                m = _TO_APPLY_RE.search(op.line)
+                if m:
+                    total.add(self.computation_cost(m.group(1), True))
+                flops = _shapes_elems(opd_shapes)
+            elif oc in ELEMENTWISE_1FLOP:
+                flops = res_e
+            elif oc in ELEMENTWISE_XFLOP:
+                flops = res_e * ELEMENTWISE_XFLOP[oc]
+            total.flops += flops
+            if not in_fusion:
+                total.bytes += res_b + opd_b
+                total.bump(oc, flops, res_b + opd_b)
+            else:
+                total.bump(oc, flops, 0.0)
+        self._memo[key] = total
+        return total
+
+    def entry_cost(self) -> Costs:
+        return self.computation_cost(self._entry)
+
+
+def analyze(hlo_text: str, kernel_dequant: bool = False) -> Costs:
+    return HloCostWalker(hlo_text, kernel_dequant=kernel_dequant).entry_cost()

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init; smoke tests and benches see the 1 real device.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model). Multi-pod: 2 pods =
+    512 chips (pod, data, model) — the pod axis extends data parallelism.
+
+    With the dry-run's 512 placeholder devices, the single-pod mesh takes
+    the first 256 (one pod's worth)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devs = jax.devices()
+    if len(devs) != n:
+        devs = devs[:n]
+    return jax.make_mesh(shape, axes, devices=devs)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU runs)."""
+    return jax.make_mesh((data, model), ("data", "model"))

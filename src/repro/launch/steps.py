@@ -1,0 +1,147 @@
+"""Step builders: train / prefill / decode steps + ShapeDtypeStruct input
+specs for every (architecture x assigned shape) cell.
+
+``input_specs(cfg, shape)`` is the single source of truth for what enters
+each lowered program (the shannon/kernels pattern: weak-type-correct,
+shardable stand-ins, no device allocation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.models import LM
+from repro.optim import adamw, clip_by_global_norm, warmup_cosine
+
+F32, BF16, I32 = jnp.float32, jnp.bfloat16, jnp.int32
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Input specs per cell
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the batch of one step of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    if shape.kind == "decode":
+        batch = {"tokens": sds((b, 1), I32)}
+        return batch
+    n_front = cfg.frontend_seq if (cfg.frontend or cfg.is_encdec) else 0
+    if cfg.is_encdec:
+        s_dec = s - n_front
+        batch = {"tokens": sds((b, s_dec), I32),
+                 "enc_embeds": sds((b, n_front, d), BF16)}
+        if shape.kind == "train":
+            batch["targets"] = sds((b, s_dec), I32)
+        return batch
+    s_text = s - n_front if cfg.family == "vlm" else s
+    batch = {"tokens": sds((b, s_text), I32)}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = sds((b, n_front, d), BF16)
+    if shape.kind == "train":
+        batch["targets"] = sds((b, s_text), I32)
+    return batch
+
+
+def cache_specs_shapes(model: LM, cfg: ModelConfig, shape: ShapeConfig
+                       ) -> Tuple[Any, Any]:
+    """(ShapeDtypeStruct cache tree, PartitionSpec cache tree) for decode."""
+    b, s = shape.global_batch, shape.seq_len
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(b, s))
+    cache_pspec = model.cache_specs()
+    if cfg.is_encdec:
+        cache_shapes = dict(cache_shapes)
+        cache_shapes["enc_out"] = sds((b, cfg.frontend_seq, cfg.d_model), BF16)
+        cache_pspec = dict(cache_pspec)
+        cache_pspec["enc_out"] = P(("pod", "data"), None, None)
+    return cache_shapes, cache_pspec
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(model: LM, cfg: ModelConfig,
+                    lr_fn: Optional[Callable] = None,
+                    compute_dtype=BF16) -> Tuple[Callable, Callable]:
+    """Returns (train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics), opt_init(params) -> opt_state). Gradient accumulation over
+    cfg.grad_accum microbatches via lax.scan (activation memory /= accum;
+    XLA's scheduler overlaps each microbatch's reduce-scatters with the next
+    microbatch's backward — the compute/comm overlap lever)."""
+    lr_fn = lr_fn or warmup_cosine(3e-4, 100, 10_000)
+    opt_init, opt_update = adamw(state_dtype=cfg.opt_state_dtype)
+    accum = max(cfg.grad_accum, 1)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(i, batch):
+                return jax.tree.map(
+                    lambda x: x.reshape(accum, x.shape[0] // accum,
+                                        *x.shape[1:])[i], batch)
+
+            def body(carry, i):
+                gsum, msum = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, micro(i, batch))
+                gsum = jax.tree.map(lambda a, b: a + b, gsum, g)
+                msum = jax.tree.map(lambda a, b: a + b, msum, metrics)
+                return (gsum, msum), None
+
+            gzero = jax.tree.map(jnp.zeros_like, params)
+            mzero = {"loss": jnp.zeros((), F32), "ce": jnp.zeros((), F32),
+                     "aux": jnp.zeros((), F32)}
+            (grads, metrics), _ = jax.lax.scan(
+                body, (gzero, mzero), jnp.arange(accum))
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            metrics = jax.tree.map(lambda m: m / accum, metrics)
+
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        lr = lr_fn(opt_state["step"] + 1)  # schedules start at step 1
+        params, opt_state = opt_update(grads, opt_state, params, lr)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return params, opt_state, metrics
+
+    return train_step, opt_init
+
+
+def make_prefill_step(model: LM, cfg: ModelConfig, max_len: int) -> Callable:
+    def prefill_step(params, batch):
+        cache, logits = model.prefill(params, batch, max_len)
+        return cache, logits
+    return prefill_step
+
+
+def make_decode_step(model: LM, cfg: ModelConfig) -> Callable:
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding assembly for a (cfg, mesh) pair
+# ---------------------------------------------------------------------------
+
+def model_shardings(model: LM, cfg: ModelConfig, mesh):
+    """(param ShapeDtypeStructs, param NamedShardings) — no allocation."""
+    from repro.distributed import sharding as shlib
+    p_shapes, p_specs = model.init_with_specs_abstract()
+    shardings = shlib.resolve_specs(p_specs, p_shapes, mesh, cfg.fsdp)
+    return p_shapes, shardings

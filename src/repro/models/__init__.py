@@ -1,0 +1,3 @@
+from repro.models.transformer import LM, set_mesh
+
+__all__ = ["LM", "set_mesh"]

@@ -1,0 +1,206 @@
+"""Core layers (functional, no framework): linear (dense / ternary-QAT /
+ternary-packed), norms, embeddings, RoPE, gated MLP.
+
+Every ``init_*`` returns ``(params, specs)`` where ``specs`` mirrors the
+params pytree with ``jax.sharding.PartitionSpec`` leaves — keeping shardings
+structurally in sync with parameters (the distributed layer consumes them).
+
+Axis-name conventions used in specs (resolved to mesh axes in
+``repro.distributed.sharding``): "fsdp" (data axes when cfg.fsdp), "model".
+We store specs directly as PartitionSpec with logical names; resolution
+replaces names with mesh axes or None.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import formats, quantize
+from repro.kernels import ref as kref
+
+# Logical axis names (resolved in distributed/sharding.py)
+FSDP = "fsdp"      # -> data axes if cfg.fsdp else None
+MODEL = "model"    # -> tensor-parallel axis
+EMPTY = None
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear — the layer the paper's technique lives in
+# ---------------------------------------------------------------------------
+
+def linear_init(key, cfg: ModelConfig, d_in: int, d_out: int,
+                in_axis=FSDP, out_axis=MODEL, use_bias: Optional[bool] = None,
+                scale: Optional[float] = None):
+    """A (d_in, d_out) projection. Under ``quantization='ternary_packed'``
+    the parameter is the packed 2-bit word matrix + per-channel scale
+    (serving format); otherwise a latent dense matrix (QAT applies STE)."""
+    use_bias = cfg.use_bias if use_bias is None else use_bias
+    std = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    ternary = _is_ternary(cfg, d_in, d_out)
+    params, specs = {}, {}
+    if cfg.quantization == "ternary_packed" and ternary:
+        kw = (d_in + 15) // 16
+        params["w_packed"] = jnp.zeros((kw, d_out), jnp.uint32)
+        params["w_scale"] = jnp.ones((d_out,), jnp.float32)
+        specs["w_packed"] = P(in_axis, out_axis)
+        specs["w_scale"] = P(out_axis)
+    else:
+        params["w"] = jax.random.normal(key, (d_in, d_out), _pdtype(cfg)) * std
+        specs["w"] = P(in_axis, out_axis)
+    if use_bias:
+        params["b"] = jnp.zeros((d_out,), _pdtype(cfg))
+        specs["b"] = P(out_axis)
+    return params, specs
+
+
+def _is_ternary(cfg: ModelConfig, d_in: int, d_out: int) -> bool:
+    return (cfg.quantization != "none"
+            and min(d_in, d_out) >= cfg.ternary_min_dim)
+
+
+def linear_apply(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """x: (..., d_in) -> (..., d_out)."""
+    if "w_packed" in params:
+        k = x.shape[-1]
+        lead = x.shape[:-1]
+        y = kref.packed2bit_matmul(x.reshape(-1, k), params["w_packed"], k,
+                                   alpha=params["w_scale"])
+        y = y.reshape(*lead, -1)
+    else:
+        w = params["w"]
+        if cfg.quantization == "ternary" and _is_ternary(cfg, *w.shape):
+            w = quantize.ste_ternarize(w, cfg.ternary_threshold)
+        y = jnp.dot(x, w.astype(x.dtype))
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def pack_linear(params: dict, cfg: ModelConfig) -> dict:
+    """Convert a latent-weight linear into the packed serving format
+    (host-side; used by examples/quantize_and_pack.py and serve path).
+    Handles scan-stacked weights: a (L, K, N) stack packs to
+    (L, ceil(K/16), N) + per-layer scales — scan slicing hands the kernel
+    2-D blocks at apply time."""
+    import numpy as np
+    if "w" not in params:
+        return params
+    w = params["w"]
+    if not _is_ternary(cfg, *w.shape[-2:]):
+        return params
+    if w.ndim == 2:
+        t, alpha = quantize.ternarize(w, cfg.ternary_threshold)
+        out = {"w_packed": jnp.asarray(formats.pack_2bit(np.asarray(t))),
+               "w_scale": jnp.asarray(alpha.reshape(-1))}
+    else:
+        packs, scales = [], []
+        for i in range(w.shape[0]):
+            t, alpha = quantize.ternarize(w[i], cfg.ternary_threshold)
+            packs.append(formats.pack_2bit(np.asarray(t)))
+            scales.append(np.asarray(alpha).reshape(-1))
+        out = {"w_packed": jnp.asarray(np.stack(packs)),
+               "w_scale": jnp.asarray(np.stack(scales))}
+    if "b" in params:
+        out["b"] = params["b"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_init(key, cfg: ModelConfig, d: int):
+    del key
+    params = {"scale": jnp.ones((d,), _pdtype(cfg))}
+    specs = {"scale": P(EMPTY)}
+    if cfg.norm_type == "layernorm":
+        params["bias"] = jnp.zeros((d,), _pdtype(cfg))
+        specs["bias"] = P(EMPTY)
+    return params, specs
+
+
+def norm_apply(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        xf = xf - jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + cfg.norm_eps)
+    y = y * params["scale"].astype(jnp.float32)
+    if "bias" in params:
+        y = y + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, cfg: ModelConfig):
+    v, d = cfg.padded_vocab(), cfg.d_model
+    params = {"table": jax.random.normal(key, (v, d), _pdtype(cfg)) * 0.02}
+    specs = {"table": P(MODEL, FSDP)}
+    return params, specs
+
+
+def embed_apply(params, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    return params["table"].astype(_dtype(cfg))[tokens]
+
+
+def unembed_init(key, cfg: ModelConfig):
+    # The vocab head is a plain linear layer -> the paper's ternary format
+    # applies to it like any other projection.
+    return linear_init(key, cfg, cfg.d_model, cfg.padded_vocab(),
+                       FSDP, MODEL, use_bias=False)
+
+
+def unembed_apply(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    return linear_apply(params, x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, hd), positions: (B, S) -> rotated x."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    w_in, s_in = linear_init(k1, cfg, cfg.d_model, d_ff, FSDP, MODEL)
+    w_gate, s_gate = linear_init(k2, cfg, cfg.d_model, d_ff, FSDP, MODEL)
+    w_out, s_out = linear_init(k3, cfg, d_ff, cfg.d_model, MODEL, FSDP)
+    return ({"in": w_in, "gate": w_gate, "out": w_out},
+            {"in": s_in, "gate": s_gate, "out": s_out})
+
+
+def mlp_apply(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    h = jax.nn.silu(linear_apply(params["gate"], x, cfg)) \
+        * linear_apply(params["in"], x, cfg)
+    return linear_apply(params["out"], h, cfg)

@@ -1,0 +1,171 @@
+"""Mixture-of-Experts with token-choice top-k routing and capacity-bounded
+expert-side dispatch (GShard-style dropping).
+
+Dispatch is gather/scatter based — the expert matmuls are real
+``(E, C, d) x (E, d, f)`` batched GEMMs whose FLOP count equals
+``top_k * tokens * capacity_factor`` active-expert FLOPs, so the dry-run
+``cost_analysis()`` reflects genuine MoE compute (a one-hot einsum dispatch
+would quadratically over-count and poison the roofline).
+
+Expert FFNs are ``layers.linear`` stacks, so ternary quantization (the
+paper's technique) applies to every expert weight — with 384-expert models
+(kimi-k2) the 16x weight compression is at its most valuable, since expert
+weights dominate bytes moved.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import quantize
+from repro.models.layers import FSDP, MODEL, _pdtype
+
+EXPERT = "expert"   # logical axis: resolved to "model" when E % model == 0
+
+
+def moe_init(key, cfg: ModelConfig):
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    std = 1.0 / math.sqrt(d)
+    params = {
+        "router": jax.random.normal(ks[0], (d, e), _pdtype(cfg)) * std,
+    }
+    specs = {
+        "router": P(None, None),
+    }
+    if cfg.quantization == "ternary_packed":
+        # serving format: 2-bit packed expert weights + per-channel scales —
+        # 16x less weight bandwidth where it matters most (expert weights
+        # dominate MoE bytes; the paper's technique at its highest leverage)
+        kw_d, kw_f = (d + 15) // 16, (f + 15) // 16
+        params.update({
+            "w_in_packed": jnp.zeros((e, kw_d, f), jnp.uint32),
+            "w_in_scale": jnp.ones((e, f), jnp.float32),
+            "w_gate_packed": jnp.zeros((e, kw_d, f), jnp.uint32),
+            "w_gate_scale": jnp.ones((e, f), jnp.float32),
+            "w_out_packed": jnp.zeros((e, kw_f, d), jnp.uint32),
+            "w_out_scale": jnp.ones((e, d), jnp.float32),
+        })
+        specs.update({
+            "w_in_packed": P(EXPERT, FSDP, MODEL),
+            "w_in_scale": P(EXPERT, MODEL),
+            "w_gate_packed": P(EXPERT, FSDP, MODEL),
+            "w_gate_scale": P(EXPERT, MODEL),
+            "w_out_packed": P(EXPERT, MODEL, FSDP),
+            "w_out_scale": P(EXPERT, FSDP),
+        })
+    else:
+        params.update({
+            "w_in": jax.random.normal(ks[1], (e, d, f), _pdtype(cfg)) * std,
+            "w_gate": jax.random.normal(ks[2], (e, d, f), _pdtype(cfg)) * std,
+            "w_out": jax.random.normal(ks[3], (e, f, d), _pdtype(cfg))
+            / math.sqrt(f),
+        })
+        specs.update({
+            "w_in": P(EXPERT, FSDP, MODEL),
+            "w_gate": P(EXPERT, FSDP, MODEL),
+            "w_out": P(EXPERT, MODEL, FSDP),
+        })
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * f
+        params["shared_in"] = jax.random.normal(ks[4], (d, fs), _pdtype(cfg)) * std
+        params["shared_gate"] = jax.random.normal(ks[4], (d, fs), _pdtype(cfg)) * std
+        params["shared_out"] = jax.random.normal(ks[4], (fs, d), _pdtype(cfg)) / math.sqrt(fs)
+        specs["shared_in"] = P(FSDP, MODEL)
+        specs["shared_gate"] = P(FSDP, MODEL)
+        specs["shared_out"] = P(MODEL, FSDP)
+    return params, specs
+
+
+def _expert_weight(w, cfg: ModelConfig):
+    if cfg.quantization == "ternary":
+        # per-expert per-channel ternarization (vmapped STE)
+        return jax.vmap(lambda wi: quantize.ste_ternarize(
+            wi, cfg.ternary_threshold))(w)
+    return w
+
+
+def moe_apply(params, x: jnp.ndarray, cfg: ModelConfig
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss). Capacity C = ceil(T*k/E * cf).
+
+    With ``cfg.moe_route_blocks = nb`` (aligned to the DP shard count),
+    routing/capacity/gather/scatter are per token-block: every data-movement
+    op stays shard-local and the only cross-shard communication is the
+    dispatched (nb, E, C/nb, d) tensor meeting the model-sharded experts —
+    an all-to-all of the *active* tokens instead of global-token all-reduces
+    (§Perf D1: measured 488x f32[81936,7168] all-reduces on kimi train)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    t = b * s
+    nb = max(cfg.moe_route_blocks, 1)
+    if t % nb != 0:
+        nb = 1
+    tb = t // nb
+    xb = x.reshape(nb, tb, d)
+
+    logits = jnp.einsum("ntd,de->nte", xb, params["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)  # (nb,Tb,E)
+    top_p, top_ids = jax.lax.top_k(probs, k)                     # (nb,Tb,k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)      # renormalize
+
+    # token-side sparse gate matrix (nb, Tb, E), built shard-locally
+    gates = jnp.zeros((nb, tb, e), jnp.float32)
+    gates = jax.vmap(jax.vmap(lambda g, i, p: g.at[i].set(p)))(
+        gates, top_ids, top_p)
+
+    # expert-side capacity truncation per block: top-C/nb tokens by gate
+    cap = int(math.ceil(tb * k / e * cfg.capacity_factor))
+    cap = min(max(cap, 1), tb)
+    g_sel, tok_sel = jax.lax.top_k(
+        jnp.swapaxes(gates, 1, 2), cap)                          # (nb,E,C)
+
+    xe = jnp.take_along_axis(
+        xb[:, None], tok_sel[..., None], axis=2)                 # (nb,E,C,d)
+    # (§Perf D2 tried pinning the dispatch sharding here; measured: it
+    # fights GSPMD propagation — t_coll 165 -> 436 s. Refuted; see
+    # EXPERIMENTS.md §Perf cell D.)
+    if "w_in_packed" in params:
+        from repro.core import formats
+
+        def dec(packed, scale, kdim):
+            w = jax.vmap(lambda p: formats.decode_2bit(p, kdim, x.dtype))(
+                packed)
+            return w * scale[:, None, :].astype(x.dtype)
+
+        w_in = dec(params["w_in_packed"], params["w_in_scale"], d)
+        w_gate = dec(params["w_gate_packed"], params["w_gate_scale"], d)
+        w_out = dec(params["w_out_packed"], params["w_out_scale"],
+                    cfg.d_ff_expert)
+    else:
+        w_in = _expert_weight(params["w_in"], cfg).astype(x.dtype)
+        w_gate = _expert_weight(params["w_gate"], cfg).astype(x.dtype)
+        w_out = _expert_weight(params["w_out"], cfg).astype(x.dtype)
+    h = jax.nn.silu(jnp.einsum("necd,edf->necf", xe, w_gate)) \
+        * jnp.einsum("necd,edf->necf", xe, w_in)
+    ye = jnp.einsum("necf,efd->necd", h, w_out)                  # (nb,E,C,d)
+    ye = ye * g_sel[..., None].astype(ye.dtype)
+
+    # per-block scatter-add back to token order (shard-local when nb == DP)
+    y = jnp.zeros((nb, tb, d), ye.dtype)
+    y = y.at[jnp.arange(nb)[:, None], tok_sel.reshape(nb, -1)].add(
+        ye.reshape(nb, -1, d), mode="drop")
+
+    if cfg.n_shared_experts:
+        xt = xb.reshape(t, d)
+        hs = jax.nn.silu(jnp.dot(xt, params["shared_gate"].astype(x.dtype))) \
+            * jnp.dot(xt, params["shared_in"].astype(x.dtype))
+        y = y + jnp.dot(hs, params["shared_out"].astype(x.dtype)
+                        ).reshape(nb, tb, d)
+
+    # Switch-style load-balancing auxiliary loss
+    me = jnp.mean(probs, axis=(0, 1))                            # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(top_ids[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+    return y.reshape(b, s, d).astype(x.dtype), aux

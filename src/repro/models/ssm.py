@@ -1,0 +1,238 @@
+"""Mamba2 (SSD — state-space duality) mixer: chunked training scan +
+O(1)-state decode step. Used by the `ssm` family (mamba2-130m) and the
+`hybrid` family (jamba; see DESIGN.md — we use SSD for jamba's Mamba layers).
+
+The in/out projections are `layers.linear` layers (ternary-quantizable — the
+paper's technique applies); the SSD state updates are activation-activation
+einsums with no weights to ternarize (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import FSDP, MODEL, _pdtype, linear_apply, linear_init
+
+NEG_INF = -1e30
+
+
+def ssm_init(key, cfg: ModelConfig):
+    d, di = cfg.d_model, cfg.d_inner
+    g, s, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * g * s
+    ks = jax.random.split(key, 4)
+    # in_proj emits [z, x, B, C, dt]
+    d_proj = 2 * di + 2 * g * s + h
+    w_in, s_in = linear_init(ks[0], cfg, d, d_proj, FSDP, MODEL)
+    w_out, s_out = linear_init(ks[1], cfg, di, d, MODEL, FSDP)
+    params = {
+        "in_proj": w_in,
+        "out_proj": w_out,
+        "conv_w": jax.random.normal(ks[2], (cfg.ssm_conv, conv_dim),
+                                    _pdtype(cfg)) / math.sqrt(cfg.ssm_conv),
+        "conv_b": jnp.zeros((conv_dim,), _pdtype(cfg)),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=_pdtype(cfg))),
+        "dt_bias": jnp.zeros((h,), _pdtype(cfg)),
+        "d_skip": jnp.ones((h,), _pdtype(cfg)),
+        "norm_scale": jnp.ones((di,), _pdtype(cfg)),
+    }
+    specs = {
+        "in_proj": s_in,
+        "out_proj": s_out,
+        "conv_w": P(None, MODEL),
+        "conv_b": P(MODEL),
+        "a_log": P(None),
+        "dt_bias": P(None),
+        "d_skip": P(None),
+        "norm_scale": P(MODEL),
+    }
+    return params, specs
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    di, g, s, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * g * s]
+    dt = proj[..., -h:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv over (B, L, C) via shifted adds (width small)."""
+    width = w.shape[0]
+    out = xbc * w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[width - 1 - i]
+    return jax.nn.silu(out + b)
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a: (..., q) -> (..., q, q); out[t, s] = sum_{s < r <= t} a[r]."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, d, NEG_INF)
+
+
+def ssd_chunked(x_dt: jnp.ndarray, a_dt: jnp.ndarray, bm: jnp.ndarray,
+                cm: jnp.ndarray, chunk: int,
+                init_state: Optional[jnp.ndarray] = None,
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD chunked algorithm (Mamba2 paper, minimal form).
+
+    x_dt: (B, L, H, P) inputs pre-multiplied by dt
+    a_dt: (B, L, H)   log-decay per step (A * dt, negative)
+    bm, cm: (B, L, H, S) input/output projections (groups pre-broadcast)
+    Returns (y (B, L, H, P), final_state (B, H, P, S)).
+    """
+    b, l, h, p = x_dt.shape
+    s = bm.shape[-1]
+    q = min(chunk, l)
+    assert l % q == 0, (l, q)
+    nc = l // q
+
+    def ch(t):  # (B, L, ...) -> (B, nc, q, ...)
+        return t.reshape(b, nc, q, *t.shape[2:])
+
+    xc, bc, cc = ch(x_dt), ch(bm), ch(cm)
+    ac = ch(a_dt).transpose(0, 3, 1, 2)                     # (B, H, nc, q)
+    a_cum = jnp.cumsum(ac, axis=-1)
+
+    # 1) intra-chunk (the "quadratic attention-like" term)
+    l_mat = jnp.exp(_segsum(ac))                            # (B,H,nc,q,q)
+    y_diag = jnp.einsum("bcqhs,bckhs,bhcqk,bckhp->bcqhp",
+                        cc, bc, l_mat.astype(cc.dtype), xc,
+                        preferred_element_type=jnp.float32)
+
+    # 2) per-chunk output states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)         # (B,H,nc,q)
+    states = jnp.einsum("bcqhs,bhcq,bcqhp->bchps",
+                        bc, decay_states.astype(bc.dtype), xc,
+                        preferred_element_type=jnp.float32)  # (B,nc,H,P,S)
+
+    # 3) inter-chunk recurrence over chunk boundaries
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, s), jnp.float32)
+    a_chunk = a_cum[..., -1]                                # (B,H,nc)
+    decay_chunk = jnp.exp(_segsum(jnp.pad(a_chunk, ((0, 0), (0, 0), (1, 0)))))
+    all_states = jnp.concatenate(
+        [init_state[:, None].astype(jnp.float32),
+         states.astype(jnp.float32)], axis=1)               # (B,nc+1,H,P,S)
+    states_in = jnp.einsum("bhzc,bchps->bzhps", decay_chunk, all_states)
+    final_state = states_in[:, -1]
+    states_in = states_in[:, :-1]                           # entering each chunk
+
+    # 4) inter-chunk contribution to outputs
+    state_decay = jnp.exp(a_cum)                            # (B,H,nc,q)
+    y_off = jnp.einsum("bcqhs,bchps,bhcq->bcqhp",
+                       cc, states_in.astype(cc.dtype),
+                       state_decay.astype(cc.dtype),
+                       preferred_element_type=jnp.float32)
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y.astype(x_dt.dtype), final_state
+
+
+def _gated_norm(y, z, scale, eps):
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(y.dtype)
+
+
+def ssm_apply(params, x: jnp.ndarray, cfg: ModelConfig, *,
+              cache: Optional[dict] = None,
+              cache_pos: Optional[jnp.ndarray] = None,
+              ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Full-sequence (train/prefill) or single-step (decode) Mamba2 mixer.
+
+    cache = {"state": (B,H,P,S) f32, "conv": (B, conv-1, conv_dim)}.
+    """
+    di, g, s, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    b = x.shape[0]
+    proj = linear_apply(params["in_proj"], x, cfg)
+    z, xbc, dt = _split_proj(proj, cfg)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))        # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+
+    if cache_pos is None:
+        # ---- full sequence ----
+        xbc = _causal_conv(xbc, params["conv_w"].astype(x.dtype),
+                           params["conv_b"].astype(x.dtype))
+        xi = xbc[..., :di].reshape(b, -1, h, p)
+        bm = xbc[..., di:di + g * s].reshape(b, -1, g, 1, s)
+        cm = xbc[..., di + g * s:].reshape(b, -1, g, 1, s)
+        bm = jnp.broadcast_to(bm, (b, bm.shape[1], g, h // g, s)
+                              ).reshape(b, -1, h, s)
+        cm = jnp.broadcast_to(cm, (b, cm.shape[1], g, h // g, s)
+                              ).reshape(b, -1, h, s)
+        x_dt = xi * dt[..., None].astype(xi.dtype)
+        a_dt = a[None, None, :] * dt                          # (B,L,H)
+        init_state = cache["state"] if cache is not None else None
+        y, final_state = ssd_chunked(x_dt, a_dt, bm, cm, cfg.ssm_chunk,
+                                     init_state)
+        y = y + xi * params["d_skip"].astype(xi.dtype)[None, None, :, None]
+        y = y.reshape(b, -1, di)
+        new_cache = None
+        if cache is not None:
+            conv_tail = xbc_raw_tail(x, proj, cfg)
+            new_cache = {"state": final_state,
+                         "conv": conv_tail}
+    else:
+        # ---- single-token decode ----
+        conv_cache = cache["conv"]                            # (B, w-1, conv_dim)
+        xbc_new = xbc[:, 0]                                   # (B, conv_dim)
+        window = jnp.concatenate([conv_cache, xbc_new[:, None]], axis=1)
+        w = params["conv_w"].astype(x.dtype)                  # (w, conv_dim)
+        conv_out = jnp.sum(window * w[None], axis=1) \
+            + params["conv_b"].astype(x.dtype)
+        xbc1 = jax.nn.silu(conv_out)                          # (B, conv_dim)
+        xi = xbc1[..., :di].reshape(b, h, p)
+        bm = xbc1[..., di:di + g * s].reshape(b, g, 1, s)
+        bm = jnp.broadcast_to(bm, (b, g, h // g, s)).reshape(b, h, s)
+        cm = xbc1[..., di + g * s:].reshape(b, g, 1, s)
+        cm = jnp.broadcast_to(cm, (b, g, h // g, s)).reshape(b, h, s)
+        dt1 = dt[:, 0]                                        # (B, H)
+        # match the chunked path's numerics: decay factors and B/C/x*dt
+        # round through the compute dtype, state accumulates in f32
+        decay = jnp.exp(dt1 * a[None]).astype(x.dtype).astype(jnp.float32)
+        state = cache["state"]                                # (B,H,P,S) f32
+        xdt = (xi * dt1[..., None].astype(x.dtype)).astype(x.dtype)
+        state = state * decay[..., None, None] \
+            + jnp.einsum("bhp,bhs->bhps", xdt, bm,
+                         preferred_element_type=jnp.float32)
+        y = jnp.einsum("bhps,bhs->bhp", state.astype(x.dtype), cm,
+                       preferred_element_type=jnp.float32)
+        y = y.astype(x.dtype) + xi * params["d_skip"].astype(x.dtype)[None, :, None]
+        y = y.reshape(b, 1, di)
+        z = z[:, :1]
+        new_cache = {"state": state, "conv": window[:, 1:]}
+
+    y = _gated_norm(y, z.reshape(y.shape), params["norm_scale"], cfg.norm_eps)
+    return linear_apply(params["out_proj"], y, cfg), new_cache
+
+
+def xbc_raw_tail(x, proj, cfg: ModelConfig):
+    """Last (conv-1) pre-conv xbc inputs — the decode conv cache."""
+    di, g, s = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    xbc = proj[..., di:di + di + 2 * g * s]
+    return xbc[:, -(cfg.ssm_conv - 1):]
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }

@@ -1,0 +1,430 @@
+"""Model assembly: decoder-only / encoder-decoder / hybrid / VLM / audio LMs
+from a ``ModelConfig``, with layers stacked under ``jax.lax.scan`` (HLO size
+and compile time are O(1) in depth — required for 61-80 layer dry-runs).
+
+Heterogeneous stacks (jamba's 1:7 attn:mamba interleave with MoE every 2nd
+layer) scan over *period groups*: the layer pattern repeats with period p
+(jamba: 8), params are stacked over L/p groups, and the scan body unrolls the
+p distinct blocks.
+
+Public API (all functional):
+    m = LM(cfg)
+    params, specs = m.init_with_specs(key)
+    loss, metrics = m.loss(params, batch)
+    cache = m.init_cache(batch_size, max_len)
+    cache, logits = m.prefill(params, batch, max_len)
+    logits, cache = m.decode_step(params, cache, tokens)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, layers, moe, ssm
+from repro.models.layers import FSDP, MODEL
+
+
+def _stack_tree(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _stack_specs(spec_tree):
+    return jax.tree.map(
+        lambda s: P(None, *s) if isinstance(s, P) else s, spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        kinds = [(cfg.layer_kind(i), cfg.layer_ffn(i))
+                 for i in range(cfg.num_layers)]
+        # smallest period p with L % p == 0 and kinds periodic
+        p = 1
+        while p <= cfg.num_layers:
+            if cfg.num_layers % p == 0 and all(
+                    kinds[i] == kinds[i % p] for i in range(cfg.num_layers)):
+                break
+            p += 1
+        self.period = p
+        self.n_groups = cfg.num_layers // p
+        self.block_kinds = kinds[:p]          # [(mixer, ffn)] * period
+
+    # ------------------------------------------------------------------
+    # Init
+    # ------------------------------------------------------------------
+    def _block_init(self, key, kind: str, ffn: str, cross: bool):
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+        params: Dict[str, Any] = {}
+        specs: Dict[str, Any] = {}
+        params["norm1"], specs["norm1"] = layers.norm_init(ks[0], cfg, cfg.d_model)
+        if kind == "attn":
+            params["mixer"], specs["mixer"] = attention.attn_init(ks[1], cfg)
+        else:
+            params["mixer"], specs["mixer"] = ssm.ssm_init(ks[1], cfg)
+        if cross:
+            params["norm_cross"], specs["norm_cross"] = layers.norm_init(
+                ks[2], cfg, cfg.d_model)
+            params["cross"], specs["cross"] = attention.attn_init(ks[3], cfg)
+        if ffn != "none":
+            params["norm2"], specs["norm2"] = layers.norm_init(ks[4], cfg, cfg.d_model)
+            if ffn == "moe":
+                params["ffn"], specs["ffn"] = moe.moe_init(ks[5], cfg)
+            else:
+                params["ffn"], specs["ffn"] = layers.mlp_init(ks[5], cfg, cfg.d_ff)
+        return params, specs
+
+    def init_with_specs(self, key):
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        params, specs = {}, {}
+        params["embed"], specs["embed"] = layers.embed_init(keys[0], cfg)
+        cross = cfg.is_encdec
+
+        # decoder blocks, stacked over groups per period-offset
+        for j, (kind, ffn) in enumerate(self.block_kinds):
+            ps, ss = [], None
+            for g in range(self.n_groups):
+                k = jax.random.fold_in(keys[1], g * self.period + j)
+                p_, s_ = self._block_init(k, kind, ffn, cross)
+                ps.append(p_)
+                ss = s_
+            params[f"block{j}"] = _stack_tree(ps)
+            specs[f"block{j}"] = _stack_specs(ss)
+
+        if cfg.is_encdec:
+            enc_ps, enc_ss = [], None
+            for g in range(cfg.enc_layers):
+                k = jax.random.fold_in(keys[2], g)
+                p_, s_ = self._block_init(k, "attn", "mlp", cross=False)
+                enc_ps.append(p_)
+                enc_ss = s_
+            params["enc_block"] = _stack_tree(enc_ps)
+            specs["enc_block"] = _stack_specs(enc_ss)
+            params["enc_norm"], specs["enc_norm"] = layers.norm_init(
+                keys[3], cfg, cfg.d_model)
+
+        params["final_norm"], specs["final_norm"] = layers.norm_init(
+            keys[4], cfg, cfg.d_model)
+        if not cfg.tie_embeddings:
+            params["unembed"], specs["unembed"] = layers.unembed_init(keys[5], cfg)
+        return params, specs
+
+    def init(self, key):
+        return self.init_with_specs(key)[0]
+
+    def init_with_specs_abstract(self):
+        """(param ShapeDtypeStructs, PartitionSpec tree) — no allocation.
+        Specs are static python objects built during tracing; capture them
+        through a side channel since eval_shape only maps array outputs."""
+        captured = {}
+
+        def f(key):
+            params, specs = self.init_with_specs(key)
+            captured["specs"] = specs
+            return params
+
+        shapes = jax.eval_shape(f, jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return shapes, captured["specs"]
+
+    # ------------------------------------------------------------------
+    # One block
+    # ------------------------------------------------------------------
+    def _apply_block(self, bparams, x, kind: str, ffn: str, *,
+                     positions, causal=True, cache=None, cache_pos=None,
+                     enc_out=None):
+        cfg = self.cfg
+        h = layers.norm_apply(bparams["norm1"], x, cfg)
+        if kind == "attn":
+            h, new_cache = attention.attn_apply(
+                bparams["mixer"], h, cfg, positions=positions, causal=causal,
+                cache=cache, cache_pos=cache_pos)
+        else:
+            h, new_cache = ssm.ssm_apply(
+                bparams["mixer"], h, cfg, cache=cache, cache_pos=cache_pos)
+        x = x + h
+        if enc_out is not None and "cross" in bparams:
+            hc = layers.norm_apply(bparams["norm_cross"], x, cfg)
+            kv, hd = cfg.num_kv_heads, cfg.head_dim
+            ek = layers.linear_apply(bparams["cross"]["k"], enc_out, cfg)
+            ev = layers.linear_apply(bparams["cross"]["v"], enc_out, cfg)
+            ek = ek.reshape(*enc_out.shape[:-1], kv, hd)
+            ev = ev.reshape(*enc_out.shape[:-1], kv, hd)
+            hc, _ = attention.attn_apply(
+                bparams["cross"], hc, cfg, positions=positions,
+                kv_override=(ek, ev))
+            x = x + hc
+        aux = jnp.zeros((), jnp.float32)
+        if ffn != "none":
+            h2 = layers.norm_apply(bparams["norm2"], x, cfg)
+            if ffn == "moe":
+                h2, aux = moe.moe_apply(bparams["ffn"], h2, cfg)
+            else:
+                h2 = layers.mlp_apply(bparams["ffn"], h2, cfg)
+            x = x + h2
+        return x, new_cache, aux
+
+    # ------------------------------------------------------------------
+    # Stacked decoder
+    # ------------------------------------------------------------------
+    def _run_stack(self, params, x, *, positions, causal=True,
+                   caches=None, cache_pos=None, enc_out=None):
+        """caches: dict block{j} -> stacked (n_groups, ...) cache trees."""
+        cfg = self.cfg
+
+        def body(carry, xs):
+            x = carry
+            aux_total = jnp.zeros((), jnp.float32)
+            new_caches = {}
+            for j, (kind, ffn) in enumerate(self.block_kinds):
+                c = xs[f"cache{j}"] if caches is not None else None
+                x, nc, aux = self._apply_block(
+                    xs[f"block{j}"], x, kind, ffn, positions=positions,
+                    causal=causal, cache=c, cache_pos=cache_pos,
+                    enc_out=enc_out)
+                aux_total += aux
+                if nc is not None:
+                    new_caches[f"cache{j}"] = nc
+            return x, (new_caches, aux_total)
+
+        # Remat only where there is a backward pass to save memory for —
+        # wrapping the serving scans in jax.checkpoint makes XLA route the
+        # full stacked KV cache through f32 select/convert chains every
+        # layer step (measured +150 GB/chip/step on decode_32k; see
+        # EXPERIMENTS.md §Perf iteration A1).
+        if cfg.remat == "full" and caches is None:
+            body = jax.checkpoint(body, prevent_cse=False)
+
+        xs = {f"block{j}": params[f"block{j}"]
+              for j in range(len(self.block_kinds))}
+        if caches is not None:
+            xs.update({f"cache{j}": caches[f"cache{j}"]
+                       for j in range(len(self.block_kinds))
+                       if f"cache{j}" in caches})
+        x, (new_caches, auxs) = jax.lax.scan(body, x, xs)
+        return x, new_caches, jnp.sum(auxs)
+
+    def _run_encoder(self, params, enc_x):
+        cfg = self.cfg
+        positions = jnp.broadcast_to(
+            jnp.arange(enc_x.shape[1]), enc_x.shape[:2])
+
+        def body(x, bp):
+            x, _, _ = self._apply_block(bp, x, "attn", "mlp",
+                                        positions=positions, causal=False)
+            return x, None
+
+        if cfg.remat == "full":
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, enc_x, params["enc_block"])
+        return layers.norm_apply(params["enc_norm"], x, cfg)
+
+    # ------------------------------------------------------------------
+    # Forward / loss
+    # ------------------------------------------------------------------
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        x = layers.embed_apply(params["embed"], batch["tokens"], cfg)
+        n_front = 0
+        if "vision_embeds" in batch:
+            ve = batch["vision_embeds"].astype(x.dtype)
+            x = jnp.concatenate([ve, x], axis=1)
+            n_front = ve.shape[1]
+        return x, n_front
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            return jnp.dot(x, params["embed"]["table"].astype(x.dtype).T)
+        return layers.unembed_apply(params["unembed"], x, cfg)
+
+    def forward(self, params, batch):
+        """Full-sequence forward -> (hidden (B,S,D), n_frontend, aux)."""
+        cfg = self.cfg
+        x, n_front = self._embed_inputs(params, batch)
+        enc_out = None
+        if cfg.is_encdec:
+            enc_out = self._run_encoder(params, batch["enc_embeds"].astype(x.dtype))
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        x = _shard_act(x, P(("pod", "data"), None, None))
+        x, _, aux = self._run_stack(params, x, positions=positions,
+                                    causal=True, enc_out=enc_out)
+        x = layers.norm_apply(params["final_norm"], x, cfg)
+        return x, n_front, aux
+
+    def loss(self, params, batch):
+        """Causal-LM cross-entropy (chunked over seq if cfg.logits_chunk)."""
+        cfg = self.cfg
+        x, n_front, aux = self.forward(params, batch)
+        x_text = x[:, n_front:]
+        targets = batch["targets"]
+        v = cfg.padded_vocab()
+
+        def ce_of(xc, tc):
+            logits = self._logits(params, xc).astype(jnp.float32)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+            return logz - gold
+
+        if cfg.logits_chunk and x_text.shape[1] % cfg.logits_chunk == 0:
+            b, s, d = x_text.shape
+            nc = s // cfg.logits_chunk
+            xc = jnp.moveaxis(x_text.reshape(b, nc, cfg.logits_chunk, d), 1, 0)
+            tc = jnp.moveaxis(targets.reshape(b, nc, cfg.logits_chunk), 1, 0)
+            ce = jax.lax.map(lambda args: ce_of(*args), (xc, tc))
+            ce = jnp.moveaxis(ce, 0, 1).reshape(b, s)
+        else:
+            ce = ce_of(x_text, targets)
+        loss = jnp.mean(ce) + 0.01 * aux
+        return loss, {"loss": loss, "ce": jnp.mean(ce), "aux": aux}
+
+    # ------------------------------------------------------------------
+    # Serving
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.cache_dtype) if dtype is None else dtype
+        caches = {}
+        for j, (kind, _) in enumerate(self.block_kinds):
+            if kind == "attn":
+                one = attention.init_kv_cache(cfg, batch, max_len, dtype)
+            else:
+                one = ssm.init_ssm_cache(cfg, batch, dtype)
+            caches[f"cache{j}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (self.n_groups, *x.shape)), one)
+        return {"layers": caches, "pos": jnp.zeros((), jnp.int32)}
+
+    def cache_specs(self, decode_seq_sharded: bool = True):
+        """PartitionSpec tree matching init_cache output."""
+        cfg = self.cfg
+        caches = {}
+        seq_ax = MODEL if decode_seq_sharded else None
+        hd_ax = None
+        if cfg.decode_cache_shard == "heads":
+            # shard head_dim: the seq axis stays local -> the per-token DUS
+            # is an in-place write instead of a GSPMD select over the whole
+            # cache shard (§Perf iteration A2)
+            seq_ax, hd_ax = None, MODEL
+        for j, (kind, _) in enumerate(self.block_kinds):
+            if kind == "attn":
+                if cfg.cache_layout == "opt":
+                    # K (.., B, KV, S, hd) / V (.., B, KV, hd, S): seq
+                    # TP-sharded on its new position (§Perf A6)
+                    one = {"k": P(None, ("pod", "data"), None, seq_ax, None),
+                           "v": P(None, ("pod", "data"), None, None, seq_ax)}
+                elif cfg.decode_cache_shard == "flat":
+                    # (n_groups, B, S, kv*hd): channel dim TP-sharded,
+                    # seq local (§Perf iteration A4)
+                    one = {"k": P(None, ("pod", "data"), None, MODEL),
+                           "v": P(None, ("pod", "data"), None, MODEL)}
+                else:
+                    one = {"k": P(None, ("pod", "data"), seq_ax, None, hd_ax),
+                           "v": P(None, ("pod", "data"), seq_ax, None, hd_ax)}
+            else:
+                one = {"state": P(None, ("pod", "data"), None, None, None),
+                       "conv": P(None, ("pod", "data"), None, MODEL)}
+            caches[f"cache{j}"] = one
+        return {"layers": caches, "pos": P()}
+
+    def prefill(self, params, batch, max_len: int, cache_dtype=jnp.bfloat16):
+        """Run the prompt, fill caches, return (cache, last-position logits)."""
+        cfg = self.cfg
+        x, n_front = self._embed_inputs(params, batch)
+        enc_out = None
+        if cfg.is_encdec:
+            enc_out = self._run_encoder(params, batch["enc_embeds"].astype(x.dtype))
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        x = _shard_act(x, P(("pod", "data"), None, None))
+        cache0 = self.init_cache(x.shape[0], max_len, cache_dtype)
+        x, new_caches, _ = self._run_stack(
+            params, x, positions=positions, causal=True,
+            caches=cache0["layers"], cache_pos=None, enc_out=enc_out)
+        x = layers.norm_apply(params["final_norm"], x, cfg)
+        logits = self._logits(params, x[:, -1:])
+        cache = {"layers": new_caches,
+                 "pos": jnp.asarray(x.shape[1], jnp.int32)}
+        if cfg.is_encdec:
+            cache["enc_out"] = enc_out
+        return cache, logits
+
+    def decode_step(self, params, cache, tokens):
+        """tokens: (B, 1) -> (logits (B,1,V), updated cache)."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = layers.embed_apply(params["embed"], tokens, cfg)
+        positions = jnp.broadcast_to(pos, tokens.shape)
+        x, new_caches, _ = self._run_stack(
+            params, x, positions=positions, causal=True,
+            caches=cache["layers"], cache_pos=pos,
+            enc_out=cache.get("enc_out"))
+        x = layers.norm_apply(params["final_norm"], x, cfg)
+        logits = self._logits(params, x)
+        # delta-mode commit (§Perf A7): the scan emitted per-layer K/V
+        # tokens; write them all with one batched DUS per cache tensor.
+        committed = {}
+        for key, nc in new_caches.items():
+            if isinstance(nc, dict) and "k_tok" in nc:
+                old = cache["layers"][key]
+                s_len = old["k"].shape[3]
+                if cfg.sliding_window and s_len <= cfg.sliding_window:
+                    slot = pos % s_len
+                else:
+                    slot = pos
+                committed[key] = {
+                    "k": jax.lax.dynamic_update_slice(
+                        old["k"], nc["k_tok"], (0, 0, 0, slot, 0)),
+                    "v": jax.lax.dynamic_update_slice(
+                        old["v"], nc["v_tok"], (0, 0, 0, 0, slot)),
+                }
+            else:
+                committed[key] = nc
+        new_cache = dict(cache, layers=committed, pos=pos + 1)
+        return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraint helper (no-op outside a mesh context)
+# ---------------------------------------------------------------------------
+
+_MESH = None
+
+
+def set_mesh(mesh):
+    """Install the mesh used to resolve activation sharding constraints."""
+    global _MESH
+    _MESH = mesh
+
+
+def _shard_act(x, spec: P):
+    if _MESH is None:
+        return x
+    names = set(_MESH.axis_names)
+
+    def size_of(axes):
+        n = 1
+        for a in (axes if isinstance(axes, (tuple, list)) else (axes,)):
+            n *= _MESH.shape[a]
+        return n
+
+    def fix(axes, dim):
+        if axes is None:
+            return None
+        if isinstance(axes, (tuple, list)):
+            kept = tuple(a for a in axes if a in names)
+            if not kept or dim % size_of(kept) != 0:
+                return None
+            return kept
+        if axes not in names or dim % size_of(axes) != 0:
+            return None
+        return axes
+
+    entries = tuple(spec) + (None,) * (x.ndim - len(tuple(spec)))
+    resolved = P(*(fix(a, d) for a, d in zip(entries, x.shape)))
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(_MESH, resolved))

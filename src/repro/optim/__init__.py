@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (adamw, clip_by_global_norm, global_norm,
+                                    sgd_momentum)
+from repro.optim.schedules import constant, warmup_cosine
+
+__all__ = ["adamw", "sgd_momentum", "clip_by_global_norm", "global_norm",
+           "warmup_cosine", "constant"]

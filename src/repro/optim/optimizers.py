@@ -1,0 +1,90 @@
+"""Optimizers, built from scratch (no optax in this environment).
+
+``adamw`` returns (init_fn, update_fn) closures over hyperparameters.
+Optimizer state mirrors the param pytree (so param PartitionSpecs apply
+leaf-for-leaf — ZeRO-style sharding falls out of fsdp param specs), plus a
+scalar step. ``state_dtype='bfloat16'`` stores m/v in bf16 — the
+quantized-optimizer-state option used by the 1T-param config.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw", "sgd_momentum", "clip_by_global_norm", "global_norm"]
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree) if jnp.issubdtype(x.dtype, jnp.floating)]
+    return jnp.sqrt(jnp.sum(jnp.asarray(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    factor = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(
+        lambda g: (g * factor).astype(g.dtype)
+        if jnp.issubdtype(g.dtype, jnp.floating) else g, grads), norm
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, state_dtype: str = "float32"
+          ) -> Tuple[Callable, Callable]:
+    sdt = jnp.dtype(state_dtype)
+
+    def init(params):
+        zeros = lambda p: (jnp.zeros_like(p, dtype=sdt)
+                           if jnp.issubdtype(p.dtype, jnp.floating)
+                           else jnp.zeros((), sdt))
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            if not jnp.issubdtype(p.dtype, jnp.floating):
+                return p, m, v
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+            mhat = m_new / c1
+            vhat = v_new / c2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * delta
+            return (p_new.astype(p.dtype), m_new.astype(sdt), v_new.astype(sdt))
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "step": step}
+
+    return init, update
+
+
+def sgd_momentum(momentum: float = 0.9) -> Tuple[Callable, Callable]:
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        new_m = jax.tree.map(lambda m, g: momentum * m + g, state["m"], grads)
+        new_p = jax.tree.map(lambda p, m: (p - lr * m).astype(p.dtype),
+                             params, new_m)
+        return new_p, {"m": new_m, "step": state["step"] + 1}
+
+    return init, update

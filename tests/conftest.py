@@ -1,0 +1,10 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the 1 real CPU
+device; multi-device GSPMD tests spawn subprocesses that set the flag
+themselves (see test_distributed.py)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,53 @@
+"""Bitplane-format Pallas kernel vs oracle (the structural-sign TCSC
+translation, DESIGN.md §2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import formats
+from repro.kernels import ref
+from repro.kernels.ternary_gemm_bitplane import ternary_gemm_bitplane
+
+
+@pytest.mark.parametrize("s", [0.5, 0.25, 0.0625])
+@pytest.mark.parametrize("m,k,n", [(8, 128, 64), (32, 512, 256), (5, 96, 40)])
+def test_bitplane_kernel_matches_oracle(m, k, n, s):
+    rng = np.random.default_rng(0)
+    w = formats.random_ternary(rng, k, n, s)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    plus, minus = formats.pack_bitplanes(w)
+    y = ternary_gemm_bitplane(x, jnp.asarray(plus), jnp.asarray(minus),
+                              block_n=64, block_k=64, interpret=True)
+    y0 = ref.ternary_matmul_dense(x, jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bitplane_kernel_with_scale():
+    rng = np.random.default_rng(1)
+    k, n = 256, 128
+    w = formats.random_ternary(rng, k, n, 0.25)
+    x = jnp.asarray(rng.standard_normal((16, k)), jnp.float32)
+    alpha = jnp.asarray(rng.standard_normal(n) ** 2, jnp.float32)
+    plus, minus = formats.pack_bitplanes(w)
+    y = ternary_gemm_bitplane(x, jnp.asarray(plus), jnp.asarray(minus),
+                              alpha, block_n=64, block_k=128, interpret=True)
+    y0 = ref.ternary_matmul_dense(x, jnp.asarray(w), alpha)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bitplane_equals_2bit_kernel():
+    """Both packed formats are lossless encodings of the same ternary T."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(2)
+    k, n = 128, 96
+    w = formats.random_ternary(rng, k, n, 0.5)
+    x = jnp.asarray(rng.standard_normal((8, k)), jnp.float32)
+    plus, minus = formats.pack_bitplanes(w)
+    y1 = ternary_gemm_bitplane(x, jnp.asarray(plus), jnp.asarray(minus),
+                               block_n=32, block_k=64, interpret=True)
+    y2 = ops.ternary_gemm(x, jnp.asarray(formats.pack_2bit(w)), k=k,
+                          block_n=32, block_k=64)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-5)

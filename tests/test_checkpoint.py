@@ -1,0 +1,67 @@
+"""Checkpoint save/restore: roundtrip, latest-step discovery, atomicity,
+dtype restoration, and mesh-agnostic restore targets."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+
+
+def _state():
+    return {
+        "params": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                   "b": jnp.ones((4,), jnp.bfloat16)},
+        "opt": {"m": {"w": jnp.zeros((3, 4)), "b": jnp.zeros((4,))},
+                "step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    state = _state()
+    path = ckpt.save(str(tmp_path), 7, state)
+    assert os.path.isdir(path)
+    step, restored = ckpt.restore(str(tmp_path), target=jax.eval_shape(_state))
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_latest_step(tmp_path):
+    assert ckpt.latest_step(str(tmp_path)) is None
+    for s in (5, 20, 10):
+        ckpt.save(str(tmp_path), s, {"x": jnp.zeros(())})
+    assert ckpt.latest_step(str(tmp_path)) == 20
+
+
+def test_restore_specific_step(tmp_path):
+    for s in (1, 2):
+        ckpt.save(str(tmp_path), s, {"x": jnp.asarray(float(s))})
+    step, st = ckpt.restore(str(tmp_path), step=1,
+                            target={"x": jnp.zeros(())})
+    assert step == 1 and float(st["x"]) == 1.0
+
+
+def test_missing_leaf_raises(tmp_path):
+    ckpt.save(str(tmp_path), 0, {"x": jnp.zeros(())})
+    with pytest.raises(KeyError):
+        ckpt.restore(str(tmp_path), target={"x": jnp.zeros(()),
+                                            "y": jnp.zeros(())})
+
+
+def test_no_torn_checkpoints(tmp_path):
+    """tmp dirs from interrupted saves are not picked up as checkpoints."""
+    os.makedirs(tmp_path / ".tmp_abc")
+    ckpt.save(str(tmp_path), 3, {"x": jnp.zeros(())})
+    assert ckpt.latest_step(str(tmp_path)) == 3
+
+
+def test_overwrite_same_step(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"x": jnp.asarray(1.0)})
+    ckpt.save(str(tmp_path), 1, {"x": jnp.asarray(2.0)})
+    _, st = ckpt.restore(str(tmp_path), target={"x": jnp.zeros(())})
+    assert float(st["x"]) == 2.0

@@ -1,0 +1,63 @@
+"""Data pipeline: determinism, shapes, learnability structure."""
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import SyntheticLM
+
+
+def test_deterministic_across_instances():
+    cfg = get_config("mistral-nemo-12b", reduced=True)
+    a = SyntheticLM(cfg, 4, 32, seed=7).global_batch(3)
+    b = SyntheticLM(cfg, 4, 32, seed=7).global_batch(3)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_steps_differ():
+    cfg = get_config("mistral-nemo-12b", reduced=True)
+    d = SyntheticLM(cfg, 4, 32)
+    assert not np.array_equal(d.global_batch(0)["tokens"],
+                              d.global_batch(1)["tokens"])
+
+
+def test_targets_are_shifted_tokens():
+    cfg = get_config("mistral-nemo-12b", reduced=True)
+    b = SyntheticLM(cfg, 2, 16).global_batch(0)
+    assert b["tokens"].shape == (2, 16)
+    assert b["targets"].shape == (2, 16)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+
+
+def test_vocab_bounds():
+    cfg = get_config("mamba2-130m", reduced=True)
+    b = SyntheticLM(cfg, 8, 64).global_batch(0)
+    assert b["tokens"].min() >= 0
+    assert b["tokens"].max() < cfg.vocab_size
+
+
+def test_frontend_embeds():
+    cfg = get_config("internvl2-76b", reduced=True)
+    b = SyntheticLM(cfg, 2, 32).global_batch(0)
+    assert "vision_embeds" in b
+    assert b["vision_embeds"].shape == (2, cfg.frontend_seq, cfg.d_model)
+    cfg2 = get_config("seamless-m4t-large-v2", reduced=True)
+    b2 = SyntheticLM(cfg2, 2, 32).global_batch(0)
+    assert "enc_embeds" in b2
+
+
+def test_learnable_structure():
+    """Affine recurrence: next token is (mostly) a deterministic function of
+    the previous one within a sequence."""
+    cfg = get_config("mistral-nemo-12b", reduced=True)
+    d = SyntheticLM(cfg, 1, 256, noise=0.0)
+    b = d.global_batch(0)
+    t = b["tokens"][0]
+    # recover a, c from two consecutive transitions and verify the rest
+    v = cfg.vocab_size
+    found = False
+    for a in range(1, 8):
+        c = (t[1] - a * t[0]) % v
+        if all((a * t[i] + c) % v == t[i + 1] for i in range(len(t) - 1)):
+            found = True
+            break
+    assert found

@@ -1,0 +1,110 @@
+"""Format round-trips + hypothesis property tests (paper's TCSC family and
+the TPU packed formats)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import formats
+
+SPARSITIES = [0.5, 0.25, 0.125, 0.0625]
+
+
+def _rand(k, n, s, seed=0):
+    return formats.random_ternary(np.random.default_rng(seed), k, n, s)
+
+
+@pytest.mark.parametrize("s", SPARSITIES)
+@pytest.mark.parametrize("k,n", [(64, 32), (96, 40), (128, 128), (33, 7)])
+def test_tcsc_roundtrip(k, n, s):
+    w = _rand(k, n, s)
+    t = formats.TCSC.from_dense(w)
+    assert (t.to_dense() == w).all()
+    # invariants
+    assert t.col_start_pos[-1] == len(t.row_index_pos)
+    assert t.col_start_neg[-1] == len(t.row_index_neg)
+    assert len(t.row_index_pos) + len(t.row_index_neg) == (w != 0).sum()
+
+
+@pytest.mark.parametrize("block", [16, 32, 4096])
+def test_blocked_tcsc_roundtrip(block):
+    w = _rand(96, 24, 0.25)
+    bt = formats.BlockedTCSC.from_dense(w, block)
+    assert (bt.to_dense() == w).all()
+    # every block's row indices stay inside the block window
+    for blk in bt.blocks:
+        if len(blk.row_index_pos):
+            assert blk.row_index_pos.max() < block
+        if len(blk.row_index_neg):
+            assert blk.row_index_neg.max() < block
+
+
+@pytest.mark.parametrize("group", [1, 2, 4])
+def test_interleaved_roundtrip(group):
+    w = _rand(64, 16, 0.5)
+    it = formats.InterleavedTCSC.from_dense(w, group)
+    assert (it.to_dense() == w).all()
+    # sign decoding matches dense values at the stored indices
+    signs = it.signs()
+    seg = it.segment_ids()
+    for idx, sg, col in zip(it.all_indices, signs, seg):
+        assert w[idx, col] == sg
+
+
+def test_packed_formats_roundtrip():
+    w = _rand(96, 40, 0.25)
+    p, m = formats.pack_bitplanes(w)
+    assert p.shape == (12, 40)
+    got = np.asarray(formats.decode_bitplanes(jnp.asarray(p), jnp.asarray(m),
+                                              96, jnp.int8))
+    assert (got == w).all()
+    p2 = formats.pack_2bit(w)
+    assert p2.shape == (6, 40) and p2.dtype == np.uint32
+    assert (np.asarray(formats.decode_2bit(jnp.asarray(p2), 96, jnp.int8)) == w).all()
+    b3 = formats.pack_base3(w)
+    assert b3.shape == (20, 40)
+    assert (np.asarray(formats.decode_base3(jnp.asarray(b3), 96, jnp.int8)) == w).all()
+
+
+def test_compression_ratios():
+    """The paper's memory argument: packed sizes vs f32 dense."""
+    k, n = 4096, 1024
+    w = _rand(k, n, 0.25)
+    dense_f32 = k * n * 4
+    p2 = formats.pack_2bit(w)
+    assert p2.nbytes * 16 == dense_f32                  # 2 bits/weight
+    b3 = formats.pack_base3(w)
+    assert b3.nbytes == -(-k // 5) * n                  # 1.6 bits/weight
+    tcsc = formats.TCSC.from_dense(w)
+    assert tcsc.nbytes() == pytest.approx(
+        (w != 0).sum() * 4 + 2 * (n + 1) * 4, rel=0.01)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(1, 70), n=st.integers(1, 20),
+    s=st.sampled_from(SPARSITIES), seed=st.integers(0, 2**31 - 1),
+)
+def test_all_formats_agree(k, n, s, seed):
+    w = _rand(k, n, s, seed)
+    assert (formats.TCSC.from_dense(w).to_dense() == w).all()
+    assert (formats.BlockedTCSC.from_dense(w, 16).to_dense() == w).all()
+    assert (formats.InterleavedTCSC.from_dense(w, 2).to_dense() == w).all()
+    p, m = formats.pack_bitplanes(w)
+    assert (np.asarray(formats.decode_bitplanes(
+        jnp.asarray(p), jnp.asarray(m), k, jnp.int8)) == w).all()
+    assert (np.asarray(formats.decode_2bit(
+        jnp.asarray(formats.pack_2bit(w)), k, jnp.int8)) == w).all()
+    assert (np.asarray(formats.decode_base3(
+        jnp.asarray(formats.pack_base3(w)), k, jnp.int8)) == w).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(s=st.floats(0.05, 0.6), seed=st.integers(0, 2**31 - 1))
+def test_random_ternary_sparsity(s, seed):
+    w = formats.random_ternary(np.random.default_rng(seed), 128, 64, s)
+    got = (w != 0).mean()
+    assert abs(got - s) < 0.01
+    assert set(np.unique(w)) <= {-1, 0, 1}

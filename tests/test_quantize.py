@@ -1,0 +1,80 @@
+"""Ternary quantization properties: TWN values/scales, target-sparsity
+quantile, straight-through gradients."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import quantize
+
+
+def test_ternarize_values_and_scale():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((256, 64)), jnp.float32)
+    t, alpha = quantize.ternarize(w)
+    assert set(np.unique(np.asarray(t))) <= {-1, 0, 1}
+    assert alpha.shape == (1, 64)
+    assert (np.asarray(alpha) > 0).all()
+    # signs preserved where nonzero
+    tz = np.asarray(t)
+    wz = np.asarray(w)
+    nz = tz != 0
+    assert (np.sign(wz[nz]) == tz[nz]).all()
+
+
+@pytest.mark.parametrize("s", [0.5, 0.25, 0.125, 0.0625])
+def test_target_sparsity(s):
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.standard_normal((512, 32)), jnp.float32)
+    t, _ = quantize.ternarize_target_sparsity(w, s)
+    got = (np.asarray(t) != 0).mean()
+    assert abs(got - s) < 0.02
+
+
+def test_ste_gradient_passthrough():
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.standard_normal((64, 16)) * 0.1, jnp.float32)
+
+    def f(w):
+        return jnp.sum(quantize.ste_ternarize(w) * 3.0)
+
+    g = jax.grad(f)(w)
+    # STE: gradient flows (not identically zero), bounded by upstream grad
+    assert np.abs(np.asarray(g)).max() <= 3.0 + 1e-6
+    assert (np.asarray(g) != 0).mean() > 0.5
+
+
+def test_ste_forward_equals_ternarize():
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.standard_normal((128, 8)), jnp.float32)
+    t, alpha = quantize.ternarize(w)
+    got = quantize.ste_ternarize(w)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(t.astype(jnp.float32) * alpha),
+                               rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(thresh=st.floats(0.1, 1.5), seed=st.integers(0, 10**6))
+def test_threshold_monotonic_sparsity(thresh, seed):
+    """Higher threshold factor => more zeros (monotone sparsity)."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((256, 16)), jnp.float32)
+    t1, _ = quantize.ternarize(w, thresh)
+    t2, _ = quantize.ternarize(w, thresh + 0.3)
+    assert (np.asarray(t1) != 0).sum() >= (np.asarray(t2) != 0).sum()
+
+
+def test_alpha_is_l1_optimal():
+    """alpha = mean |w| over the mask minimizes ||w - alpha*t||^2 given t."""
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.standard_normal((512, 1)), jnp.float32)
+    t, alpha = quantize.ternarize(w, per_channel=False)
+    tz = np.asarray(t, np.float32)
+    wz = np.asarray(w)
+    a = float(np.asarray(alpha).reshape(()))
+    base = ((wz - a * tz) ** 2).sum()
+    for da in (-0.05, 0.05):
+        assert ((wz - (a + da) * tz) ** 2).sum() >= base - 1e-6
