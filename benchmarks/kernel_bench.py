@@ -17,10 +17,9 @@ import numpy as np
 from benchmarks.common import record, time_fn
 from repro.core import formats
 from repro.kernels import ref
+from repro.kernels.autotune import CANDIDATE_BLOCKS, HBM_BW
+from repro.kernels.autotune import PEAK_FLOPS as PEAK
 from repro.kernels.ops import TernaryGemmConfig
-
-HBM_BW = 819e9
-PEAK = 197e12
 
 
 def block_sweep(quick: bool = False):
@@ -29,8 +28,8 @@ def block_sweep(quick: bool = False):
     Mirrors the paper's Figs 2-4 parameter search, adapted to the VMEM
     hierarchy (DESIGN.md §2)."""
     m, k, n = 512, 4096, 4096
-    shapes = [(128, 128, 256), (128, 128, 512), (128, 256, 512),
-              (256, 128, 512), (128, 128, 1024), (256, 256, 512)]
+    # Same candidate grid the autotuner sweeps (single source of truth).
+    shapes = list(CANDIDATE_BLOCKS)
     if quick:
         shapes = shapes[:3]
     for bm, bn, bk in shapes:
@@ -151,5 +150,68 @@ def flash_kernel_check(quick: bool = False):
            f"xla_score_roundtrip_mb={xla_scores / 2**20:.0f}")
 
 
+def sparsity_skip(quick: bool = False):
+    """Tile-skipping kernel: tiles visited vs occupancy across the paper's
+    sparsity grid {1/2, 1/4, 1/8, 1/16} (DESIGN.md §3).
+
+    The structural number is for a 4096x4096 weight (the acceptance shape):
+    grid steps the skipping kernel takes (N-tiles x static max-occupancy)
+    over the dense kernel's full tile count. Correctness is checked at a
+    small shape in interpret mode, bit-exact vs the dense-decode kernel.
+    """
+    from repro.kernels import ops
+    tile_k, tile_n = 256, 128
+    k, n = (1024, 1024) if quick else (4096, 4096)
+    rng = np.random.default_rng(0)
+    for s in (0.5, 0.25, 0.125, 0.0625):
+        w = formats.random_tile_ternary(rng, k, n, tile_k, tile_n, s)
+        tt = formats.TiledTernary.from_dense(w, tile_k=tile_k, tile_n=tile_n)
+        total = tt.total_tiles()
+        visited = tt.visited_tiles()
+        record(f"sparsity_skip/s=1_{int(round(1 / s))}", 0.0,
+               f"tiles={total},occupied={tt.occupied_tiles()},"
+               f"visited={visited},visit_frac={visited / total:.3f},"
+               f"occ_frac={tt.occupancy_fraction():.3f}")
+
+    # interpret-mode parity at a CI-sized shape (dense pallas vs skipping)
+    m, kc, nc = 16, 256, 128
+    wc = formats.random_tile_ternary(rng, kc, nc, 64, 32, 0.125)
+    ttc = formats.TiledTernary.from_dense(wc, tile_k=64, tile_n=32)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((m, kc)),
+                    jnp.float32)
+    y_skip = ops.ternary_gemm(x, ttc, impl="skip")
+    y_dense = ops.ternary_gemm(x, jnp.asarray(ttc.packed), k=kc,
+                               block_n=32, block_k=64, impl="dense")[:, :nc]
+    exact = bool(jnp.all(y_skip == y_dense))
+    record("sparsity_skip/interpret_bit_exact", 0.0,
+           f"exact={exact},visit_frac={ttc.visited_tiles() / ttc.total_tiles():.3f}")
+    assert exact
+
+
+def autotune_sweep(quick: bool = False):
+    """Exercise the block-shape autotuner (kernels.autotune): tuned picks
+    for serving-ish shapes, and the JSON cache round-trip (DESIGN.md §5)."""
+    import os
+    import tempfile
+    from repro.kernels.autotune import Autotuner
+    path = os.path.join(tempfile.mkdtemp(prefix="repro_autotune_"),
+                        "cache.json")
+    tuner = Autotuner(path=path, mode="model")
+    shapes = [(8, 4096, 4096, 1.0), (256, 4096, 4096, 1.0),
+              (256, 4096, 4096, 0.125)]
+    if quick:
+        shapes = shapes[:2]
+    for m, k, n, s in shapes:
+        cfg = tuner.lookup(m, k, n, sparsity=s)
+        record(f"autotune/m={m},k={k},n={n},s={s}", 0.0,
+               f"block={cfg.block_m}x{cfg.block_n}x{cfg.block_k},"
+               f"vmem_kb={cfg.vmem_bytes() // 1024}")
+    reloaded = Autotuner(path=path, mode="model")
+    roundtrip = reloaded.entries() == tuner.entries()
+    record("autotune/json_roundtrip", 0.0,
+           f"entries={len(tuner.entries())},roundtrip_ok={roundtrip}")
+    assert roundtrip and len(tuner.entries()) >= len(shapes) - 1
+
+
 ALL = [block_sweep, value_compression, end_to_end_layer, pallas_kernel_check,
-       flash_kernel_check]
+       flash_kernel_check, sparsity_skip, autotune_sweep]

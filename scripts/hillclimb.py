@@ -76,6 +76,10 @@ def main():
     ap.add_argument("--top", type=int, default=14)
     ap.add_argument("--kernel-model", action="store_true",
                     help="cost dequant+dot through the fused Pallas kernel")
+    ap.add_argument("--autotune-gemm", action="store_true",
+                    help="pre-warm the ternary-GEMM block-shape autotune "
+                         "cache for this arch's projection shapes and "
+                         "record the picks")
     args = ap.parse_args()
 
     overrides = {}
@@ -112,6 +116,20 @@ def main():
         "compile_s": round(time.time() - t0, 1),
         "top_bytes_by_op": [(k, b, f) for k, b, f in walked.top_bytes(args.top)],
     }
+    if args.autotune_gemm:
+        from repro.kernels.autotune import get_tuner
+        tuner = get_tuner()
+        d, ff = cfg.d_model, cfg.d_ff or cfg.d_ff_expert or cfg.d_model * 4
+        mm = shape.seq_len if shape.kind != "decode" else max(
+            shape.global_batch, 8)
+        picks = {}
+        for din, dout in {(d, ff), (ff, d), (d, d),
+                          (d, cfg.padded_vocab())}:
+            c = tuner.lookup(mm, din, dout, sparsity=0.25)
+            picks[f"{din}x{dout}"] = c.as_list()
+        rec["autotune_gemm"] = picks
+        print(" autotuned ternary blocks:", picks)
+
     os.makedirs("experiments/perf", exist_ok=True)
     rec["kernel_model"] = args.kernel_model
     path = f"experiments/perf/{args.arch}_{args.shape}_{args.tag}.json"

@@ -91,6 +91,10 @@ class ModelConfig:
     quantization: str = "none"   # none | ternary (QAT/STE) | ternary_packed
     ternary_threshold: float = 0.7
     ternary_min_dim: int = 512   # only ternarize matmuls with min dim >= this
+    ternary_kernel: str = "auto"  # auto | pallas | xla — packed-linear path:
+                                  # pallas = autotuned Pallas ternary_gemm,
+                                  # xla = dense-decode XLA reference,
+                                  # auto = pallas on TPU backends else xla
 
     # --- numerics / memory ---
     dtype: str = "bfloat16"

@@ -9,6 +9,9 @@ This module is the JAX/TPU adaptation of the paper's data-format contributions:
                          sign encoding, vector-decodable (TPU-native TCSC).
 * ``pack_2bit``       -- 2-bit codes, 16 weights / int32 word: the format the
                          Pallas kernel consumes.
+* ``TiledTernary``    -- 2-bit codes + per-(K-tile, N-tile) occupancy metadata
+                         recorded at pack time; feeds the scalar-prefetch
+                         tile-skipping Pallas kernel (DESIGN.md §3).
 * ``pack_base3``      -- the paper's 5-values-per-byte base-3 compression
                          (prototyped & dropped in the paper; kept here for the
                          benchmark record).
@@ -35,10 +38,12 @@ __all__ = [
     "decode_bitplanes",
     "pack_2bit",
     "decode_2bit",
+    "TiledTernary",
     "pack_base3",
     "decode_base3",
     "base3_lut",
     "random_ternary",
+    "random_tile_ternary",
 ]
 
 
@@ -58,6 +63,33 @@ def random_ternary(rng: np.random.Generator, k: int, n: int, sparsity: float) ->
     signs = rng.integers(0, 2, size=nnz, dtype=np.int8) * 2 - 1
     w[idx] = signs
     return w.reshape(k, n)
+
+
+def random_tile_ternary(rng: np.random.Generator, k: int, n: int,
+                        tile_k: int, tile_n: int, sparsity: float,
+                        inner_density: float = 0.5) -> np.ndarray:
+    """Tile-structured sparse ternary (K, N): the workload the skipping
+    kernel is built for (pruned / expert-gated weights, DESIGN.md §3).
+
+    Each N-tile column gets the same number of occupied K-tiles
+    (``round(min(1, sparsity/inner_density) * n_ktiles)``, chosen at random),
+    and occupied tiles are filled i.i.d. so the *overall* nnz fraction is
+    ``sparsity`` — occupancy falls in proportion to sparsity, uniformly
+    enough that the static max-occupancy grid bound is tight.
+    """
+    assert k % tile_k == 0 and n % tile_n == 0, (k, n, tile_k, tile_n)
+    nkt, nnt = k // tile_k, n // tile_n
+    w = np.zeros((k, n), dtype=np.int8)
+    if sparsity <= 0:
+        return w
+    frac = min(1.0, sparsity / inner_density)
+    per_col = max(1, int(round(frac * nkt)))
+    inner = sparsity * nkt / per_col
+    for j in range(nnt):
+        for r in rng.choice(nkt, size=per_col, replace=False):
+            w[r * tile_k:(r + 1) * tile_k, j * tile_n:(j + 1) * tile_n] = \
+                random_ternary(rng, tile_k, tile_n, inner)
+    return w
 
 
 # ---------------------------------------------------------------------------
@@ -299,6 +331,108 @@ def decode_2bit(packed: jnp.ndarray, k: int, dtype=jnp.bfloat16) -> jnp.ndarray:
     c = (packed[:, None, :] >> shifts) & 3
     vals = ((c & 1).astype(jnp.int8) - ((c >> 1) & 1).astype(jnp.int8))
     return vals.reshape(q * per, n)[:k].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# TiledTernary -- 2-bit codes + pack-time tile-occupancy metadata
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TiledTernary:
+    """2-bit-packed ternary weights + per-(K-tile, N-tile) occupancy.
+
+    The blocked-TCSC insight taken to its TPU conclusion: at pack time we
+    record which (tile_k x tile_n) tiles contain any nonzero, as
+
+    * ``tile_nnz``   -- (n_ktiles, n_ntiles) int32 nnz per tile (the bitmap
+                        is ``tile_nnz > 0``);
+    * ``kt_indices`` -- (n_ntiles, max_occ) int32: for each N-tile column,
+                        the occupied K-tile ids in ascending order, padded to
+                        the static ``max_occ`` with the id of an *unoccupied*
+                        tile (so even an unguarded visit contributes zero);
+    * ``kt_counts``  -- (n_ntiles,) int32 valid prefix length of each row.
+
+    ``packed`` holds the K/N-padded 2-bit codes, so a (tile_k/16, tile_n)
+    word tile is addressable by (K-tile id, N-tile id) BlockSpec indices.
+    The skipping kernel prefetches ``kt_indices``/``kt_counts`` as scalars
+    and iterates the K grid dimension only ``max_occ`` times per N-tile,
+    DMA-ing only occupied tiles (DESIGN.md §3). ``tile_k`` must be a
+    multiple of 16 (one uint32 word row = 16 K entries).
+    """
+
+    packed: np.ndarray       # (Kp/16, Np) uint32
+    kt_indices: np.ndarray   # (n_ntiles, max_occ) int32
+    kt_counts: np.ndarray    # (n_ntiles,) int32
+    tile_nnz: np.ndarray     # (n_ktiles, n_ntiles) int32
+    tile_k: int
+    tile_n: int
+    shape: Tuple[int, int]   # logical (K, N) before padding
+
+    @classmethod
+    def from_dense(cls, w: np.ndarray, tile_k: int = 256,
+                   tile_n: int = 128) -> "TiledTernary":
+        assert tile_k % 16 == 0, tile_k
+        k, n = w.shape
+        kp = -(-k // tile_k) * tile_k
+        npad = -(-n // tile_n) * tile_n
+        wp = np.zeros((kp, npad), dtype=np.int8)
+        wp[:k, :n] = w
+        nkt, nnt = kp // tile_k, npad // tile_n
+        tile_nnz = (wp.reshape(nkt, tile_k, nnt, tile_n) != 0) \
+            .sum(axis=(1, 3)).astype(np.int32)
+        occ = tile_nnz > 0
+        counts = occ.sum(axis=0).astype(np.int32)
+        max_occ = max(int(counts.max(initial=0)), 1)
+        idx = np.zeros((nnt, max_occ), dtype=np.int32)
+        for j in range(nnt):
+            ks = np.nonzero(occ[:, j])[0].astype(np.int32)
+            idx[j, :len(ks)] = ks
+            if len(ks) < max_occ:
+                free = np.setdiff1d(np.arange(nkt, dtype=np.int32), ks)
+                idx[j, len(ks):] = free[0] if len(free) else 0
+        return cls(pack_2bit(wp), idx, counts, tile_nnz, tile_k, tile_n,
+                   (k, n))
+
+    # --- derived views ---------------------------------------------------
+    @property
+    def n_ktiles(self) -> int:
+        return self.tile_nnz.shape[0]
+
+    @property
+    def n_ntiles(self) -> int:
+        return self.tile_nnz.shape[1]
+
+    @property
+    def max_occ(self) -> int:
+        return self.kt_indices.shape[1]
+
+    def occupancy(self) -> np.ndarray:
+        """(n_ktiles, n_ntiles) bool bitmap."""
+        return self.tile_nnz > 0
+
+    def occupied_tiles(self) -> int:
+        return int(self.kt_counts.sum())
+
+    def total_tiles(self) -> int:
+        return self.n_ktiles * self.n_ntiles
+
+    def occupancy_fraction(self) -> float:
+        return self.occupied_tiles() / max(self.total_tiles(), 1)
+
+    def visited_tiles(self) -> int:
+        """Grid steps the skipping kernel takes per M-tile row: the static
+        ``max_occ`` bound x N-tiles (>= occupied_tiles by raggedness)."""
+        return self.n_ntiles * self.max_occ
+
+    def to_dense(self) -> np.ndarray:
+        k, n = self.shape
+        kp = self.n_ktiles * self.tile_k
+        dec = np.asarray(decode_2bit(jnp.asarray(self.packed), kp, jnp.int8))
+        return dec[:k, :n]
+
+    def nbytes(self) -> int:
+        return (self.packed.nbytes + self.kt_indices.nbytes
+                + self.kt_counts.nbytes + self.tile_nnz.nbytes)
 
 
 # ---------------------------------------------------------------------------

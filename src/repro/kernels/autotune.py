@@ -1,0 +1,246 @@
+"""Block-shape autotuner for the ternary Pallas kernels.
+
+The TPU analogue of the paper's unroll-factor grid search (Figs 2-4): for a
+given (M, K, N, sparsity, impl) problem, sweep candidate
+(block_m, block_n, block_k) shapes and keep the winner. Two scoring modes:
+
+* ``measure``  -- wall-clock the compiled kernel (only meaningful on a real
+                  TPU backend; interpret-mode timing is Python-bound noise);
+* ``model``    -- deterministic analytic score: modeled HBM-bound time for
+                  the tile traffic (X re-reads per N-tile, packed W re-reads
+                  per M-tile, output write) plus grid-overhead and
+                  VMEM-pressure penalties. Used automatically off-TPU so the
+                  tuner is reproducible in CI.
+
+Winners are cached twice: in-process (dict) and on disk as JSON so tuning
+survives across processes. Cache file format (DESIGN.md §5)::
+
+    {"version": 1,
+     "entries": {"dense:m128:k4096:n4096:s0.25": [128, 128, 512], ...}}
+
+Keys bucket M to the next power of two and sparsity to the paper's grid
+{1, 1/2, 1/4, 1/8, 1/16, 1/32}, so serving shapes that differ only in batch
+hit the same entry. Consumers: ``ops.ternary_gemm`` (block args default to
+the tuned shape), the ternary linear in ``models/layers.py``,
+``benchmarks/kernel_bench.py``, and ``scripts/hillclimb.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.kernels.ternary_gemm import K_PER_WORD
+
+__all__ = ["BlockConfig", "Autotuner", "get_tuner", "DEFAULT_CACHE_PATH"]
+
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+DEFAULT_CACHE_PATH = os.path.join("experiments", "autotune_cache.json")
+
+# Modeled v5e-class machine — the single source for these numbers
+# (benchmarks/kernel_bench.py imports them from here).
+HBM_BW = 819e9
+PEAK_FLOPS = 197e12
+VMEM_BYTES = 16 * 2**20
+
+# Candidate grid: the shapes the paper-style search sweeps. block_k spans
+# the K-reuse axis, block_m/n the MXU tile axes.
+CANDIDATE_BLOCKS: Tuple[Tuple[int, int, int], ...] = (
+    (128, 128, 256), (128, 128, 512), (128, 128, 1024),
+    (128, 256, 512), (256, 128, 512), (256, 256, 512),
+    (64, 128, 512), (8, 128, 512), (8, 256, 512),
+)
+
+SPARSITY_GRID = (1.0, 0.5, 0.25, 0.125, 0.0625, 0.03125)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    block_m: int
+    block_n: int
+    block_k: int
+
+    def as_list(self) -> List[int]:
+        return [self.block_m, self.block_n, self.block_k]
+
+    def vmem_bytes(self, dtype_bytes: int = 2) -> int:
+        x = self.block_m * self.block_k * dtype_bytes
+        w = (self.block_k // K_PER_WORD) * self.block_n * 4
+        dec = self.block_k * self.block_n * dtype_bytes
+        acc = self.block_m * self.block_n * 4
+        out = self.block_m * self.block_n * dtype_bytes
+        return x + w + dec + acc + out
+
+
+def _pow2_bucket(v: int) -> int:
+    return 1 << max(0, int(v - 1).bit_length())
+
+
+def _sparsity_bucket(s: float) -> float:
+    return min(SPARSITY_GRID, key=lambda g: abs(g - max(min(s, 1.0), 0.0)))
+
+
+def cache_key(m: int, k: int, n: int, sparsity: float = 1.0,
+              impl: str = "dense", fixed_n: Optional[int] = None,
+              fixed_k: Optional[int] = None) -> str:
+    """Layout-pinned block shapes (TiledTernary tile_n/tile_k) are part of
+    the problem identity — two packs of the same logical shape with
+    different tiles must not share (and thrash) one entry."""
+    key = (f"{impl}:m{_pow2_bucket(m)}:k{k}:n{n}"
+           f":s{_sparsity_bucket(sparsity)}")
+    if fixed_n is not None:
+        key += f":bn{fixed_n}"
+    if fixed_k is not None:
+        key += f":bk{fixed_k}"
+    return key
+
+
+class Autotuner:
+    """Process-wide block-shape cache with JSON persistence."""
+
+    def __init__(self, path: Optional[str] = None, mode: str = "auto"):
+        self._path = path if path is not None else os.environ.get(
+            CACHE_ENV, DEFAULT_CACHE_PATH)
+        self._mode = mode          # auto | model | measure
+        self._cache: Dict[str, BlockConfig] = {}
+        self._lock = threading.Lock()
+        self._loaded = False
+
+    # --- persistence ------------------------------------------------------
+    def _load(self) -> None:
+        if self._loaded:
+            return
+        self._loaded = True
+        try:
+            with open(self._path) as f:
+                data = json.load(f)
+            for key, blk in data.get("entries", {}).items():
+                self._cache[key] = BlockConfig(*map(int, blk))
+        except (OSError, ValueError, TypeError):
+            # unreadable / corrupt / wrong-arity cache: degrade to re-tuning
+            self._cache.clear()
+
+    def save(self) -> None:
+        entries = {key: cfg.as_list() for key, cfg in sorted(
+            self._cache.items())}
+        d = os.path.dirname(self._path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = self._path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"version": 1, "entries": entries}, f, indent=1)
+        os.replace(tmp, self._path)
+
+    # --- candidate generation / scoring ----------------------------------
+    def candidates(self, m: int, k: int, n: int,
+                   fixed_n: Optional[int] = None,
+                   fixed_k: Optional[int] = None) -> List[BlockConfig]:
+        """VMEM-feasible candidates; fixed_n/fixed_k pin block shapes that
+        are dictated by the data layout (TiledTernary tile shapes)."""
+        out, seen = [], set()
+        for bm, bn, bk in CANDIDATE_BLOCKS:
+            bm = min(bm, _pow2_bucket(max(m, 8)))
+            bn = fixed_n if fixed_n is not None else bn
+            bk = fixed_k if fixed_k is not None else bk
+            cfg = BlockConfig(bm, bn, bk)
+            if cfg in seen or cfg.vmem_bytes() > VMEM_BYTES:
+                continue
+            seen.add(cfg)
+            out.append(cfg)
+        if not out:   # degenerate fallback: smallest legal tile
+            out.append(BlockConfig(min(8, _pow2_bucket(max(m, 8))),
+                                   fixed_n or 128, fixed_k or 256))
+        return out
+
+    def _model_score(self, cfg: BlockConfig, m: int, k: int, n: int,
+                     sparsity: float) -> float:
+        """Modeled seconds for one GEMM pass, lower is better. Occupied
+        fraction scales the K-dimension traffic (the skip path's lever)."""
+        occ = max(min(sparsity, 1.0), 1.0 / 64)
+        mp = -(-m // cfg.block_m) * cfg.block_m
+        npad = -(-n // cfg.block_n) * cfg.block_n
+        kp = -(-k // cfg.block_k) * cfg.block_k
+        n_tiles = npad // cfg.block_n
+        m_tiles = mp // cfg.block_m
+        k_steps = max(1, round((kp // cfg.block_k) * occ))
+        x_bytes = m_tiles * n_tiles * k_steps * cfg.block_m * cfg.block_k * 2
+        w_bytes = (m_tiles * n_tiles * k_steps
+                   * (cfg.block_k // K_PER_WORD) * cfg.block_n * 4)
+        out_bytes = mp * npad * 2
+        t_mem = (x_bytes + w_bytes + out_bytes) / HBM_BW
+        grid = m_tiles * n_tiles * k_steps
+        t_grid = grid * 1e-6          # per-step dispatch/DMA-setup overhead
+        # mild pressure penalty as the working set approaches VMEM capacity
+        t_vmem = t_mem * 0.25 * (cfg.vmem_bytes() / VMEM_BYTES)
+        return t_mem + t_grid + t_vmem
+
+    def _measure(self, cfg: BlockConfig, run: Callable[[BlockConfig], None],
+                 repeats: int = 3) -> float:
+        import time
+        run(cfg)                      # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            run(cfg)
+        return (time.perf_counter() - t0) / repeats
+
+    # --- the public entry -------------------------------------------------
+    def lookup(self, m: int, k: int, n: int, sparsity: float = 1.0,
+               impl: str = "dense", fixed_n: Optional[int] = None,
+               fixed_k: Optional[int] = None,
+               run: Optional[Callable[[BlockConfig], None]] = None,
+               ) -> BlockConfig:
+        """Best block shape for the problem; tunes and persists on miss.
+
+        ``run``, if given and the mode resolves to ``measure``, is called
+        per candidate to produce a wall-clock score; otherwise the analytic
+        model decides (deterministic, CI-safe).
+        """
+        key = cache_key(m, k, n, sparsity, impl, fixed_n=fixed_n,
+                        fixed_k=fixed_k)
+        with self._lock:
+            self._load()
+            hit = self._cache.get(key)
+        if hit is not None and (fixed_n is None or hit.block_n == fixed_n) \
+                and (fixed_k is None or hit.block_k == fixed_k):
+            return hit
+
+        mode = self._mode
+        if mode == "auto":
+            import jax
+            mode = ("measure"
+                    if run is not None and jax.default_backend() == "tpu"
+                    else "model")
+        cands = self.candidates(m, k, n, fixed_n=fixed_n, fixed_k=fixed_k)
+        if mode == "measure" and run is not None:
+            scored = [(self._measure(c, run), c) for c in cands]
+        else:
+            scored = [(self._model_score(c, m, k, n, sparsity), c)
+                      for c in cands]
+        best = min(scored, key=lambda sc: sc[0])[1]
+        with self._lock:
+            self._cache[key] = best
+            try:
+                self.save()
+            except OSError:
+                pass      # read-only FS: in-process cache still works
+        return best
+
+    def entries(self) -> Dict[str, BlockConfig]:
+        with self._lock:
+            self._load()
+            return dict(self._cache)
+
+
+_GLOBAL: Optional[Autotuner] = None
+_GLOBAL_LOCK = threading.Lock()
+
+
+def get_tuner() -> Autotuner:
+    """The process-wide tuner (path from $REPRO_AUTOTUNE_CACHE)."""
+    global _GLOBAL
+    with _GLOBAL_LOCK:
+        if _GLOBAL is None:
+            _GLOBAL = Autotuner()
+        return _GLOBAL

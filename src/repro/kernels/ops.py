@@ -1,15 +1,31 @@
-"""jit'd public wrappers around the ternary GEMM kernel.
+"""jit'd public wrappers + the unified dispatcher for the ternary GEMM
+kernels.
 
-``ternary_gemm`` is the user-facing op: it pads to tile multiples, picks
-interpret mode off the backend (CPU container -> interpret=True; real TPU ->
-compiled Mosaic), and defines a custom VJP so the op is usable under
-``jax.grad`` (dY/dX = g @ T^T; packed weights are non-differentiable --
-training uses the QAT/STE latent-weight path in ``core.quantize``).
+``ternary_gemm`` is the user-facing op. It accepts the weight operand in any
+of the kernel formats and routes to the right Pallas kernel:
+
+* ``(K/16, N) uint32`` packed 2-bit codes      -> dense-decode kernel;
+* ``formats.TiledTernary``                     -> sparsity-adaptive skipping
+  kernel (scalar-prefetch over pack-time occupancy metadata, DESIGN.md §3),
+  falling back to dense when the weight is effectively dense;
+* ``(plus, minus)`` uint8 bitplane pair        -> bitplane kernel, optionally
+  the plane-factorized ``Y = (X @ P) - (X @ M)`` MXU path (DESIGN.md §4).
+
+``impl`` selects explicitly ("dense" | "skip" | "bitplane" |
+"bitplane_factorized" | "ref"); the default "auto" picks by format and
+occupancy. Block shapes left as ``None`` are resolved by the autotuner
+(``kernels.autotune``), keyed on (M, K, N, sparsity, impl).
+
+Each path pads to tile multiples, picks interpret mode off the backend (CPU
+container -> interpret=True; real TPU -> compiled Mosaic), and defines a
+custom VJP so the op is usable under ``jax.grad`` (dY/dX = g @ T^T; packed
+weights are non-differentiable -- training uses the QAT/STE latent-weight
+path in ``core.quantize``).
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -17,9 +33,23 @@ import numpy as np
 
 from repro.core import formats
 from repro.kernels import ref
-from repro.kernels.ternary_gemm import K_PER_WORD, ternary_gemm_pallas
+from repro.kernels import autotune as autotune_lib
+from repro.kernels.ternary_gemm import (K_PER_WORD, ternary_gemm_pallas,
+                                        ternary_gemm_skip_pallas)
+from repro.kernels.ternary_gemm_bitplane import (K_PER_BYTE,
+                                                 ternary_gemm_bitplane)
 
-__all__ = ["ternary_gemm", "pack_weights", "TernaryGemmConfig"]
+__all__ = ["ternary_gemm", "pack_weights", "pack_weights_tiled",
+           "TernaryGemmConfig"]
+
+WORDS = 32
+
+# Above this occupied-tile fraction the skipping grid saves too little to
+# justify the scalar-prefetch indirection; "auto" falls back to dense.
+SKIP_OCCUPANCY_CUTOFF = 0.875
+
+WeightOperand = Union[jnp.ndarray, np.ndarray, formats.TiledTernary,
+                      Tuple[jnp.ndarray, jnp.ndarray]]
 
 
 def _auto_interpret() -> bool:
@@ -31,7 +61,12 @@ def pack_weights(t: np.ndarray) -> np.ndarray:
     return formats.pack_2bit(np.asarray(t), word=WORDS)
 
 
-WORDS = 32
+def pack_weights_tiled(t: np.ndarray, tile_k: int = 256,
+                       tile_n: int = 128) -> formats.TiledTernary:
+    """Host-side: (K, N) {-1,0,1} -> TiledTernary (packed words + per-tile
+    occupancy metadata) for the skipping kernel."""
+    return formats.TiledTernary.from_dense(np.asarray(t), tile_k=tile_k,
+                                           tile_n=tile_n)
 
 
 def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
@@ -44,72 +79,216 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
     return jnp.pad(x, widths)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9, 10))
-def ternary_gemm(
-    x: jnp.ndarray,
-    w_packed: jnp.ndarray,
-    scale: Optional[jnp.ndarray] = None,
-    bias: Optional[jnp.ndarray] = None,
-    k: Optional[int] = None,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_k: int = 512,
-    fuse_prelu: bool = False,
-    prelu_alpha: float = 0.25,
-    interpret: Optional[bool] = None,
-) -> jnp.ndarray:
-    """Y = X @ decode(w_packed) * scale + bias (+PReLU). Any (M, K, N)."""
-    m, kx = x.shape
-    k = kx if k is None else k
-    kw, n = w_packed.shape
-    assert kw * K_PER_WORD >= k
-    interpret = _auto_interpret() if interpret is None else interpret
+# ---------------------------------------------------------------------------
+# 2-bit-code family (dense + skipping share the packed format and the VJP)
+# ---------------------------------------------------------------------------
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10, 11, 12))
+def _gemm_2bit(x, w_packed, scale, bias, kt_idx, kt_cnt,
+               n, block_m, block_n, block_k, fuse_prelu, prelu_alpha,
+               interpret):
+    """Forward: dense kernel when kt_idx is None, else the skipping kernel.
+    Returns the (m, n)-sliced logical output."""
+    m = x.shape[0]
     bm = min(block_m, max(8, 1 << (m - 1).bit_length()))
-    xp = _pad_to(_pad_to(x, 0, bm), 1, block_k)
-    wp = _pad_to(_pad_to(w_packed, 0, block_k // K_PER_WORD), 1, block_n)
     sp = None if scale is None else _pad_to(scale.reshape(-1), 0, block_n)
     bp = None if bias is None else _pad_to(bias.reshape(-1), 0, block_n)
-
-    y = ternary_gemm_pallas(
-        xp, wp, sp, bp,
-        block_m=bm, block_n=block_n, block_k=block_k,
-        fuse_prelu=fuse_prelu, prelu_alpha=prelu_alpha, interpret=interpret)
+    # x's K must first match the packed operand's (possibly padded) K — the
+    # word rows can exceed ceil(k/block_k)*block_k when the pack used a
+    # larger tile_k than the resolved block_k.
+    kp = w_packed.shape[0] * K_PER_WORD
+    xp = _pad_to(_pad_to(x, 1, kp), 0, bm)
+    if kt_idx is None:
+        xp = _pad_to(xp, 1, block_k)
+        wp = _pad_to(_pad_to(w_packed, 0, block_k // K_PER_WORD), 1, block_n)
+        y = ternary_gemm_pallas(
+            xp, wp, sp, bp, block_m=bm, block_n=block_n, block_k=block_k,
+            fuse_prelu=fuse_prelu, prelu_alpha=prelu_alpha,
+            interpret=interpret)
+    else:
+        y = ternary_gemm_skip_pallas(
+            xp, w_packed, kt_idx, kt_cnt, sp, bp,
+            block_m=bm, block_n=block_n, block_k=block_k,
+            fuse_prelu=fuse_prelu, prelu_alpha=prelu_alpha,
+            interpret=interpret)
     return y[:m, :n]
 
 
-def _fwd(x, w_packed, scale, bias, k, bm, bn, bk, fuse_prelu, prelu_alpha,
-         interpret):
-    y = ternary_gemm(x, w_packed, scale, bias, k, bm, bn, bk, fuse_prelu,
-                     prelu_alpha, interpret)
-    return y, (x, w_packed, scale, y if fuse_prelu else None)
+def _gemm_2bit_fwd(x, w_packed, scale, bias, kt_idx, kt_cnt, *static):
+    y = _gemm_2bit(x, w_packed, scale, bias, kt_idx, kt_cnt, *static)
+    fuse_prelu = static[4]
+    return y, (x, w_packed, scale, bias, kt_idx, kt_cnt,
+               y if fuse_prelu else None)
 
 
-def _bwd(k, bm, bn, bk, fuse_prelu, prelu_alpha, interpret, res, g):
-    x, w_packed, scale, y = res
-    kk = x.shape[1] if k is None else k
+def _gemm_2bit_bwd(n, bm, bn, bk, fuse_prelu, prelu_alpha, interpret,
+                   res, g):
+    x, w_packed, scale, bias, kt_idx, kt_cnt, y = res
+    kk = x.shape[1]  # logical K is x's trailing dim (x is unpadded)
     if fuse_prelu:
         g = jnp.where(y >= 0, g, prelu_alpha * g)
-    gb = jnp.sum(g, axis=0)                       # bias grad
+    # Bias grad exists only when a bias operand exists (scale is irrelevant).
+    gb = (None if bias is None
+          else jnp.sum(g, axis=0).astype(bias.dtype).reshape(bias.shape))
+    t = formats.decode_2bit(w_packed, kk, dtype=x.dtype)[:, :n]
     if scale is not None:
-        # y_pre_scale is not stored; scale grad via recompute-free identity:
-        # dL/dscale = sum_m g * (x @ T)  = sum_m g * (y_lin); approximate via
-        # decode path (exact, costs one decode+matmul).
-        t = formats.decode_2bit(w_packed, kk, dtype=x.dtype)
+        # dL/dscale = sum_m g * (x @ T): exact, costs one decode+matmul.
         ylin = jnp.dot(x, t, preferred_element_type=jnp.float32)
         gscale = jnp.sum(g.astype(jnp.float32) * ylin, axis=0).astype(
             scale.dtype).reshape(scale.shape)
         g = g * scale.reshape(1, -1).astype(g.dtype)
-        gx = jnp.dot(g, t.T, preferred_element_type=jnp.float32).astype(x.dtype)
     else:
-        t = formats.decode_2bit(w_packed, kk, dtype=x.dtype)
         gscale = None
-        gx = jnp.dot(g, t.T, preferred_element_type=jnp.float32).astype(x.dtype)
-    return (gx, jnp.zeros_like(w_packed), gscale,
-            None if res[2] is None and gb is None else gb)
+    gx = jnp.dot(g, t.T, preferred_element_type=jnp.float32).astype(x.dtype)
+    return (gx, jnp.zeros_like(w_packed), gscale, gb,
+            None if kt_idx is None else jnp.zeros_like(kt_idx),
+            None if kt_cnt is None else jnp.zeros_like(kt_cnt))
 
 
-ternary_gemm.defvjp(_fwd, _bwd)
+_gemm_2bit.defvjp(_gemm_2bit_fwd, _gemm_2bit_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Bitplane family (combined decode / plane-factorized)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _gemm_bitplane(x, plus, minus, scale, block_m, block_n, block_k,
+                   factorized, interpret):
+    return ternary_gemm_bitplane(
+        x, plus, minus, scale, block_m=block_m, block_n=block_n,
+        block_k=block_k, factorized=factorized, interpret=interpret)
+
+
+def _gemm_bitplane_fwd(x, plus, minus, scale, *static):
+    y = _gemm_bitplane(x, plus, minus, scale, *static)
+    return y, (x, plus, minus, scale)
+
+
+def _gemm_bitplane_bwd(bm, bn, bk, factorized, interpret, res, g):
+    x, plus, minus, scale = res
+    kk = x.shape[1]
+    t = formats.decode_bitplanes(plus, minus, kk, dtype=x.dtype)
+    t = t[:, :g.shape[1]]
+    if scale is not None:
+        ylin = jnp.dot(x, t, preferred_element_type=jnp.float32)
+        gscale = jnp.sum(g.astype(jnp.float32) * ylin, axis=0).astype(
+            scale.dtype).reshape(scale.shape)
+        g = g * scale.reshape(1, -1).astype(g.dtype)
+    else:
+        gscale = None
+    gx = jnp.dot(g, t.T, preferred_element_type=jnp.float32).astype(x.dtype)
+    return gx, jnp.zeros_like(plus), jnp.zeros_like(minus), gscale
+
+
+_gemm_bitplane.defvjp(_gemm_bitplane_fwd, _gemm_bitplane_bwd)
+
+
+# ---------------------------------------------------------------------------
+# The dispatcher
+# ---------------------------------------------------------------------------
+
+def _resolve_impl(w: WeightOperand, impl: str) -> str:
+    if isinstance(w, formats.TiledTernary):
+        if impl == "auto":
+            return ("skip"
+                    if w.occupancy_fraction() <= SKIP_OCCUPANCY_CUTOFF
+                    else "dense")
+        return impl
+    if isinstance(w, (tuple, list)):
+        return {"auto": "bitplane"}.get(impl, impl)
+    return {"auto": "dense"}.get(impl, impl)
+
+
+def ternary_gemm(
+    x: jnp.ndarray,
+    w: WeightOperand,
+    scale: Optional[jnp.ndarray] = None,
+    bias: Optional[jnp.ndarray] = None,
+    k: Optional[int] = None,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
+    fuse_prelu: bool = False,
+    prelu_alpha: float = 0.25,
+    interpret: Optional[bool] = None,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    """Y = X @ decode(w) * scale + bias (+PReLU). Any (M, K, N).
+
+    ``w`` is a packed uint32 code matrix, a ``formats.TiledTernary``, or a
+    ``(plus, minus)`` bitplane pair; ``impl`` routes (see module docstring).
+    ``block_*`` left as ``None`` consult the autotuner.
+    """
+    interpret = _auto_interpret() if interpret is None else interpret
+    impl = _resolve_impl(w, impl)
+    m = x.shape[0]
+    tuner = autotune_lib.get_tuner()
+
+    if impl == "skip":
+        assert isinstance(w, formats.TiledTernary), \
+            "impl='skip' needs a TiledTernary weight operand"
+        kk, n = w.shape
+        assert k is None or k == kk, (k, kk)
+        # Pack-time tile shapes dictate the kernel's K/N blocks.
+        assert block_n is None or block_n == w.tile_n, (block_n, w.tile_n)
+        assert block_k is None or block_k == w.tile_k, (block_k, w.tile_k)
+        bm = block_m if block_m is not None else tuner.lookup(
+            m, kk, n, sparsity=w.occupancy_fraction(), impl="skip",
+            fixed_n=w.tile_n, fixed_k=w.tile_k).block_m
+        return _gemm_2bit(x, jnp.asarray(w.packed), scale, bias,
+                          jnp.asarray(w.kt_indices), jnp.asarray(w.kt_counts),
+                          n, bm, w.tile_n, w.tile_k,
+                          fuse_prelu, prelu_alpha, interpret)
+
+    if impl in ("bitplane", "bitplane_factorized"):
+        assert isinstance(w, (tuple, list)) and len(w) == 2, \
+            f"impl={impl!r} needs a (plus, minus) bitplane pair"
+        plus, minus = w
+        kb, n = plus.shape
+        kk = x.shape[1] if k is None else k
+        assert kb * K_PER_BYTE >= kk
+        if block_m is None or block_n is None or block_k is None:
+            cfg = tuner.lookup(m, kk, n, impl=impl)
+            block_m = block_m if block_m is not None else cfg.block_m
+            block_n = block_n if block_n is not None else cfg.block_n
+            block_k = block_k if block_k is not None else cfg.block_k
+        bm, bn, bk = block_m, block_n, block_k
+        xp = _pad_to(x, 1, kb * K_PER_BYTE)
+        y = _gemm_bitplane(xp, plus, minus, scale, bm, bn, bk,
+                           impl == "bitplane_factorized", interpret)
+        if bias is not None:
+            y = y + bias.reshape(1, -1).astype(y.dtype)
+        if fuse_prelu:
+            y = jnp.where(y >= 0, y, jnp.asarray(prelu_alpha, y.dtype) * y)
+        return y
+
+    # 2-bit-code paths ("dense" / "ref")
+    if isinstance(w, formats.TiledTernary):
+        # packed word columns map 1:1 to W columns -> drop the N padding
+        w_packed = jnp.asarray(w.packed)[:, :w.shape[1]]
+    else:
+        w_packed = w
+    kw, n = w_packed.shape
+    kk = x.shape[1] if k is None else k
+    assert kw * K_PER_WORD >= kk, (kw, kk)
+
+    if impl == "ref":
+        return ref.packed2bit_matmul(
+            x, w_packed, kk, alpha=scale, bias=bias,
+            prelu_alpha=prelu_alpha if fuse_prelu else None)[:, :n]
+
+    assert impl == "dense", f"unknown impl {impl!r}"
+    if block_m is None or block_n is None or block_k is None:
+        sparsity = (w.occupancy_fraction()
+                    if isinstance(w, formats.TiledTernary) else 1.0)
+        cfg = tuner.lookup(m, kk, n, sparsity=sparsity, impl="dense")
+        block_m = block_m if block_m is not None else cfg.block_m
+        block_n = block_n if block_n is not None else cfg.block_n
+        block_k = block_k if block_k is not None else cfg.block_k
+    bm, bn, bk = block_m, block_n, block_k
+    return _gemm_2bit(x, w_packed, scale, bias, None, None,
+                      n, bm, bn, bk, fuse_prelu, prelu_alpha, interpret)
 
 
 class TernaryGemmConfig:
@@ -120,9 +299,5 @@ class TernaryGemmConfig:
         self.block_m, self.block_n, self.block_k = block_m, block_n, block_k
 
     def vmem_bytes(self, dtype_bytes=2) -> int:
-        x = self.block_m * self.block_k * dtype_bytes
-        w = (self.block_k // K_PER_WORD) * self.block_n * 4
-        dec = self.block_k * self.block_n * dtype_bytes
-        acc = self.block_m * self.block_n * 4
-        out = self.block_m * self.block_n * dtype_bytes
-        return x + w + dec + acc + out
+        return autotune_lib.BlockConfig(
+            self.block_m, self.block_n, self.block_k).vmem_bytes(dtype_bytes)

@@ -24,6 +24,7 @@ __all__ = [
     "tcsc_matmul_interleaved",
     "packed2bit_matmul",
     "bitplane_matmul",
+    "bitplane_matmul_factorized",
     "base3_matmul",
 ]
 
@@ -123,6 +124,23 @@ def bitplane_matmul(x: jnp.ndarray, plus: jnp.ndarray, minus: jnp.ndarray,
                     prelu_alpha: Optional[float] = None) -> jnp.ndarray:
     t = formats.decode_bitplanes(plus, minus, k, dtype=x.dtype)
     return ternary_matmul_dense(x, t, alpha, bias, prelu_alpha)
+
+
+def bitplane_matmul_factorized(x: jnp.ndarray, plus: jnp.ndarray,
+                               minus: jnp.ndarray, k: int,
+                               alpha: Optional[jnp.ndarray] = None,
+                               bias: Optional[jnp.ndarray] = None,
+                               prelu_alpha: Optional[float] = None
+                               ) -> jnp.ndarray:
+    """Matmul factorization Y = (X @ P) - (X @ M): each 0/1 plane is its own
+    binary matmul, the ternary combine happens on the accumulator
+    (DESIGN.md §4). Oracle for the factorized Pallas path."""
+    zeros = jnp.zeros_like(plus)
+    p = formats.decode_bitplanes(plus, zeros, k, dtype=x.dtype)
+    m = formats.decode_bitplanes(minus, zeros, k, dtype=x.dtype)
+    y = (jnp.dot(x, p, preferred_element_type=jnp.float32)
+         - jnp.dot(x, m, preferred_element_type=jnp.float32))
+    return _epilogue(y, alpha, bias, prelu_alpha).astype(x.dtype)
 
 
 def base3_matmul(x: jnp.ndarray, packed: jnp.ndarray, k: int,

@@ -39,7 +39,13 @@ from jax.experimental.pallas import tpu as pltpu
 WORD_BITS = 32
 K_PER_WORD = WORD_BITS // 2  # 16 ternary weights per uint32 word
 
-__all__ = ["ternary_gemm_pallas", "K_PER_WORD"]
+# jax renamed TPUCompilerParams -> CompilerParams across versions; if a jax
+# exposes neither, fail at import (AttributeError naming pltpu), not at the
+# first kernel launch.
+CompilerParams = (getattr(pltpu, "CompilerParams", None)
+                  or pltpu.TPUCompilerParams)
+
+__all__ = ["ternary_gemm_pallas", "ternary_gemm_skip_pallas", "K_PER_WORD"]
 
 
 def _decode_tile(words: jnp.ndarray, out_dtype) -> jnp.ndarray:
@@ -134,8 +140,132 @@ def ternary_gemm_pallas(
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(*operands)
+
+
+# ---------------------------------------------------------------------------
+# Sparsity-adaptive path: skip structurally-empty (block_k x block_n) tiles
+# ---------------------------------------------------------------------------
+
+def _skip_kernel(idx_ref, cnt_ref, x_ref, w_ref, scale_ref, bias_ref, o_ref,
+                 acc_ref, *, max_occ: int, fuse_prelu: bool,
+                 prelu_alpha: float):
+    j = pl.program_id(1)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Padded steps (s >= kt_counts[j]) re-point the DMA at a known tile and
+    # contribute nothing; the guard keeps the accumulation exactly the sum
+    # over occupied tiles in ascending K order.
+    @pl.when(s < cnt_ref[j])
+    def _body():
+        t = _decode_tile(w_ref[...], x_ref.dtype)
+        acc_ref[...] += jnp.dot(x_ref[...], t,
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(s == max_occ - 1)
+    def _epilogue():
+        y = acc_ref[...]
+        if scale_ref is not None:
+            y = y * scale_ref[...].astype(jnp.float32)
+        if bias_ref is not None:
+            y = y + bias_ref[...].astype(jnp.float32)
+        if fuse_prelu:
+            y = jnp.where(y >= 0, y, prelu_alpha * y)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "fuse_prelu",
+                     "prelu_alpha", "interpret"),
+)
+def ternary_gemm_skip_pallas(
+    x: jnp.ndarray,                    # (M, K) f32/bf16, pre-padded
+    w_packed: jnp.ndarray,             # (K / 16, N) uint32 2-bit codes
+    kt_indices: jnp.ndarray,           # (N/block_n, max_occ) int32
+    kt_counts: jnp.ndarray,            # (N/block_n,) int32
+    scale: Optional[jnp.ndarray] = None,
+    bias: Optional[jnp.ndarray] = None,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 256,
+    fuse_prelu: bool = False,
+    prelu_alpha: float = 0.25,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Tile-skipping ternary GEMM (DESIGN.md §3).
+
+    ``kt_indices``/``kt_counts`` are the ``TiledTernary`` occupancy metadata
+    (pack-time tile shapes must equal ``block_k``/``block_n``). They ride in
+    as scalar-prefetch operands, so the BlockSpec index maps can steer the
+    K grid dimension through *occupied* K-tiles only: the grid is
+    (M/bm, N/bn, max_occ) instead of (M/bm, N/bn, K/bk) — empty tiles are
+    never DMA'd, decoded, or matmul'd. Semantics are exactly the dense
+    kernel's (zero tiles contribute exact f32 zeros there).
+    """
+    m, k = x.shape
+    kw, n = w_packed.shape
+    assert kw * K_PER_WORD == k, (kw, k)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, \
+        (m, n, k, block_m, block_n, block_k)
+    nn = n // block_n
+    assert kt_indices.shape[0] == nn and kt_counts.shape == (nn,), \
+        (kt_indices.shape, kt_counts.shape, nn)
+    max_occ = kt_indices.shape[1]
+    bkw = block_k // K_PER_WORD
+
+    in_specs = [
+        pl.BlockSpec((block_m, block_k),
+                     lambda i, j, s, idx, cnt: (i, idx[j, s])),
+        pl.BlockSpec((bkw, block_n),
+                     lambda i, j, s, idx, cnt: (idx[j, s], j)),
+    ]
+    operands = [x, w_packed]
+    if scale is not None:
+        in_specs.append(pl.BlockSpec((1, block_n),
+                                     lambda i, j, s, idx, cnt: (0, j)))
+        operands.append(scale.reshape(1, n))
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, block_n),
+                                     lambda i, j, s, idx, cnt: (0, j)))
+        operands.append(bias.reshape(1, n))
+
+    def kernel(idx_ref, cnt_ref, *refs):
+        x_ref, w_ref = refs[0], refs[1]
+        pos = 2
+        s_ref = b_ref = None
+        if scale is not None:
+            s_ref = refs[pos]; pos += 1
+        if bias is not None:
+            b_ref = refs[pos]; pos += 1
+        o_ref, acc_ref = refs[pos], refs[pos + 1]
+        _skip_kernel(idx_ref, cnt_ref, x_ref, w_ref, s_ref, b_ref, o_ref,
+                     acc_ref, max_occ=max_occ, fuse_prelu=fuse_prelu,
+                     prelu_alpha=prelu_alpha)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(m // block_m, nn, max_occ),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, block_n),
+                               lambda i, j, s, idx, cnt: (i, j)),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(kt_indices, kt_counts, *operands)

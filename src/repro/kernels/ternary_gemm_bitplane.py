@@ -8,6 +8,12 @@ Same grid/accumulation structure as the 2-bit kernel; decode is
 paper's interleaving insight as pure data-parallel arithmetic). 2 bits/weight
 like the 2-bit codes, but the two planes can also be streamed independently
 (e.g. plus-plane-only for unsigned masks).
+
+``factorized=True`` switches to the matmul factorization
+``Y = (X @ P) - (X @ M)`` (DESIGN.md §4): each 0/1 plane is bit-expanded and
+fed to the MXU as its own binary matmul, and the ternary combine happens
+once on the (bm, bn) accumulator instead of per-element on the (bk, bn)
+decode — no signed ternary tile is ever materialized.
 """
 from __future__ import annotations
 
@@ -19,9 +25,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.ternary_gemm import CompilerParams
+
 K_PER_BYTE = 8
 
 __all__ = ["ternary_gemm_bitplane"]
+
+
+def _unpack_plane(plane, out_dtype):
+    """(bk/8, bn) uint8 plane -> (bk, bn) 0/1 tile (no sign combine)."""
+    q, bn = plane.shape
+    shifts = jax.lax.broadcasted_iota(jnp.uint8, (1, K_PER_BYTE, 1), 1)
+    bits = (plane[:, None, :] >> shifts) & 1
+    return bits.reshape(q * K_PER_BYTE, bn).astype(out_dtype)
 
 
 def _decode_planes(plus, minus, out_dtype):
@@ -34,16 +50,26 @@ def _decode_planes(plus, minus, out_dtype):
     return vals.reshape(q * K_PER_BYTE, bn).astype(out_dtype)
 
 
-def _kernel(x_ref, p_ref, m_ref, scale_ref, o_ref, acc_ref, *, nk: int):
+def _kernel(x_ref, p_ref, m_ref, scale_ref, o_ref, acc_ref, *, nk: int,
+            factorized: bool = False):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    t = _decode_planes(p_ref[...], m_ref[...], x_ref.dtype)
-    acc_ref[...] += jnp.dot(x_ref[...], t,
-                            preferred_element_type=jnp.float32)
+    if factorized:
+        # Y = (X @ P) - (X @ M): two binary-plane MXU passes, ternary
+        # combine deferred to the accumulator (DESIGN.md §4).
+        p = _unpack_plane(p_ref[...], x_ref.dtype)
+        m = _unpack_plane(m_ref[...], x_ref.dtype)
+        acc_ref[...] += (
+            jnp.dot(x_ref[...], p, preferred_element_type=jnp.float32)
+            - jnp.dot(x_ref[...], m, preferred_element_type=jnp.float32))
+    else:
+        t = _decode_planes(p_ref[...], m_ref[...], x_ref.dtype)
+        acc_ref[...] += jnp.dot(x_ref[...], t,
+                                preferred_element_type=jnp.float32)
 
     @pl.when(k == nk - 1)
     def _epilogue():
@@ -54,7 +80,8 @@ def _kernel(x_ref, p_ref, m_ref, scale_ref, o_ref, acc_ref, *, nk: int):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "factorized",
+                              "interpret"))
 def ternary_gemm_bitplane(
     x: jnp.ndarray,                 # (M, K)
     plus: jnp.ndarray,              # (K/8, N) uint8
@@ -64,6 +91,7 @@ def ternary_gemm_bitplane(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 512,
+    factorized: bool = False,
     interpret: bool = False,
 ) -> jnp.ndarray:
     m, k = x.shape
@@ -97,7 +125,8 @@ def ternary_gemm_bitplane(
     def kernel(*refs):
         s_ref = refs[3] if sp is not None else None
         o_ref, acc_ref = refs[-2], refs[-1]
-        _kernel(refs[0], refs[1], refs[2], s_ref, o_ref, acc_ref, nk=nkk)
+        _kernel(refs[0], refs[1], refs[2], s_ref, o_ref, acc_ref, nk=nkk,
+                factorized=factorized)
 
     y = pl.pallas_call(
         kernel,
@@ -106,7 +135,7 @@ def ternary_gemm_bitplane(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mm, nn), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(*operands)

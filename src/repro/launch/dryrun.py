@@ -172,7 +172,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     compiled = lowered.compile()
     t_compile = time.time() - t0 - t_lower
 
-    cost = compiled.cost_analysis() or {}
+    cost = hlo_cost.xla_cost(compiled)
     mem = _mem_dict(compiled.memory_analysis())
     hlo_text = compiled.as_text()
     # Trip-count-aware walk (XLA's cost_analysis counts scan bodies once —

@@ -31,6 +31,15 @@ import dataclasses
 import re
 from typing import Dict, List, Optional, Tuple
 
+
+def xla_cost(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across jax versions (older
+    releases return ``[dict]`` per device, newer ones a flat dict)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
 _DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
                 "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1,
                 "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1,

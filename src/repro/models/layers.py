@@ -71,13 +71,29 @@ def _is_ternary(cfg: ModelConfig, d_in: int, d_out: int) -> bool:
             and min(d_in, d_out) >= cfg.ternary_min_dim)
 
 
+def _use_pallas_gemm(cfg: ModelConfig) -> bool:
+    if cfg.ternary_kernel == "pallas":
+        return True
+    if cfg.ternary_kernel == "xla":
+        return False
+    return jax.default_backend() == "tpu"
+
+
 def linear_apply(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
     """x: (..., d_in) -> (..., d_out)."""
     if "w_packed" in params:
         k = x.shape[-1]
         lead = x.shape[:-1]
-        y = kref.packed2bit_matmul(x.reshape(-1, k), params["w_packed"], k,
-                                   alpha=params["w_scale"])
+        x2 = x.reshape(-1, k)
+        if _use_pallas_gemm(cfg):
+            # Autotuned Pallas kernel (blocks=None -> kernels.autotune pick);
+            # on CPU the XLA dense-decode path below is the faster oracle.
+            from repro.kernels import ops as kops
+            y = kops.ternary_gemm(x2, params["w_packed"],
+                                  scale=params["w_scale"], k=k)
+        else:
+            y = kref.packed2bit_matmul(x2, params["w_packed"], k,
+                                       alpha=params["w_scale"])
         y = y.reshape(*lead, -1)
     else:
         w = params["w"]

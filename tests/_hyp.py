@@ -1,0 +1,57 @@
+"""Hypothesis compatibility shim.
+
+The property tests use a tiny slice of hypothesis (``given``/``settings`` +
+``integers``/``floats``/``sampled_from`` strategies). When the real package
+is installed we re-export it; otherwise a minimal seeded-random fallback
+runs each property over ``max_examples`` deterministic draws, so tier-1
+collection and the properties themselves still run in containers without
+hypothesis. No shrinking/reporting — install hypothesis for real fuzzing.
+"""
+try:
+    from hypothesis import given, settings       # noqa: F401
+    import hypothesis.strategies as st           # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 — mimics hypothesis.strategies
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+    def settings(max_examples=20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # No functools.wraps: pytest must see a zero-arg function, not
+            # the wrapped signature (it would resolve params as fixtures).
+            def wrapper():
+                rng = random.Random(0)
+                n = getattr(wrapper, "_max_examples", 20)
+                for _ in range(n):
+                    fn(**{name: s.draw(rng)
+                          for name, s in strategies.items()})
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

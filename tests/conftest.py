@@ -1,8 +1,16 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the 1 real CPU
 device; multi-device GSPMD tests spawn subprocesses that set the flag
 themselves (see test_distributed.py)."""
+import os
+import tempfile
+
 import numpy as np
 import pytest
+
+# Keep autotune-cache writes out of the repo checkout during test runs.
+os.environ.setdefault(
+    "REPRO_AUTOTUNE_CACHE",
+    os.path.join(tempfile.mkdtemp(prefix="repro-autotune-"), "cache.json"))
 
 
 @pytest.fixture

@@ -1,12 +1,10 @@
 """Format round-trips + hypothesis property tests (paper's TCSC family and
 the TPU packed formats)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
+from _hyp import given, settings, st
 from repro.core import formats
 
 SPARSITIES = [0.5, 0.25, 0.125, 0.0625]

@@ -22,7 +22,7 @@ def test_matches_xla_on_unrolled():
     ws = jax.ShapeDtypeStruct((10, 64, 64), jnp.float32)
     c = jax.jit(f).lower(x, ws).compile()
     mine = hlo_cost.analyze(c.as_text())
-    xla = c.cost_analysis()["flops"]
+    xla = hlo_cost.xla_cost(c)["flops"]
     assert abs(mine.flops - xla) / xla < 0.02
 
 
@@ -41,7 +41,7 @@ def test_recovers_scan_trip_count():
     want = _dots_flops(10, 64)
     assert abs(mine.flops - want) / want < 0.05
     # XLA itself undercounts (documents why the walker exists)
-    assert c.cost_analysis()["flops"] < want / 2
+    assert hlo_cost.xla_cost(c)["flops"] < want / 2
 
 
 def test_nested_scans_multiply():

@@ -5,9 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-import hypothesis.strategies as st
 
+from _hyp import given, settings, st
 from repro.core import formats
 from repro.kernels import ops, ref
 
@@ -84,6 +83,48 @@ def test_kernel_vjp():
     g_ref = jax.grad(f_ref)(x)
     np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
                                rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("use_scale", [False, True])
+@pytest.mark.parametrize("use_bias", [False, True])
+def test_kernel_vjp_scale_bias_combos(use_scale, use_bias):
+    """All four scale/bias presence combinations must differentiate
+    correctly — the bias grad must exist iff a bias operand exists (the
+    old _bwd keyed the bias grad off scale's presence)."""
+    x, w, packed = _setup(8, 64, 48, 0.5, seed=3)
+    rng = np.random.default_rng(4)
+    alpha = jnp.asarray(rng.standard_normal(48) ** 2 + 0.1, jnp.float32) \
+        if use_scale else None
+    bias = jnp.asarray(rng.standard_normal(48), jnp.float32) \
+        if use_bias else None
+
+    def f(xx):
+        return jnp.sum(ops.ternary_gemm(xx, packed, alpha, bias, k=64,
+                                        block_n=16, block_k=32) ** 2)
+
+    def f_ref(xx):
+        return jnp.sum(ref.ternary_matmul_dense(xx, jnp.asarray(w), alpha,
+                                                bias) ** 2)
+
+    np.testing.assert_allclose(np.asarray(jax.grad(f)(x)),
+                               np.asarray(jax.grad(f_ref)(x)),
+                               rtol=1e-3, atol=1e-3)
+    if use_scale:
+        gs = jax.grad(lambda a: jnp.sum(
+            ops.ternary_gemm(x, packed, a, bias, k=64, block_n=16,
+                             block_k=32) ** 2))(alpha)
+        gs_ref = jax.grad(lambda a: jnp.sum(
+            ref.ternary_matmul_dense(x, jnp.asarray(w), a, bias) ** 2))(alpha)
+        np.testing.assert_allclose(np.asarray(gs), np.asarray(gs_ref),
+                                   rtol=1e-3, atol=1e-3)
+    if use_bias:
+        gb = jax.grad(lambda b: jnp.sum(
+            ops.ternary_gemm(x, packed, alpha, b, k=64, block_n=16,
+                             block_k=32) ** 2))(bias)
+        gb_ref = jax.grad(lambda b: jnp.sum(
+            ref.ternary_matmul_dense(x, jnp.asarray(w), alpha, b) ** 2))(bias)
+        np.testing.assert_allclose(np.asarray(gb), np.asarray(gb_ref),
+                                   rtol=1e-3, atol=1e-3)
 
 
 def test_all_reference_variants_agree():

@@ -1,12 +1,11 @@
 """Ternary quantization properties: TWN values/scales, target-sparsity
 quantile, straight-through gradients."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
+from _hyp import given, settings, st
 from repro.core import quantize
 
 

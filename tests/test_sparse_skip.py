@@ -1,0 +1,256 @@
+"""Sparsity-adaptive path: TiledTernary occupancy metadata, the
+scalar-prefetch tile-skipping kernel (interpret-mode parity + bit-exactness
+vs the dense-decode kernel), the plane-factorized bitplane path, the
+dispatcher, and the block-shape autotuner's JSON cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import formats
+from repro.kernels import ops, ref
+from repro.kernels.autotune import Autotuner, BlockConfig, cache_key
+
+SPARSITIES = [0.5, 0.25, 0.125, 0.0625]
+
+
+def _tile_setup(m, k, n, s, tile_k=32, tile_n=16, seed=0):
+    rng = np.random.default_rng(seed)
+    kp = -(-k // tile_k) * tile_k
+    npad = -(-n // tile_n) * tile_n
+    w = formats.random_tile_ternary(rng, kp, npad, tile_k, tile_n, s)[:k, :n]
+    tt = formats.TiledTernary.from_dense(w, tile_k=tile_k, tile_n=tile_n)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    return x, w, tt
+
+
+# ---------------------------------------------------------------------------
+# TiledTernary metadata
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s", SPARSITIES)
+@pytest.mark.parametrize("k,n", [(128, 64), (96, 40), (200, 33)])
+def test_tiled_occupancy_matches_count_nonzero(k, n, s):
+    _, w, tt = _tile_setup(4, k, n, s)
+    kp = tt.n_ktiles * tt.tile_k
+    npad = tt.n_ntiles * tt.tile_n
+    wp = np.zeros((kp, npad), np.int8)
+    wp[:k, :n] = w
+    for kt in range(tt.n_ktiles):
+        for nt in range(tt.n_ntiles):
+            tile = wp[kt * tt.tile_k:(kt + 1) * tt.tile_k,
+                      nt * tt.tile_n:(nt + 1) * tt.tile_n]
+            assert tt.tile_nnz[kt, nt] == np.count_nonzero(tile)
+    # kt_indices prefix = sorted occupied ids; padding points at empty tiles
+    occ = tt.occupancy()
+    for j in range(tt.n_ntiles):
+        cnt = int(tt.kt_counts[j])
+        np.testing.assert_array_equal(tt.kt_indices[j, :cnt],
+                                      np.nonzero(occ[:, j])[0])
+        for pad_id in tt.kt_indices[j, cnt:]:
+            assert not occ[pad_id, j] or cnt == tt.n_ktiles
+    assert (tt.to_dense() == w).all()
+
+
+def test_tiled_roundtrip_and_counts():
+    _, w, tt = _tile_setup(4, 96, 48, 0.25)
+    assert tt.occupied_tiles() == int((tt.tile_nnz > 0).sum())
+    assert tt.total_tiles() == tt.n_ktiles * tt.n_ntiles
+    assert 0.0 < tt.occupancy_fraction() <= 1.0
+    assert tt.visited_tiles() >= tt.occupied_tiles() // tt.n_ntiles
+
+
+# ---------------------------------------------------------------------------
+# Skipping kernel parity (interpret mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s", SPARSITIES)
+@pytest.mark.parametrize("m,k,n", [(8, 128, 64), (12, 96, 40), (32, 256, 96)])
+def test_skip_kernel_matches_reference(m, k, n, s):
+    x, w, tt = _tile_setup(m, k, n, s)
+    y0 = ref.ternary_matmul_dense(x, jnp.asarray(w))
+    y = ops.ternary_gemm(x, tt, impl="skip")
+    assert y.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("s", SPARSITIES)
+def test_skip_kernel_bit_exact_vs_dense(s):
+    """Same accumulation order and f32 arithmetic -> identical bits: the
+    skipped tiles are exactly the ones that contribute f32 zeros densely."""
+    m, k, n = 16, 256, 64
+    x, w, tt = _tile_setup(m, k, n, s, tile_k=64, tile_n=32, seed=7)
+    y_skip = ops.ternary_gemm(x, tt, impl="skip")
+    y_dense = ops.ternary_gemm(x, jnp.asarray(tt.packed), k=k,
+                               block_n=32, block_k=64, impl="dense")[:, :n]
+    assert np.array_equal(np.asarray(y_skip), np.asarray(y_dense))
+
+
+def test_skip_kernel_epilogue_and_empty_columns():
+    m, k, n = 8, 128, 64
+    rng = np.random.default_rng(5)
+    w = formats.random_tile_ternary(rng, k, n, 32, 16, 0.25)
+    w[:, 16:32] = 0                       # a fully-empty N-tile column
+    tt = formats.TiledTernary.from_dense(w, tile_k=32, tile_n=16)
+    assert int(tt.kt_counts[1]) == 0
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    alpha = jnp.asarray(rng.standard_normal(n) ** 2 + 0.1, jnp.float32)
+    bias = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    y0 = ref.ternary_matmul_dense(x, jnp.asarray(w), alpha, bias,
+                                  prelu_alpha=0.25)
+    y = ops.ternary_gemm(x, tt, alpha, bias, fuse_prelu=True, impl="skip")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_skip_kernel_grad():
+    m, k, n = 8, 96, 48
+    x, w, tt = _tile_setup(m, k, n, 0.25, seed=9)
+    g = jax.grad(lambda xx: jnp.sum(ops.ternary_gemm(xx, tt) ** 2))(x)
+    g0 = jax.grad(lambda xx: jnp.sum(
+        ref.ternary_matmul_dense(xx, jnp.asarray(w)) ** 2))(x)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g0),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher
+# ---------------------------------------------------------------------------
+
+def test_dispatcher_auto_picks_skip_for_sparse():
+    _, _, tt = _tile_setup(4, 128, 64, 0.0625)
+    assert ops._resolve_impl(tt, "auto") == "skip"
+    dense_w = formats.random_ternary(np.random.default_rng(0), 64, 32, 0.5)
+    tt_dense = formats.TiledTernary.from_dense(dense_w, tile_k=16, tile_n=16)
+    # unstructured 1/2-sparse weights occupy every tile -> dense fallback
+    assert tt_dense.occupancy_fraction() == 1.0
+    assert ops._resolve_impl(tt_dense, "auto") == "dense"
+    assert ops._resolve_impl(jnp.zeros((4, 8), jnp.uint32), "auto") == "dense"
+    # dense fallback on a TiledTernary operand still computes correctly
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((4, 64)),
+                    jnp.float32)
+    y = ops.ternary_gemm(x, tt_dense)
+    y0 = ref.ternary_matmul_dense(x, jnp.asarray(dense_w))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dispatcher_bitplane_paths():
+    m, k, n = 8, 128, 64
+    rng = np.random.default_rng(11)
+    w = formats.random_ternary(rng, k, n, 0.25)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    planes = tuple(jnp.asarray(a) for a in formats.pack_bitplanes(w))
+    alpha = jnp.asarray(rng.standard_normal(n) ** 2 + 0.1, jnp.float32)
+    bias = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    y0 = ref.ternary_matmul_dense(x, jnp.asarray(w), alpha, bias,
+                                  prelu_alpha=0.25)
+    assert ops._resolve_impl(planes, "auto") == "bitplane"
+    for impl in ("bitplane", "bitplane_factorized"):
+        y = ops.ternary_gemm(x, planes, alpha, bias, k=k, fuse_prelu=True,
+                             impl=impl)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                                   rtol=1e-4, atol=1e-4, err_msg=impl)
+    g = jax.grad(lambda xx: jnp.sum(
+        ops.ternary_gemm(xx, planes, k=k, impl="bitplane_factorized") ** 2))(x)
+    g0 = jax.grad(lambda xx: jnp.sum(
+        ref.ternary_matmul_dense(xx, jnp.asarray(w)) ** 2))(x)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g0),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_dispatcher_ref_impl():
+    m, k, n = 4, 64, 32
+    rng = np.random.default_rng(12)
+    w = formats.random_ternary(rng, k, n, 0.25)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    packed = jnp.asarray(formats.pack_2bit(w))
+    y = ops.ternary_gemm(x, packed, k=k, impl="ref")
+    y0 = ref.ternary_matmul_dense(x, jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Autotuner
+# ---------------------------------------------------------------------------
+
+def test_autotune_cache_json_roundtrip(tmp_path):
+    path = str(tmp_path / "cache.json")
+    tuner = Autotuner(path=path, mode="model")
+    cfg = tuner.lookup(256, 4096, 4096, sparsity=0.25)
+    assert isinstance(cfg, BlockConfig)
+    assert cfg.vmem_bytes() < 16 * 2**20
+    # second tuner instance reads the same pick from disk
+    reloaded = Autotuner(path=path, mode="model")
+    key = cache_key(256, 4096, 4096, 0.25)
+    assert reloaded.entries()[key] == cfg
+    assert reloaded.lookup(256, 4096, 4096, sparsity=0.25) == cfg
+    # and the pick is deterministic in model mode
+    assert Autotuner(path=str(tmp_path / "other.json"),
+                     mode="model").lookup(256, 4096, 4096,
+                                          sparsity=0.25) == cfg
+
+
+def test_dense_fallback_with_large_pack_tile():
+    """Regression: a TiledTernary packed with tile_k larger than the
+    resolved dense block_k must still route through the dense kernel (x is
+    padded to the pack's K, not just a block_k multiple)."""
+    m, k, n = 8, 200, 64
+    rng = np.random.default_rng(21)
+    w = formats.random_ternary(rng, k, n, 0.5)       # occupancy 1.0 -> dense
+    tt = formats.TiledTernary.from_dense(w, tile_k=512, tile_n=32)
+    assert ops._resolve_impl(tt, "auto") == "dense"
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    y = ops.ternary_gemm(x, tt, block_m=8, block_n=32, block_k=64)
+    y0 = ref.ternary_matmul_dense(x, jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_autotune_key_includes_fixed_tiles(tmp_path):
+    """Regression: two packs of the same logical shape with different tile
+    shapes get distinct cache entries (no per-call re-tune/rewrite thrash)."""
+    assert cache_key(64, 2048, 2048, 0.125, "skip", fixed_n=128,
+                     fixed_k=256) != cache_key(64, 2048, 2048, 0.125, "skip",
+                                               fixed_n=32, fixed_k=256)
+    tuner = Autotuner(path=str(tmp_path / "c.json"), mode="model")
+    a = tuner.lookup(64, 2048, 2048, 0.125, "skip", fixed_n=128, fixed_k=256)
+    b = tuner.lookup(64, 2048, 2048, 0.125, "skip", fixed_n=32, fixed_k=256)
+    assert a.block_n == 128 and b.block_n == 32
+    assert len(tuner.entries()) == 2
+    # both survive alternating lookups (cache hits, no overwrite)
+    assert tuner.lookup(64, 2048, 2048, 0.125, "skip",
+                        fixed_n=128, fixed_k=256) == a
+    assert tuner.lookup(64, 2048, 2048, 0.125, "skip",
+                        fixed_n=32, fixed_k=256) == b
+
+
+def test_autotune_key_bucketing():
+    assert cache_key(100, 1024, 1024) == cache_key(128, 1024, 1024)
+    assert cache_key(8, 1024, 1024) != cache_key(128, 1024, 1024)
+    assert cache_key(8, 1024, 1024, 0.24) == cache_key(8, 1024, 1024, 0.25)
+    assert cache_key(8, 1024, 1024, 0.25, "skip") != \
+        cache_key(8, 1024, 1024, 0.25, "dense")
+
+
+def test_autotune_respects_fixed_tile_shapes(tmp_path):
+    tuner = Autotuner(path=str(tmp_path / "c.json"), mode="model")
+    cfg = tuner.lookup(64, 2048, 2048, sparsity=0.125, impl="skip",
+                       fixed_n=128, fixed_k=256)
+    assert cfg.block_n == 128 and cfg.block_k == 256
+
+
+def test_autotuned_blocks_give_same_numerics():
+    """Dispatcher with blocks=None (autotuned) agrees with explicit blocks."""
+    m, k, n = 16, 128, 64
+    rng = np.random.default_rng(13)
+    w = formats.random_ternary(rng, k, n, 0.25)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    packed = jnp.asarray(formats.pack_2bit(w))
+    y_auto = ops.ternary_gemm(x, packed, k=k)
+    y_explicit = ops.ternary_gemm(x, packed, k=k, block_m=8, block_n=32,
+                                  block_k=32)
+    np.testing.assert_allclose(np.asarray(y_auto), np.asarray(y_explicit),
+                               rtol=1e-5, atol=1e-5)
