@@ -1,0 +1,118 @@
+#!/usr/bin/env python
+"""CI perf-regression gate: compare a ``benchmarks/run.py --json`` output
+against the checked-in baseline and fail (exit 1) on regression.
+
+Gated (default tolerance 25% for each):
+  * **coverage** — every baseline entry must still be emitted;
+  * **aggregate wall time** — the sum of all timed entries must not exceed
+    baseline * (1 + --tolerance);
+  * **structural ratios** — entries carrying a ``ratio=`` derived field
+    (e.g. the continuous-vs-static serving speedup) must not fall below
+    baseline_ratio * (1 - --ratio-tolerance), and a >1 baseline speedup
+    must stay strictly >1. Ratios are machine-independent, so
+    --ratio-tolerance stays tight even when --tolerance is widened for
+    slow/noisy CI runners.
+
+Per-entry wall times are *reported* but not individually gated: on shared
+CPU runners, individual micro-benchmark timings swing 2-4x between
+back-to-back runs on the same machine while the aggregate stays within a
+few percent — gating them one by one would make every CI run a coin flip.
+Refresh the baseline with:
+    python benchmarks/run.py --quick --json benchmarks/baseline_quick.json
+
+Usage:  python benchmarks/check_regression.py BENCH_ci.json \
+            [--baseline benchmarks/baseline_quick.json] [--tolerance 0.25]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    assert "entries" in data, f"{path}: not a benchmark JSON"
+    return data["entries"]
+
+
+def _ratio_of(derived: str):
+    m = re.search(r"(?:^|,)ratio=([0-9.eE+-]+)", derived or "")
+    return float(m.group(1)) if m else None
+
+
+def main(argv=None) -> int:
+    here = os.path.dirname(os.path.abspath(__file__))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="JSON from benchmarks/run.py --json")
+    ap.add_argument("--baseline",
+                    default=os.path.join(here, "baseline_quick.json"))
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed aggregate wall-time regression "
+                         "(0.25 = 25%%)")
+    ap.add_argument("--ratio-tolerance", type=float, default=0.25,
+                    help="allowed drop in structural ratio= entries")
+    ap.add_argument("--min-us", type=float, default=200.0,
+                    help="report-only noise floor for per-entry listing")
+    args = ap.parse_args(argv)
+
+    base = _load(args.baseline)
+    cur = _load(args.current)
+    failures = []
+
+    # coverage
+    missing = sorted(set(base) - set(cur))
+    for name in missing:
+        failures.append(f"MISSING  {name}: present in baseline, absent "
+                        "from current run")
+
+    # aggregate wall time
+    b_total = sum(e["us_per_call"] for e in base.values())
+    c_total = sum(cur[n]["us_per_call"] for n in base if n in cur)
+    limit = b_total * (1.0 + args.tolerance)
+    print(f"aggregate timed total: {c_total / 1e6:.2f}s "
+          f"(baseline {b_total / 1e6:.2f}s, limit {limit / 1e6:.2f}s)")
+    if c_total > limit:
+        failures.append(f"SLOWER   aggregate: {c_total / 1e6:.2f}s vs "
+                        f"baseline {b_total / 1e6:.2f}s "
+                        f"(limit {limit / 1e6:.2f}s)")
+
+    # structural ratios + per-entry report
+    n_ratios = 0
+    for name, b in sorted(base.items()):
+        c = cur.get(name)
+        if c is None:
+            continue
+        b_us, c_us = b["us_per_call"], c["us_per_call"]
+        if b_us >= args.min_us:
+            rel = c_us / b_us if b_us else float("inf")
+            print(f"  info {name}: {c_us:.0f}us (baseline {b_us:.0f}us, "
+                  f"x{rel:.2f})")
+        b_ratio, c_ratio = _ratio_of(b["derived"]), _ratio_of(c["derived"])
+        if b_ratio is not None and c_ratio is not None:
+            n_ratios += 1
+            floor = b_ratio * (1.0 - args.ratio_tolerance)
+            bad = c_ratio < floor or (b_ratio > 1.0 and c_ratio <= 1.0)
+            if bad:
+                failures.append(
+                    f"RATIO    {name}: {c_ratio:.2f} vs baseline "
+                    f"{b_ratio:.2f} (floor {floor:.2f})")
+            print(f"{'FAIL' if bad else 'ok':5s} {name}: ratio "
+                  f"{c_ratio:.2f} (baseline {b_ratio:.2f})")
+
+    print(f"\ngated: coverage ({len(base)} entries), aggregate time, "
+          f"{n_ratios} structural ratio(s)")
+    if failures:
+        print("\nPERF REGRESSION:", file=sys.stderr)
+        for f_ in failures:
+            print("  " + f_, file=sys.stderr)
+        return 1
+    print("no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

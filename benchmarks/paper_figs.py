@@ -23,7 +23,6 @@ paper's flops/cycle.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -1,6 +1,8 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# One function per paper table. Print ``name,us_per_call,derived`` CSV,
+# optionally duplicated to JSON (--json) for the CI regression gate
+# (benchmarks/check_regression.py).
 import argparse
-import sys
+import json
 
 
 def main() -> None:
@@ -9,19 +11,30 @@ def main() -> None:
                     help="reduced sizes for CI-speed runs")
     ap.add_argument("--only", default="",
                     help="comma-separated benchmark names (fig6,fig8,...)")
+    ap.add_argument("--json", default="",
+                    help="also write results as JSON to this path")
     args = ap.parse_args()
 
-    from benchmarks import kernel_bench, paper_figs, roofline
-    from benchmarks.common import emit_header
+    from benchmarks import kernel_bench, paper_figs, roofline, serving_bench
+    from benchmarks.common import RESULTS, emit_header
 
     emit_header()
-    benches = {f.__name__: f for f in paper_figs.ALL + kernel_bench.ALL}
+    benches = {f.__name__: f
+               for f in paper_figs.ALL + kernel_bench.ALL + serving_bench.ALL}
     selected = (args.only.split(",") if args.only else list(benches))
     for name in selected:
         benches[name](quick=args.quick)
 
     # roofline table from whatever dry-run records exist
     roofline.main()
+
+    if args.json:
+        entries = {r["name"]: {"us_per_call": r["us_per_call"],
+                               "derived": r["derived"]} for r in RESULTS}
+        with open(args.json, "w") as f:
+            json.dump({"version": 1, "quick": args.quick,
+                       "entries": entries}, f, indent=1)
+        print(f"wrote {len(entries)} entries to {args.json}")
 
 
 if __name__ == "__main__":

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import formats, quantize
+from repro.core import quantize
 from repro.models import LM, layers as L
 
 

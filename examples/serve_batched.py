@@ -1,47 +1,62 @@
-"""Batched serving example: load an arch (reduced for CPU), run batched
-prefill+decode over a stream of requests with the continuous-batching server
-from launch/serve.py, using ternary-packed weights when configured.
+"""Continuous-batching serving example: submit a stream of mixed-length
+requests to ``repro.serving.ContinuousScheduler`` (queue -> slot pool ->
+interleaved prefill/decode) and print per-request TTFT/latency plus engine
+throughput. Pass ``--static`` to run the same workload through the legacy
+static-batch server for an A/B comparison.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py --arch mixtral-8x22b
 """
 import argparse
-import time
+import json
 
 import jax
-import numpy as np
 
 from repro.configs import get_config
-from repro.data import SyntheticLM
-from repro.launch.serve import BatchedServer
+from repro.launch.serve import (BatchedServer, build_workload, run_continuous,
+                                run_static)
+from repro.serving import ContinuousScheduler
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mixtral-8x22b")
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--gen-lens", default="4,16")
+    ap.add_argument("--static", action="store_true")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
-    server = BatchedServer(cfg, max_len=args.prompt_len + args.gen_len + 1)
-    server.load(server.model.init(jax.random.PRNGKey(0)))
+    gen_lens = [int(g) for g in args.gen_lens.split(",")]
+    max_len = args.prompt_len + max(gen_lens) + 1
+    prompts, gens, extras = build_workload(cfg, args.requests,
+                                           args.prompt_len, gen_lens)
 
-    data = SyntheticLM(cfg, args.batch, args.prompt_len)
-    total_tokens, t0 = 0, time.monotonic()
-    for i in range(args.requests // args.batch):
-        b = data.global_batch(i)
-        extras = {k: v for k, v in b.items()
-                  if k in ("vision_embeds", "enc_embeds")}
-        out = server.generate(b["tokens"][:, :args.prompt_len],
-                              args.gen_len, extras)
-        total_tokens += out.size
-        print(f"batch {i}: generated {out.shape} tokens; "
-              f"sample: {out[0][:8].tolist()}")
-    dt = time.monotonic() - t0
-    print(f"{total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens / dt:.1f} tok/s on CPU-reduced config)")
+    if not args.static and (cfg.is_encdec or cfg.family == "vlm"):
+        print(f"# {args.arch} needs per-request encoder/frontend state; "
+              "falling back to the static server")
+        args.static = True
+    if args.static:
+        server = BatchedServer(cfg, max_len)
+        server.load(server.model.init(jax.random.PRNGKey(0)))
+        outs, metrics = run_static(server, prompts, gens, args.batch,
+                                   extras=extras)
+        for i, out in enumerate(outs):
+            print(f"req {i}: {len(out)} tokens; sample: {out[:8].tolist()}")
+    else:
+        engine = ContinuousScheduler(cfg, max_slots=args.slots,
+                                     max_len=max_len)
+        engine.load(engine.model.init(jax.random.PRNGKey(0)))
+        outs, metrics = run_continuous(engine, prompts, gens)
+        for r in sorted(metrics["per_request"], key=lambda r: r["rid"]):
+            out = outs[r["rid"]]        # outs is in submit (rid) order
+            print(f"req {r['rid']}: {r['gen_len']} tokens, "
+                  f"ttft {r['ttft_s']:.3f}s, latency {r['latency_s']:.3f}s; "
+                  f"sample: {out[:8].tolist()}")
+    print(json.dumps({k: v for k, v in metrics.items()
+                      if k != "per_request"}))
 
 
 if __name__ == "__main__":

@@ -13,7 +13,6 @@ import json
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.data import SyntheticLM

@@ -4,7 +4,6 @@ experiments/dryrun/*.json. Usage:
 """
 import glob
 import json
-import os
 import sys
 
 ARCH_ORDER = ["seamless-m4t-large-v2", "mistral-nemo-12b", "command-r-35b",

@@ -7,8 +7,7 @@ themselves in ``repro.configs.REGISTRY``.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 __all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "pad_to_multiple"]
 

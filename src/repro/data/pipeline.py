@@ -11,11 +11,11 @@ re-sharding trivially consistent: there is no pipeline state to snapshot.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig
 
 
 class SyntheticLM:

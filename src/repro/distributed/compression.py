@@ -16,7 +16,7 @@ Error feedback keeps the compression unbiased over time.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -53,6 +53,12 @@ CANDIDATE_BLOCKS: Tuple[Tuple[int, int, int], ...] = (
     (64, 128, 512), (8, 128, 512), (8, 256, 512),
 )
 
+# Extra candidates considered only for the serving decode phase: M = slots
+# is GEMV-shaped (tiny block_m), so trade the M tile for deeper K reuse.
+DECODE_CANDIDATE_BLOCKS: Tuple[Tuple[int, int, int], ...] = (
+    (8, 128, 1024), (8, 256, 1024), (8, 512, 512), (16, 256, 512),
+)
+
 SPARSITY_GRID = (1.0, 0.5, 0.25, 0.125, 0.0625, 0.03125)
 
 
@@ -84,16 +90,21 @@ def _sparsity_bucket(s: float) -> float:
 
 def cache_key(m: int, k: int, n: int, sparsity: float = 1.0,
               impl: str = "dense", fixed_n: Optional[int] = None,
-              fixed_k: Optional[int] = None) -> str:
+              fixed_k: Optional[int] = None,
+              phase: Optional[str] = None) -> str:
     """Layout-pinned block shapes (TiledTernary tile_n/tile_k) are part of
     the problem identity — two packs of the same logical shape with
-    different tiles must not share (and thrash) one entry."""
+    different tiles must not share (and thrash) one entry. Likewise the
+    serving phase: decode (M=slots, GEMV-shaped) and prefill (M=B·L,
+    GEMM-shaped) problems tune separately even at equal bucketed M."""
     key = (f"{impl}:m{_pow2_bucket(m)}:k{k}:n{n}"
            f":s{_sparsity_bucket(sparsity)}")
     if fixed_n is not None:
         key += f":bn{fixed_n}"
     if fixed_k is not None:
         key += f":bk{fixed_k}"
+    if phase is not None:
+        key += f":p{phase}"
     return key
 
 
@@ -136,11 +147,16 @@ class Autotuner:
     # --- candidate generation / scoring ----------------------------------
     def candidates(self, m: int, k: int, n: int,
                    fixed_n: Optional[int] = None,
-                   fixed_k: Optional[int] = None) -> List[BlockConfig]:
+                   fixed_k: Optional[int] = None,
+                   phase: Optional[str] = None) -> List[BlockConfig]:
         """VMEM-feasible candidates; fixed_n/fixed_k pin block shapes that
-        are dictated by the data layout (TiledTernary tile shapes)."""
+        are dictated by the data layout (TiledTernary tile shapes). The
+        decode phase widens the grid with GEMV-shaped candidates."""
+        grid = CANDIDATE_BLOCKS
+        if phase == "decode":
+            grid = grid + DECODE_CANDIDATE_BLOCKS
         out, seen = [], set()
-        for bm, bn, bk in CANDIDATE_BLOCKS:
+        for bm, bn, bk in grid:
             bm = min(bm, _pow2_bucket(max(m, 8)))
             bn = fixed_n if fixed_n is not None else bn
             bk = fixed_k if fixed_k is not None else bk
@@ -190,15 +206,16 @@ class Autotuner:
                impl: str = "dense", fixed_n: Optional[int] = None,
                fixed_k: Optional[int] = None,
                run: Optional[Callable[[BlockConfig], None]] = None,
-               ) -> BlockConfig:
+               phase: Optional[str] = None) -> BlockConfig:
         """Best block shape for the problem; tunes and persists on miss.
 
         ``run``, if given and the mode resolves to ``measure``, is called
         per candidate to produce a wall-clock score; otherwise the analytic
-        model decides (deterministic, CI-safe).
+        model decides (deterministic, CI-safe). ``phase`` ("prefill" /
+        "decode" / None) separates serving-phase entries.
         """
         key = cache_key(m, k, n, sparsity, impl, fixed_n=fixed_n,
-                        fixed_k=fixed_k)
+                        fixed_k=fixed_k, phase=phase)
         with self._lock:
             self._load()
             hit = self._cache.get(key)
@@ -212,7 +229,8 @@ class Autotuner:
             mode = ("measure"
                     if run is not None and jax.default_backend() == "tpu"
                     else "model")
-        cands = self.candidates(m, k, n, fixed_n=fixed_n, fixed_k=fixed_k)
+        cands = self.candidates(m, k, n, fixed_n=fixed_n, fixed_k=fixed_k,
+                                phase=phase)
         if mode == "measure" and run is not None:
             scored = [(self._measure(c, run), c) for c in cands]
         else:

@@ -24,6 +24,8 @@ path in ``core.quantize``).
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import functools
 from typing import Optional, Tuple, Union
 
@@ -40,9 +42,32 @@ from repro.kernels.ternary_gemm_bitplane import (K_PER_BYTE,
                                                  ternary_gemm_bitplane)
 
 __all__ = ["ternary_gemm", "pack_weights", "pack_weights_tiled",
-           "TernaryGemmConfig"]
+           "TernaryGemmConfig", "serving_phase", "current_phase"]
 
 WORDS = 32
+
+# Serving-phase tag consumed at trace time: prefill GEMMs are M=B·L
+# GEMM-shaped, decode GEMMs are M=slots GEMV-shaped, and the two must not
+# share (and thrash) one autotune entry even when their bucketed M collides.
+_SERVING_PHASE: contextvars.ContextVar[Optional[str]] = \
+    contextvars.ContextVar("repro_serving_phase", default=None)
+
+
+@contextlib.contextmanager
+def serving_phase(phase: Optional[str]):
+    """Tag ``ternary_gemm`` dispatches traced inside this scope as
+    ``"prefill"`` or ``"decode"`` so the autotuner keys them separately
+    (the serving engine wraps its prefill/decode jit calls in this)."""
+    assert phase in (None, "prefill", "decode"), phase
+    token = _SERVING_PHASE.set(phase)
+    try:
+        yield
+    finally:
+        _SERVING_PHASE.reset(token)
+
+
+def current_phase() -> Optional[str]:
+    return _SERVING_PHASE.get()
 
 # Above this occupied-tile fraction the skipping grid saves too little to
 # justify the scalar-prefetch indirection; "auto" falls back to dense.
@@ -224,6 +249,7 @@ def ternary_gemm(
     impl = _resolve_impl(w, impl)
     m = x.shape[0]
     tuner = autotune_lib.get_tuner()
+    phase = current_phase()
 
     if impl == "skip":
         assert isinstance(w, formats.TiledTernary), \
@@ -235,7 +261,7 @@ def ternary_gemm(
         assert block_k is None or block_k == w.tile_k, (block_k, w.tile_k)
         bm = block_m if block_m is not None else tuner.lookup(
             m, kk, n, sparsity=w.occupancy_fraction(), impl="skip",
-            fixed_n=w.tile_n, fixed_k=w.tile_k).block_m
+            fixed_n=w.tile_n, fixed_k=w.tile_k, phase=phase).block_m
         return _gemm_2bit(x, jnp.asarray(w.packed), scale, bias,
                           jnp.asarray(w.kt_indices), jnp.asarray(w.kt_counts),
                           n, bm, w.tile_n, w.tile_k,
@@ -249,7 +275,7 @@ def ternary_gemm(
         kk = x.shape[1] if k is None else k
         assert kb * K_PER_BYTE >= kk
         if block_m is None or block_n is None or block_k is None:
-            cfg = tuner.lookup(m, kk, n, impl=impl)
+            cfg = tuner.lookup(m, kk, n, impl=impl, phase=phase)
             block_m = block_m if block_m is not None else cfg.block_m
             block_n = block_n if block_n is not None else cfg.block_n
             block_k = block_k if block_k is not None else cfg.block_k
@@ -282,7 +308,8 @@ def ternary_gemm(
     if block_m is None or block_n is None or block_k is None:
         sparsity = (w.occupancy_fraction()
                     if isinstance(w, formats.TiledTernary) else 1.0)
-        cfg = tuner.lookup(m, kk, n, sparsity=sparsity, impl="dense")
+        cfg = tuner.lookup(m, kk, n, sparsity=sparsity, impl="dense",
+                           phase=phase)
         block_m = block_m if block_m is not None else cfg.block_m
         block_n = block_n if block_n is not None else cfg.block_n
         block_k = block_k if block_k is not None else cfg.block_k

@@ -17,7 +17,6 @@ Usage:
       [--quant ternary_packed] [--out experiments/dryrun]
 """
 import argparse
-import dataclasses
 import json
 import re
 import sys
@@ -26,8 +25,6 @@ import traceback
 from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import SHAPES, get_config, list_archs
 from repro.configs.base import ModelConfig, ShapeConfig

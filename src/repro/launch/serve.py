@@ -1,17 +1,26 @@
-"""Batched serving driver: continuous-batching-style loop with prefill +
-decode over a request queue, KV/SSM caches, and ternary-packed weights
-(the paper's serving-side format) when the config enables them.
+"""Serving CLI: continuous-batching engine (default) with a static-batch
+fallback for A/B comparison.
+
+The default mode drives ``repro.serving.ContinuousScheduler``: a request
+queue feeding a slot-allocated KV/SSM cache pool, prefill of newly admitted
+requests interleaved with decode steps of in-flight ones, per-request
+TTFT/latency and queue-depth metrics emitted as JSON (DESIGN.md §7).
+``--static`` runs the legacy whole-batch loop (a batch must fully finish its
+generation budget before the next is admitted) on the *same* workload so the
+two modes are directly comparable; both modes handle request counts that are
+not a multiple of the batch/slot size.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch ternary-paper --reduced \
-      --requests 16 --batch 4 --prompt-len 32 --gen-len 32
+      --requests 32 --slots 8 --prompt-len 32 --gen-lens 8,64
+  ... --static --batch 8     # legacy static-batch A/B reference
 """
 from __future__ import annotations
 
 import argparse
 import json
 import time
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +28,6 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.data import SyntheticLM
-from repro.launch import steps as steps_lib
 from repro.models import LM
 
 
@@ -55,41 +63,130 @@ class BatchedServer:
         return np.concatenate(out, axis=1)
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+# ---------------------------------------------------------------------------
+# Workload + drivers (shared with benchmarks/serving_bench.py and tests)
+# ---------------------------------------------------------------------------
+
+def build_workload(cfg, requests: int, prompt_len: int,
+                   gen_lens: Sequence[int], seed: int = 0,
+                   ) -> Tuple[np.ndarray, List[int], Dict[str, np.ndarray]]:
+    """(prompts (R, prompt_len) int32, per-request gen budgets, extras).
+    Prompts come from the deterministic SyntheticLM stream; budgets are drawn
+    uniformly from ``gen_lens`` — mixed lengths are what continuous batching
+    exploits. ``extras`` carries per-request frontend rows (vision/encoder
+    embeds) for the families that need them (static mode only)."""
+    data = SyntheticLM(cfg, requests, max(prompt_len, 16), seed=seed)
+    b = data.global_batch(0)
+    prompts = b["tokens"][:, :prompt_len]
+    extras = {k: v for k, v in b.items()
+              if k in ("vision_embeds", "enc_embeds")}
+    rng = np.random.default_rng(seed + 1)
+    gens = [int(g) for g in rng.choice(list(gen_lens), size=requests)]
+    return prompts.astype(np.int32), gens, extras
+
+
+def run_continuous(engine, prompts: np.ndarray, gens: Sequence[int],
+                   ) -> Tuple[List[np.ndarray], Dict[str, Any]]:
+    """Submit the whole workload, drain it, return per-request token arrays
+    (in submit order) + the engine metrics dict."""
+    reqs = [engine.submit(p, g) for p, g in zip(prompts, gens)]
+    metrics = engine.run()
+    outs = [np.asarray(r.tokens, np.int32) for r in reqs]
+    return outs, metrics
+
+
+def run_static(server: BatchedServer, prompts: np.ndarray,
+               gens: Sequence[int], batch: int,
+               extras: Optional[Dict[str, np.ndarray]] = None,
+               ) -> Tuple[List[np.ndarray], Dict[str, Any]]:
+    """Static-batch A/B reference on the same workload. Requests are grouped
+    in submit order; each batch decodes max(batch budgets) steps and every
+    request keeps its own budget's prefix. A ragged final batch is padded by
+    repeating its last row and the padding outputs dropped — no request is
+    silently left unserved."""
+    n = len(prompts)
+    assert n == len(gens) and n > 0
+    outs: List[np.ndarray] = []
+    t0 = time.monotonic()
+    n_decode = 0
+    for lo in range(0, n, batch):
+        chunk = prompts[lo:lo + batch]
+        ext = {k: v[lo:lo + batch] for k, v in (extras or {}).items()}
+        budgets = list(gens[lo:lo + batch])
+        real = len(chunk)
+        if real < batch:        # ragged final batch: pad, serve, trim
+            pad_rows = batch - real
+            chunk = np.concatenate(
+                [chunk, np.repeat(chunk[-1:], pad_rows, axis=0)], axis=0)
+            ext = {k: np.concatenate(
+                [v, np.repeat(v[-1:], pad_rows, axis=0)], axis=0)
+                for k, v in ext.items()}
+        gen = max(budgets)
+        toks = server.generate(chunk, gen, ext or None)
+        n_decode += gen
+        for i, g in enumerate(budgets):
+            outs.append(toks[i, :g].astype(np.int32))
+    wall = time.monotonic() - t0
+    assert len(outs) == n, (len(outs), n)
+    useful = sum(len(o) for o in outs)
+    return outs, {
+        "engine": "static",
+        "batch": batch,
+        "submitted": n,
+        "drained": len(outs),
+        "generated_tokens": useful,
+        "wall_s": round(wall, 4),
+        "tok_per_s": round(useful / wall, 2) if wall > 0 else None,
+        "decode_steps": n_decode,
+    }
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main(argv: Optional[Sequence[str]] = None):
+    ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="ternary-paper")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="continuous mode: KV/SSM cache pool capacity")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="--static mode: static batch size")
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--gen-lens", default="32",
+                    help="comma list; per-request budgets drawn uniformly")
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="cache capacity (0: prompt+max(gen-lens)+1)")
+    ap.add_argument("--static", action="store_true",
+                    help="legacy static-batch loop (A/B reference)")
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help=">=0: stop a request early on this token")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
-    server = BatchedServer(cfg, args.prompt_len + args.gen_len + 1)
-    params = server.model.init(jax.random.PRNGKey(args.seed))
-    server.load(params)
+    gen_lens = [int(g) for g in args.gen_lens.split(",")]
+    max_len = args.max_len or args.prompt_len + max(gen_lens) + 1
+    prompts, gens, extras = build_workload(cfg, args.requests,
+                                           args.prompt_len, gen_lens,
+                                           seed=args.seed)
 
-    rng = np.random.default_rng(args.seed)
-    data = SyntheticLM(cfg, args.batch, args.prompt_len, seed=args.seed)
-    n_batches = args.requests // args.batch
-    t0 = time.monotonic()
-    n_tokens = 0
-    for i in range(n_batches):
-        b = data.global_batch(i)
-        extras = {k: v for k, v in b.items()
-                  if k in ("vision_embeds", "enc_embeds")}
-        toks = server.generate(b["tokens"][:, :args.prompt_len],
-                               args.gen_len, extras)
-        n_tokens += toks.size
-    dt = time.monotonic() - t0
-    print(json.dumps({
-        "requests": n_batches * args.batch,
-        "generated_tokens": n_tokens,
-        "wall_s": round(dt, 3),
-        "tok_per_s": round(n_tokens / dt, 2),
-    }))
+    if args.static:
+        server = BatchedServer(cfg, max_len)
+        server.load(server.model.init(jax.random.PRNGKey(args.seed)))
+        _, metrics = run_static(server, prompts, gens, args.batch,
+                                extras=extras)
+    else:
+        from repro.serving import ContinuousScheduler
+        eos = args.eos_id if args.eos_id >= 0 else None
+        engine = ContinuousScheduler(cfg, max_slots=args.slots,
+                                     max_len=max_len, eos_id=eos)
+        engine.load(engine.model.init(jax.random.PRNGKey(args.seed)))
+        _, metrics = run_continuous(engine, prompts, gens)
+    print(json.dumps(metrics))
+    return metrics
 
 
 if __name__ == "__main__":

@@ -7,15 +7,13 @@ shardable stand-ins, no device allocation).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import LM
 from repro.optim import adamw, clip_by_global_norm, warmup_cosine
 

@@ -14,11 +14,9 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import logging
 import time
-from functools import partial
 from typing import Any, Dict, Optional
 
 import jax

@@ -15,10 +15,8 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.models import layers
 from repro.models.layers import FSDP, MODEL, linear_apply, linear_init, rope
 
 NEG_INF = -1e30
@@ -130,23 +128,32 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
 def naive_attention(q, k, v, *, causal, window, q_offset=0,
                     kv_valid_len=None):
     """Reference full-materialization attention (and the decode path).
-    q: (B, Sq, H, hd); k/v: (B, Skv, KV, hd)."""
+    q: (B, Sq, H, hd); k/v: (B, Skv, KV, hd).
+
+    ``q_offset`` / ``kv_valid_len`` may be scalars (classic decode: every
+    row at the same position) or (B,) vectors (continuous batching: each
+    slot at its own position/valid length)."""
     b, sq, h, hd = q.shape
     _, skv, kvh, _ = k.shape
     g = h // kvh
     qg = q.reshape(b, sq, kvh, g, hd)
     s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
                    preferred_element_type=jnp.float32) * _qk_scale(hd)
-    q_pos = q_offset + jnp.arange(sq)
+    q_off = jnp.asarray(q_offset)
+    q_pos = q_off[..., None] + jnp.arange(sq)    # (sq,) or (B, sq)
+    if q_pos.ndim == 1:
+        q_pos = q_pos[None]                      # (1, sq): shared offsets
     k_pos = jnp.arange(skv)
-    mask = jnp.ones((sq, skv), bool)
+    mask = jnp.ones((1, sq, skv), bool)
     if causal:
-        mask &= q_pos[:, None] >= k_pos[None, :]
+        mask &= q_pos[:, :, None] >= k_pos
     if window:
-        mask &= q_pos[:, None] - k_pos[None, :] < window
+        mask &= q_pos[:, :, None] - k_pos < window
     if kv_valid_len is not None:
-        mask &= (k_pos < kv_valid_len)[None, :]
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
+        valid = jnp.asarray(kv_valid_len)
+        valid = valid[:, None, None] if valid.ndim else valid
+        mask = mask & (k_pos < valid)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
                    preferred_element_type=jnp.float32)
@@ -186,22 +193,26 @@ def delta_decode_attention(q, k_cache, v_cache, k_tok, v_tok, *, cache_pos,
     L x one token.
 
     q (B,1,H,hd); k_cache (B,KV,S,hd); v_cache (B,KV,hd,S);
-    k_tok (B,1,KV,hd); v_tok (B,1,KV,hd)."""
+    k_tok (B,1,KV,hd); v_tok (B,1,KV,hd).
+
+    ``cache_pos`` may be a scalar (all rows at one position) or a (B,)
+    vector (continuous batching: per-slot positions)."""
     b, sq, h, hd = q.shape
     kvh, s = k_cache.shape[1], k_cache.shape[2]
     g = h // kvh
     qg = q.reshape(b, sq, kvh, g, hd)
     scores = jnp.einsum("bqkgd,bksd->bkgqs", qg, k_cache,
                         preferred_element_type=jnp.float32) * _qk_scale(hd)
-    idx = jnp.arange(s)
+    cp = jnp.asarray(cache_pos).reshape(-1, 1)   # (1,1) scalar / (B,1) vector
+    idx = jnp.arange(s)[None]                    # (1, S)
     if rolling:
-        slot = cache_pos % s
-        mask = jnp.where(cache_pos >= s, idx != slot, idx < cache_pos)
+        slot = cp % s
+        mask = jnp.where(cp >= s, idx != slot, idx < cp)
     else:
-        mask = idx < cache_pos
+        mask = idx < cp
         if window:
-            mask &= (cache_pos - idx) < window
-    scores = jnp.where(mask[None, None, None, None], scores, NEG_INF)
+            mask &= (cp - idx) < window
+    scores = jnp.where(mask[:, None, None, None], scores, NEG_INF)
     self_score = jnp.einsum("bqkgd,bqkd->bkgq", qg, k_tok,
                             preferred_element_type=jnp.float32) \
         * _qk_scale(hd)
@@ -265,6 +276,16 @@ def attn_apply(params, x: jnp.ndarray, cfg: ModelConfig, *,
                     "k_tok": k.transpose(0, 2, 1, 3).astype(cache["k"].dtype),
                     "v_tok": v.transpose(0, 2, 3, 1).astype(cache["v"].dtype),
                 }
+            elif jnp.ndim(slot):
+                # per-slot positions (continuous batching): scatter each
+                # row's token K/V at that row's own cache offset
+                rows = jnp.arange(k.shape[0])
+                k_c = cache["k"].at[rows, slot].set(
+                    _store_view(k, cfg, flat)[:, 0].astype(cache["k"].dtype))
+                v_c = cache["v"].at[rows, slot].set(
+                    _store_view(v, cfg, flat)[:, 0].astype(cache["v"].dtype))
+                new_cache = {"k": k_c, "v": v_c}
+                k, v = _cache_view(k_c, cfg), _cache_view(v_c, cfg)
             else:
                 zeros = (0, 0, 0) if flat else (0, 0, 0, 0)
                 k_c = jax.lax.dynamic_update_slice(

@@ -13,7 +13,7 @@ replaces names with mesh axes or None.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

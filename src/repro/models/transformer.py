@@ -17,8 +17,7 @@ Public API (all functional):
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +25,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models import attention, layers, moe, ssm
-from repro.models.layers import FSDP, MODEL
+from repro.models.layers import MODEL
 
 
 def _stack_tree(trees):
@@ -300,6 +299,19 @@ class LM:
                 lambda x: jnp.broadcast_to(x, (self.n_groups, *x.shape)), one)
         return {"layers": caches, "pos": jnp.zeros((), jnp.int32)}
 
+    @staticmethod
+    def insert_cache(pool_layers, req_layers, slots):
+        """Slot-pool cache contract: write a freshly prefilled k-request
+        cache (batch dim k, same max_len) into the batch rows ``slots``
+        (scalar or (k,) vector) of a pool cache (batch dim max_slots).
+        Every cache leaf is stacked as (n_groups, B, ...), so one tree-wide
+        row scatter covers attention K/V and SSM state/conv alike. Used by
+        ``repro.serving.SlotPool``."""
+        slots = jnp.atleast_1d(slots)
+        return jax.tree.map(
+            lambda big, small: big.at[:, slots].set(
+                small.astype(big.dtype)), pool_layers, req_layers)
+
     def cache_specs(self, decode_seq_sharded: bool = True):
         """PartitionSpec tree matching init_cache output."""
         cfg = self.cfg
@@ -354,11 +366,16 @@ class LM:
         return cache, logits
 
     def decode_step(self, params, cache, tokens):
-        """tokens: (B, 1) -> (logits (B,1,V), updated cache)."""
+        """tokens: (B, 1) -> (logits (B,1,V), updated cache).
+
+        ``cache["pos"]`` may be a scalar (classic batched decode: all rows
+        at the same position) or a (B,) vector (continuous batching: each
+        slot decodes at its own position; K/V writes scatter per slot)."""
         cfg = self.cfg
         pos = cache["pos"]
+        positions_src = pos[:, None] if jnp.ndim(pos) else pos
         x = layers.embed_apply(params["embed"], tokens, cfg)
-        positions = jnp.broadcast_to(pos, tokens.shape)
+        positions = jnp.broadcast_to(positions_src, tokens.shape)
         x, new_caches, _ = self._run_stack(
             params, x, positions=positions, causal=True,
             caches=cache["layers"], cache_pos=pos,
@@ -376,12 +393,23 @@ class LM:
                     slot = pos % s_len
                 else:
                     slot = pos
-                committed[key] = {
-                    "k": jax.lax.dynamic_update_slice(
-                        old["k"], nc["k_tok"], (0, 0, 0, slot, 0)),
-                    "v": jax.lax.dynamic_update_slice(
-                        old["v"], nc["v_tok"], (0, 0, 0, 0, slot)),
-                }
+                if jnp.ndim(slot):
+                    # per-slot positions: scatter each batch row's token at
+                    # its own offset (k_tok (L,B,KV,1,hd), v_tok (L,B,KV,hd,1))
+                    rows = jnp.arange(slot.shape[0])
+                    committed[key] = {
+                        "k": old["k"].at[:, rows, :, slot, :].set(
+                            nc["k_tok"][:, :, :, 0].transpose(1, 0, 2, 3)),
+                        "v": old["v"].at[:, rows, :, :, slot].set(
+                            nc["v_tok"][..., 0].transpose(1, 0, 2, 3)),
+                    }
+                else:
+                    committed[key] = {
+                        "k": jax.lax.dynamic_update_slice(
+                            old["k"], nc["k_tok"], (0, 0, 0, slot, 0)),
+                        "v": jax.lax.dynamic_update_slice(
+                            old["v"], nc["v_tok"], (0, 0, 0, 0, slot)),
+                    }
             else:
                 committed[key] = nc
         new_cache = dict(cache, layers=committed, pos=pos + 1)

@@ -8,7 +8,7 @@ quantized-optimizer-state option used by the 1T-param config.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp

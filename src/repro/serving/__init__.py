@@ -1,0 +1,12 @@
+"""Continuous-batching serving subsystem (DESIGN.md §7):
+
+``RequestQueue`` (FIFO admission + per-request metrics) ->
+``ContinuousScheduler`` (interleaved prefill/decode/evict) ->
+``SlotPool`` (fixed ``max_slots x max_len`` KV/SSM cache, free-list reuse)
+-> the ternary kernels, phase-tagged for the autotuner.
+"""
+from repro.serving.engine import ContinuousScheduler
+from repro.serving.queue import Request, RequestQueue
+from repro.serving.slots import SlotPool
+
+__all__ = ["ContinuousScheduler", "Request", "RequestQueue", "SlotPool"]

@@ -1,0 +1,209 @@
+"""Continuous-batching scheduler over the slot pool.
+
+Each scheduler step:
+
+1. **admit** — while the queue is non-empty and a slot is free, pop a
+   request, prefill it (B=1, its exact prompt length) and scatter the
+   resulting cache into the allocated slot; the prefill's last-position
+   argmax is the request's first token (TTFT stamps here).
+2. **decode** — one jitted step over *all* ``max_slots`` rows with a
+   per-slot position vector (``cache["pos"]`` as ``(B,)``): live slots each
+   attend to their own valid prefix and scatter their token K/V at their own
+   offset; free slots compute garbage that is never read and whose writes
+   land in rows fully overwritten on the next admit.
+3. **evict** — requests that hit their token budget (or EOS) release their
+   slot back to the free list; the next step's admit refills it.
+
+Short requests therefore drain and are replaced while long ones keep
+decoding — no static-batch barrier. The decode jit compiles once (fixed
+``max_slots`` batch); prefill compiles once per distinct (admission-group
+size, prompt length) pair — bounded by ``max_slots`` sizes per length, a
+deliberate trade against padding every admission to a full-pool prefill.
+
+The decode hot loop is device-resident: cache, position and token vectors
+stay on device, the greedy argmax runs inside the jit, and the only
+per-step transfer is the ``(max_slots,)`` next-token vector the scheduler
+needs for EOS/budget checks. Host state is pushed to the device only after
+admit/evict events (O(requests), not O(tokens)).
+
+Kernel selection: prefill traces under ``ops.serving_phase("prefill")``
+(M=B·L GEMM-shaped) and decode under ``"decode"`` (M=slots GEMV-shaped), so
+the block-shape autotuner keys the two phases separately.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models import LM
+from repro.serving.queue import Request, RequestQueue
+from repro.serving.slots import SlotPool
+
+
+class ContinuousScheduler:
+    def __init__(self, cfg: ModelConfig, max_slots: int, max_len: int,
+                 eos_id: Optional[int] = None):
+        if cfg.is_encdec or cfg.family == "vlm":
+            raise ValueError(
+                f"family {cfg.family!r} needs per-request encoder/frontend "
+                "state; use the static BatchedServer for it")
+        self.cfg = cfg
+        self.model = LM(cfg)
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.params = None
+        self.queue = RequestQueue()
+        self.pool = SlotPool(self.model, max_slots, max_len)
+        self._live: Dict[int, Request] = {}          # slot -> request
+        self._pos = np.zeros(max_slots, np.int32)    # host mirror
+        self._tok = np.zeros(max_slots, np.int32)    # host mirror
+        self._dev_pos = jnp.zeros(max_slots, jnp.int32)
+        self._dev_tok = jnp.zeros(max_slots, jnp.int32)
+        self._dirty = False           # host mirrors newer than device state
+        self._finished: List[Request] = []
+        self.total_drained = 0
+        self.prefill_steps = 0
+        self.decode_steps = 0
+        self._depth_samples: List[int] = []
+
+        def prefill(params, toks):
+            cache, logits = self.model.prefill(params, {"tokens": toks},
+                                               max_len)
+            return cache["layers"], jnp.argmax(logits[:, -1],
+                                               axis=-1).astype(jnp.int32)
+
+        def decode(params, layers, pos, toks):
+            # free slots keep decoding garbage; clamp their write position
+            # so it can never run past the cache (live rows are bounded by
+            # the submit-time prompt+budget <= max_len assertion)
+            cache = {"layers": layers,
+                     "pos": jnp.minimum(pos, max_len - 1)}
+            logits, new_cache = self.model.decode_step(params, cache,
+                                                       toks[:, None])
+            nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+            return new_cache["layers"], new_cache["pos"], nxt
+
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode, donate_argnums=(1,))
+
+    # ------------------------------------------------------------------
+    def load(self, params) -> None:
+        self.params = params
+
+    def submit(self, prompt: np.ndarray, max_new: int) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        assert prompt.size + max_new <= self.max_len, (
+            f"prompt {prompt.size} + gen {max_new} exceeds max_len "
+            f"{self.max_len}")
+        return self.queue.submit(prompt, max_new, eos_id=self.eos_id)
+
+    # ------------------------------------------------------------------
+    def _admit(self) -> None:
+        while self.queue and self.pool.n_free:
+            # grouped admission: prefill a FIFO run of equal-length prompts
+            # (up to the free-slot count) as one batch — one kernel dispatch
+            # and one pool scatter instead of k
+            group = [self.queue.pop()]
+            plen = group[0].prompt_len
+            while (len(group) < self.pool.n_free and self.queue
+                   and self.queue.peek().prompt_len == plen):
+                group.append(self.queue.pop())
+            slots = [self.pool.alloc() for _ in group]
+            prompts = np.stack([r.prompt for r in group])
+            with kops.serving_phase("prefill"):
+                req_layers, toks_dev = self._prefill(
+                    self.params, jnp.asarray(prompts))
+            self.prefill_steps += 1
+            self.pool.insert(slots, req_layers)
+            toks = np.asarray(toks_dev)
+            now = time.monotonic()
+            for req, slot, tok in zip(group, slots, toks):
+                req.slot = slot
+                req.tokens.append(int(tok))
+                req.first_token_t = now
+                self._pos[slot] = req.prompt_len
+                self._tok[slot] = tok
+                self._live[slot] = req
+                self._dirty = True
+                if req.done:                 # max_new == 1 (or instant EOS)
+                    self._evict(slot)
+
+    def _evict(self, slot: int) -> None:
+        req = self._live.pop(slot)
+        req.done_t = time.monotonic()
+        req.slot = None
+        self._pos[slot] = 0
+        self._tok[slot] = 0
+        self._dirty = True
+        self.pool.free(slot)
+        self._finished.append(req)
+        self.total_drained += 1
+
+    def step(self) -> None:
+        """One scheduler iteration: admit + prefill, decode, evict."""
+        self._depth_samples.append(self.queue.depth())
+        self._admit()
+        if not self._live:
+            return
+        if self._dirty:
+            self._dev_pos = jnp.asarray(self._pos)
+            self._dev_tok = jnp.asarray(self._tok)
+            self._dirty = False
+        with kops.serving_phase("decode"):
+            self.pool.layers, self._dev_pos, self._dev_tok = self._decode(
+                self.params, self.pool.layers, self._dev_pos, self._dev_tok)
+        self.decode_steps += 1
+        toks = np.asarray(self._dev_tok)
+        for slot in list(self._live):
+            req = self._live[slot]
+            req.tokens.append(int(toks[slot]))
+            self._pos[slot] += 1
+            self._tok[slot] = toks[slot]
+            if req.done:
+                self._evict(slot)
+
+    # ------------------------------------------------------------------
+    def run(self) -> Dict[str, Any]:
+        """Drain the queue completely; return the metrics JSON dict."""
+        assert self.params is not None, "load(params) first"
+        t0 = time.monotonic()
+        n0 = self.total_drained
+        p0, d0 = self.prefill_steps, self.decode_steps
+        self._depth_samples = []
+        budget = (self.queue.depth() + len(self._live)) * self.max_len + 1
+        while self.queue or self._live:
+            assert budget > 0, "scheduler failed to make progress"
+            budget -= 1
+            self.step()
+        wall = time.monotonic() - t0
+        assert self.total_drained == self.queue.submitted, (
+            "drained-request count != submitted count",
+            self.total_drained, self.queue.submitted)
+        done = self._finished[n0:]
+        gen = sum(len(r.tokens) for r in done)
+        ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
+        depths = self._depth_samples or [0]
+        return {
+            "engine": "continuous",
+            "max_slots": self.max_slots,
+            "max_len": self.max_len,
+            "per_request": [r.metrics() for r in done],
+            "submitted": len(done),
+            "drained": len(done),
+            "generated_tokens": gen,
+            "wall_s": round(wall, 4),
+            "tok_per_s": round(gen / wall, 2) if wall > 0 else None,
+            "prefill_steps": self.prefill_steps - p0,
+            "decode_steps": self.decode_steps - d0,
+            "ttft_s": {"mean": float(np.mean(ttfts)) if ttfts else None,
+                       "max": float(np.max(ttfts)) if ttfts else None},
+            "queue_depth": {"max": int(np.max(depths)),
+                            "mean": float(np.mean(depths))},
+        }

@@ -1,0 +1,100 @@
+"""Request bookkeeping for the continuous-batching engine: one ``Request``
+per user call (prompt, token budget, per-request timing/metrics) and a FIFO
+``RequestQueue`` feeding the scheduler.
+
+Metrics captured per request (emitted by ``engine.ContinuousScheduler`` as
+JSON): time-to-first-token (queue wait + prefill), end-to-end latency, and
+decode throughput. All timestamps are ``time.monotonic`` floats.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # (prompt_len,) int32 token ids
+    max_new: int                     # generation budget (tokens)
+    eos_id: Optional[int] = None     # early-stop token (None: budget only)
+
+    # scheduler-owned state / metrics
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+    submit_t: float = 0.0
+    first_token_t: Optional[float] = None
+    done_t: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def done(self) -> bool:
+        if len(self.tokens) >= self.max_new:
+            return True
+        return bool(self.tokens and self.eos_id is not None
+                    and self.tokens[-1] == self.eos_id)
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.submit_t
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.done_t is None:
+            return None
+        return self.done_t - self.submit_t
+
+    def metrics(self) -> dict:
+        return {
+            "rid": self.rid,
+            "prompt_len": self.prompt_len,
+            "gen_len": len(self.tokens),
+            "ttft_s": self.ttft_s,
+            "latency_s": self.latency_s,
+        }
+
+
+class RequestQueue:
+    """FIFO admission queue. ``submit`` stamps the enqueue time (so TTFT
+    includes queue wait); the scheduler ``pop``s at admission."""
+
+    def __init__(self):
+        self._q: Deque[Request] = collections.deque()
+        self._next_rid = 0
+        self.submitted = 0
+
+    def submit(self, prompt: np.ndarray, max_new: int,
+               eos_id: Optional[int] = None) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        assert prompt.size > 0, "empty prompt"
+        assert max_new >= 1, max_new
+        req = Request(rid=self._next_rid, prompt=prompt, max_new=max_new,
+                      eos_id=eos_id, submit_t=time.monotonic())
+        self._next_rid += 1
+        self.submitted += 1
+        self._q.append(req)
+        return req
+
+    def pop(self) -> Request:
+        return self._q.popleft()
+
+    def peek(self) -> Optional[Request]:
+        return self._q[0] if self._q else None
+
+    def depth(self) -> int:
+        return len(self._q)
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)

@@ -1,0 +1,52 @@
+"""Slot-allocated KV/SSM cache pool.
+
+The pool owns one device-resident cache tree of fixed capacity
+``max_slots x max_len`` (the model's ``init_cache(max_slots, max_len)``
+layers tree — every leaf is ``(n_groups, max_slots, ...)``) plus a host-side
+free list. Admission allocates a slot and scatters a freshly prefilled
+single-request cache into that batch row (``LM.insert_cache``); eviction
+just returns the slot id to the free list — the row's stale contents are
+fully overwritten by the next insert, so reuse needs no zeroing.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+
+
+class SlotPool:
+    def __init__(self, model, max_slots: int, max_len: int,
+                 cache_dtype=None):
+        assert max_slots >= 1, max_slots
+        self.model = model
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.layers = model.init_cache(max_slots, max_len,
+                                       dtype=cache_dtype)["layers"]
+        # LIFO free list: reuse the most recently freed slot first (keeps
+        # the touched working set small at low load).
+        self._free: List[int] = list(range(max_slots))[::-1]
+        self._insert = jax.jit(model.insert_cache, donate_argnums=(0,))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_live(self) -> int:
+        return self.max_slots - len(self._free)
+
+    def alloc(self) -> Optional[int]:
+        return self._free.pop() if self._free else None
+
+    def free(self, slot: int) -> None:
+        assert 0 <= slot < self.max_slots and slot not in self._free, slot
+        self._free.append(slot)
+
+    def insert(self, slots, req_layers) -> None:
+        """Scatter a prefilled cache tree (batch dim k, same max_len) into
+        the batch rows named by ``slots`` (scalar or (k,) vector — grouped
+        admission inserts a whole prefill batch in one scatter)."""
+        self.layers = self._insert(self.layers, req_layers,
+                                   jax.numpy.asarray(slots))

@@ -5,9 +5,7 @@ import json
 import os
 import subprocess
 import sys
-import textwrap
 
-import jax
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P

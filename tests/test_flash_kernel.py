@@ -1,5 +1,4 @@
 """Pallas flash attention kernel vs naive oracle (interpret mode)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -2,8 +2,6 @@
 (vs XLA's own cost analysis) and loop-trip recovery on scanned programs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.launch import hlo_cost
 
