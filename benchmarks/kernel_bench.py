@@ -15,11 +15,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import record, time_fn
-from repro.core import formats
+from repro.core import formats, weights
 from repro.kernels import ref
-from repro.kernels.autotune import CANDIDATE_BLOCKS, HBM_BW
+from repro.kernels.autotune import BlockConfig, CANDIDATE_BLOCKS, HBM_BW
 from repro.kernels.autotune import PEAK_FLOPS as PEAK
-from repro.kernels.ops import TernaryGemmConfig
 
 
 def block_sweep(quick: bool = False):
@@ -33,7 +32,7 @@ def block_sweep(quick: bool = False):
     if quick:
         shapes = shapes[:3]
     for bm, bn, bk in shapes:
-        cfg = TernaryGemmConfig(bm, bn, bk)
+        cfg = BlockConfig(bm, bn, bk)
         vmem = cfg.vmem_bytes()
         # bytes per output tile pass: X tile per k-step + packed W + out
         ksteps = k // bk
@@ -113,11 +112,11 @@ def pallas_kernel_check(quick: bool = False):
     rng = np.random.default_rng(1)
     w = formats.random_ternary(rng, k, n, 0.25)
     x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
-    packed = jnp.asarray(formats.pack_2bit(w))
-    y = ops.ternary_gemm(x, packed, k=k, block_n=128, block_k=256)
+    wc = weights.pack(w, "dense2bit")
+    y = ops.ternary_gemm(x, wc, block_n=128, block_k=256)
     y0 = ref.ternary_matmul_dense(x, jnp.asarray(w))
     err = float(jnp.max(jnp.abs(y - y0)))
-    cfg = TernaryGemmConfig(128, 128, 256)
+    cfg = BlockConfig(128, 128, 256)
     record("pallas/interpret_allclose", 0.0,
            f"max_err={err:.2e},vmem_kb={cfg.vmem_bytes() // 1024}")
     assert err < 1e-3
@@ -175,13 +174,12 @@ def sparsity_skip(quick: bool = False):
 
     # interpret-mode parity at a CI-sized shape (dense pallas vs skipping)
     m, kc, nc = 16, 256, 128
-    wc = formats.random_tile_ternary(rng, kc, nc, 64, 32, 0.125)
-    ttc = formats.TiledTernary.from_dense(wc, tile_k=64, tile_n=32)
+    wd = formats.random_tile_ternary(rng, kc, nc, 64, 32, 0.125)
+    ttc = weights.pack(wd, "tiled", tile_k=64, tile_n=32)
     x = jnp.asarray(np.random.default_rng(1).standard_normal((m, kc)),
                     jnp.float32)
     y_skip = ops.ternary_gemm(x, ttc, impl="skip")
-    y_dense = ops.ternary_gemm(x, jnp.asarray(ttc.packed), k=kc,
-                               block_n=32, block_k=64, impl="dense")[:, :nc]
+    y_dense = ops.ternary_gemm(x, ttc, block_n=32, block_k=64, impl="dense")
     exact = bool(jnp.all(y_skip == y_dense))
     record("sparsity_skip/interpret_bit_exact", 0.0,
            f"exact={exact},visit_frac={ttc.visited_tiles() / ttc.total_tiles():.3f}")

@@ -6,10 +6,9 @@ Run:  PYTHONPATH=src python examples/quantize_and_pack.py
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
-from repro.core import quantize
+from repro.core import weights
 from repro.models import LM, layers as L
 
 
@@ -18,25 +17,33 @@ def main():
     model = LM(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
+    # the one pack entry point converts linears and MoE banks alike
+    packed_params = L.pack_params(params, cfg)
+
     rows = []
 
-    def walk(p, path=""):
-        if isinstance(p, dict):
-            if "w" in p and getattr(p["w"], "ndim", 0) in (2, 3) \
-                    and min(p["w"].shape[-2:]) >= cfg.ternary_min_dim:
-                w = p["w"]
-                t, alpha = quantize.ternarize(
-                    w.reshape(-1, w.shape[-1]), cfg.ternary_threshold)
-                s = float((np.asarray(t) != 0).mean())
-                packed = L.pack_linear(p, cfg)
-                before = w.nbytes
-                after = sum(v.nbytes for v in jax.tree.leaves(packed))
-                rows.append((path, tuple(w.shape), s, before, after))
-                return packed
-            return {k: walk(v, f"{path}/{k}") for k, v in p.items()}
-        return p
+    def stats(latent, packed, path=""):
+        # walk the latent and packed trees in parallel: every container the
+        # conversion produced becomes one row of the report — packed
+        # linears ({"w_packed": ...} nodes) and MoE expert banks
+        # (w_in/w_gate/w_out containers) alike
+        if not isinstance(packed, dict):
+            return
+        wc = packed.get("w_packed")
+        if isinstance(wc, weights.TernaryWeight):
+            before = sum(v.nbytes for v in jax.tree.leaves(latent))
+            after = sum(v.nbytes for v in jax.tree.leaves(packed))
+            rows.append((path, tuple(latent["w"].shape), wc.occupancy(),
+                         before, after))
+            return
+        for k, v in packed.items():
+            if isinstance(v, weights.TernaryWeight):     # MoE expert bank
+                rows.append((f"{path}/{k}", tuple(latent[k].shape),
+                             v.occupancy(), latent[k].nbytes, v.nbytes))
+            else:
+                stats(latent[k], v, f"{path}/{k}")
 
-    packed_params = walk(params)
+    stats(params, packed_params)
     print(f"{'layer':34s} {'shape':>18s} {'nnz':>6s} {'before':>10s} "
           f"{'after':>9s} {'ratio':>6s}")
     tot_b = tot_a = 0

@@ -2,16 +2,17 @@
 
 1. quantize a dense weight matrix to ternary (TWN absmean),
 2. build the paper's TCSC / BlockedTCSC / InterleavedTCSC formats,
-3. pack to the TPU 2-bit kernel format,
-4. run the Pallas kernel (interpret mode on CPU) and every reference
-   algorithm, checking they all agree.
+3. pack into a typed ``weights.TernaryWeight`` container (2-bit kernel
+   format, scale/bias metadata riding along),
+4. inspect the registry's ``GemmPlan``, run the Pallas kernel (interpret
+   mode on CPU) and every reference algorithm, checking they all agree.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import formats, quantize
+from repro.core import formats, quantize, weights
 from repro.kernels import ops, ref
 
 
@@ -33,24 +34,31 @@ def main():
     print(f"TCSC bytes: {tcsc.nbytes():,} "
           f"(dense f32 would be {t_np.size * 4:,})")
 
-    # --- 3. TPU packed format: 2 bits/weight, 16 weights per u32 word ----
-    packed = jnp.asarray(formats.pack_2bit(t_np))
-    print(f"2-bit packed bytes: {packed.nbytes:,} "
-          f"({t_np.size * 4 / packed.nbytes:.0f}x smaller than f32)")
-
-    # --- 4. run everything and compare ------------------------------------
-    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    # --- 3. typed kernel containers: 2 bits/weight, 16 per u32 word ------
     bias = jnp.asarray(rng.standard_normal(n) * 0.1, jnp.float32)
     alpha_v = alpha.reshape(-1)
+    wc = weights.pack(t_np, "dense2bit", scale=alpha_v, bias=bias)
+    print(f"{type(wc).__name__} payload bytes: {wc.nbytes:,} "
+          f"({t_np.size * 4 / wc.nbytes:.0f}x smaller than f32; "
+          f"occupancy {wc.occupancy():.1%})")
+
+    # --- 4. plan, run everything and compare ------------------------------
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    plan = ops.ternary_gemm_plan(wc, m)
+    print(f"GemmPlan: {plan.format}/{plan.impl} blocks="
+          f"{plan.block_m}x{plan.block_n}x{plan.block_k}")
 
     y_oracle = ref.ternary_matmul_dense(x, t, alpha_v, bias)
-    y_kernel = ops.ternary_gemm(x, packed, alpha_v, bias, k=k)
+    y_kernel = ops.ternary_gemm(x, wc)     # scale/bias ride in the container
     y_tcsc = ref.tcsc_matmul(x, tcsc, alpha_v, bias)
     y_blocked = ref.tcsc_matmul_blocked(x, blocked, alpha_v, bias)
     y_inter = ref.tcsc_matmul_interleaved(x, inter, alpha_v, bias)
+    y_base3 = ops.ternary_gemm(
+        x, weights.pack(t_np, "base3", scale=alpha_v, bias=bias))
 
     for name, y in [("pallas-kernel", y_kernel), ("TCSC", y_tcsc),
-                    ("BlockedTCSC", y_blocked), ("InterleavedTCSC", y_inter)]:
+                    ("BlockedTCSC", y_blocked), ("InterleavedTCSC", y_inter),
+                    ("Base3 (ref)", y_base3)]:
         err = float(jnp.max(jnp.abs(y - y_oracle)))
         print(f"{name:18s} max|err| = {err:.2e}")
         assert err < 1e-3

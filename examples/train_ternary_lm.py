@@ -22,17 +22,6 @@ from repro.optim import constant
 from repro import checkpoint as ckpt
 
 
-def pack_params(params, cfg):
-    def walk(p):
-        if isinstance(p, dict):
-            if "w" in p and getattr(p["w"], "ndim", 0) in (2, 3) \
-                    and min(p["w"].shape[-2:]) >= cfg.ternary_min_dim:
-                return L.pack_linear(p, cfg)
-            return {k: walk(v) for k, v in p.items()}
-        return p
-    return walk(params)
-
-
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
@@ -72,7 +61,7 @@ def main():
             ckpt.save(args.ckpt_dir, i + 1, {"params": params, "opt": opt})
 
     # ---- quantize + pack for serving -------------------------------------
-    packed_params = pack_params(params, cfg)
+    packed_params = L.pack_params(params, cfg)
     import dataclasses
     cfg_packed = dataclasses.replace(cfg, quantization="ternary_packed")
     m2 = LM(cfg_packed)

@@ -1,0 +1,38 @@
+"""repro — sparse ternary GEMM for quantized ML, grown into a JAX/Pallas
+serving system.
+
+Top-level surface (locked by ``tests/test_api_surface.py``): the typed
+weight containers (``repro.core.weights``), the registry-dispatched GEMM
+(``repro.kernels``), and the subsystem namespaces. Subpackages are imported
+lazily so lightweight consumers (configs, scripts) don't pay the jax import.
+"""
+import importlib
+
+__all__ = [
+    # subsystem namespaces
+    "configs", "core", "checkpoint", "data", "distributed", "kernels",
+    "launch", "models", "optim", "serving",
+    # the paper-technique surface
+    "TernaryWeight", "Dense2Bit", "Tiled", "Bitplane", "Base3", "pack",
+    "ternary_gemm", "ternary_gemm_plan",
+]
+
+_LAZY = {
+    "TernaryWeight": ("repro.core.weights", "TernaryWeight"),
+    "Dense2Bit": ("repro.core.weights", "Dense2Bit"),
+    "Tiled": ("repro.core.weights", "Tiled"),
+    "Bitplane": ("repro.core.weights", "Bitplane"),
+    "Base3": ("repro.core.weights", "Base3"),
+    "pack": ("repro.core.weights", "pack"),
+    "ternary_gemm": ("repro.kernels.ops", "ternary_gemm"),
+    "ternary_gemm_plan": ("repro.kernels.ops", "ternary_gemm_plan"),
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        module, attr = _LAZY[name]
+        return getattr(importlib.import_module(module), attr)
+    if name in __all__:
+        return importlib.import_module(f"repro.{name}")
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

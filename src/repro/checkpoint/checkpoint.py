@@ -9,6 +9,12 @@ Atomic rename prevents torn checkpoints on failure mid-save; ``latest_step``
 For multi-host deployments, ``save`` is called on the leader only (process
 index 0); leaves are fetched with ``jax.device_get`` which assembles the
 logical array from shards.
+
+Packed ``repro.core.weights.TernaryWeight`` containers serialize leaf-wise
+through the same path (their pytree key paths name the container fields,
+e.g. ``.../w_packed/packed``), so a server can ``restore`` a packed tree
+into a ``quantization="ternary_packed"`` model skeleton and boot without
+re-quantizing or re-packing anything.
 """
 from __future__ import annotations
 
@@ -38,6 +44,8 @@ def _path_str(p) -> str:
         return str(p.key)
     if hasattr(p, "idx"):
         return str(p.idx)
+    if hasattr(p, "name"):       # GetAttrKey: TernaryWeight container fields
+        return str(p.name)
     return str(p)
 
 

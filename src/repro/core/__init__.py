@@ -1,3 +1,6 @@
-from repro.core import formats, quantize
+from repro.core import formats, quantize, weights
+from repro.core.weights import (Base3, Bitplane, Dense2Bit, TernaryWeight,
+                                Tiled, pack, register_format)
 
-__all__ = ["formats", "quantize"]
+__all__ = ["formats", "quantize", "weights", "TernaryWeight", "Dense2Bit",
+           "Tiled", "Bitplane", "Base3", "pack", "register_format"]

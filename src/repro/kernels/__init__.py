@@ -1,11 +1,16 @@
 from repro.kernels.autotune import Autotuner, BlockConfig, get_tuner
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.ops import pack_weights, pack_weights_tiled, ternary_gemm
+from repro.kernels.ops import (GemmPlan, kernel_registry, pack_weights,
+                               pack_weights_tiled, register_kernel,
+                               serving_phase, ternary_gemm,
+                               ternary_gemm_plan)
 from repro.kernels.ternary_gemm import (K_PER_WORD, ternary_gemm_pallas,
                                         ternary_gemm_skip_pallas)
 from repro.kernels.ternary_gemm_bitplane import ternary_gemm_bitplane
 
-__all__ = ["ternary_gemm", "pack_weights", "pack_weights_tiled",
+__all__ = ["ternary_gemm", "ternary_gemm_plan", "GemmPlan",
+           "register_kernel", "kernel_registry", "serving_phase",
+           "pack_weights", "pack_weights_tiled",
            "ternary_gemm_pallas", "ternary_gemm_skip_pallas",
            "ternary_gemm_bitplane", "K_PER_WORD", "flash_attention_pallas",
            "Autotuner", "BlockConfig", "get_tuner"]

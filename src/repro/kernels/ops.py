@@ -1,39 +1,59 @@
-"""jit'd public wrappers + the unified dispatcher for the ternary GEMM
-kernels.
+"""jit'd public wrappers + registry-dispatched planning for the ternary
+GEMM kernels.
 
-``ternary_gemm`` is the user-facing op. It accepts the weight operand in any
-of the kernel formats and routes to the right Pallas kernel:
+``ternary_gemm(x, w)`` is the user-facing op; ``w`` is a
+``repro.core.weights.TernaryWeight`` container (``Dense2Bit`` / ``Tiled`` /
+``Bitplane`` / ``Base3``). Dispatch is two-stage:
 
-* ``(K/16, N) uint32`` packed 2-bit codes      -> dense-decode kernel;
-* ``formats.TiledTernary``                     -> sparsity-adaptive skipping
-  kernel (scalar-prefetch over pack-time occupancy metadata, DESIGN.md §3),
-  falling back to dense when the weight is effectively dense;
-* ``(plus, minus)`` uint8 bitplane pair        -> bitplane kernel, optionally
-  the plane-factorized ``Y = (X @ P) - (X @ M)`` MXU path (DESIGN.md §4).
+1. **plan** — ``ternary_gemm_plan`` consults the kernel registry: each
+   lowering registers ``(format, impl)`` with a priority and a capability
+   predicate (shape / serving phase / pack-time occupancy), and the planner
+   picks the best admissible impl for ``impl="auto"`` (e.g. the skipping
+   kernel only below ``SKIP_OCCUPANCY_CUTOFF`` tile occupancy). Block
+   shapes left ``None`` are resolved by the autotuner
+   (``kernels.autotune``), keyed on (M, K, N, occupancy, impl, phase). The
+   resulting ``GemmPlan`` is an inspectable value object (tests and
+   benchmarks assert on it directly).
+2. **lower** — the registered lowering for ``(plan.format, plan.impl)``
+   runs the Pallas kernel (interpret mode off-TPU) or the XLA reference.
 
-``impl`` selects explicitly ("dense" | "skip" | "bitplane" |
-"bitplane_factorized" | "ref"); the default "auto" picks by format and
-occupancy. Block shapes left as ``None`` are resolved by the autotuner
-(``kernels.autotune``), keyed on (M, K, N, sparsity, impl).
+Registered impls:
 
-Each path pads to tile multiples, picks interpret mode off the backend (CPU
-container -> interpret=True; real TPU -> compiled Mosaic), and defines a
-custom VJP so the op is usable under ``jax.grad`` (dY/dX = g @ T^T; packed
-weights are non-differentiable -- training uses the QAT/STE latent-weight
-path in ``core.quantize``).
+* ``dense2bit``: ``dense`` (Pallas dense-decode), ``ref``;
+* ``tiled``:     ``skip`` (scalar-prefetch tile skipping, DESIGN.md §3),
+                 ``dense`` fallback, ``ref``;
+* ``bitplane``:  ``bitplane``, ``bitplane_factorized`` (MXU
+                 ``Y=(X@P)-(X@M)``, DESIGN.md §4), ``ref``;
+* ``base3``:     ``ref`` (LUT-gather decode — the paper's dropped format,
+                 kept dispatchable for the benchmark record).
+
+New formats/kernels plug in via ``weights.register_format`` +
+``register_kernel`` without touching any call site.
+
+**Deprecation shim**: the pre-container operand union (raw ``(K/16, N)``
+uint32 code matrix, ``formats.TiledTernary``, ``(plus, minus)`` tuple) is
+still accepted — it is wrapped into the equivalent container with a
+``DeprecationWarning`` and produces bit-identical results. This shim is the
+only place the old union exists.
+
+Every path defines a custom VJP (dY/dX = g @ T^T; packed weights are
+non-differentiable — training uses the QAT/STE latent-weight path in
+``core.quantize``).
 """
 from __future__ import annotations
 
 import contextlib
 import contextvars
+import dataclasses
 import functools
-from typing import Optional, Tuple, Union
+import warnings
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import formats
+from repro.core import formats, weights
 from repro.kernels import ref
 from repro.kernels import autotune as autotune_lib
 from repro.kernels.ternary_gemm import (K_PER_WORD, ternary_gemm_pallas,
@@ -41,10 +61,10 @@ from repro.kernels.ternary_gemm import (K_PER_WORD, ternary_gemm_pallas,
 from repro.kernels.ternary_gemm_bitplane import (K_PER_BYTE,
                                                  ternary_gemm_bitplane)
 
-__all__ = ["ternary_gemm", "pack_weights", "pack_weights_tiled",
-           "TernaryGemmConfig", "serving_phase", "current_phase"]
-
-WORDS = 32
+__all__ = ["ternary_gemm", "ternary_gemm_plan", "GemmPlan", "KernelImpl",
+           "register_kernel", "kernel_registry", "precompute_plans",
+           "pack_weights", "pack_weights_tiled",
+           "serving_phase", "current_phase", "SKIP_OCCUPANCY_CUTOFF"]
 
 # Serving-phase tag consumed at trace time: prefill GEMMs are M=B·L
 # GEMM-shaped, decode GEMMs are M=slots GEMV-shaped, and the two must not
@@ -73,25 +93,25 @@ def current_phase() -> Optional[str]:
 # justify the scalar-prefetch indirection; "auto" falls back to dense.
 SKIP_OCCUPANCY_CUTOFF = 0.875
 
-WeightOperand = Union[jnp.ndarray, np.ndarray, formats.TiledTernary,
-                      Tuple[jnp.ndarray, jnp.ndarray]]
-
 
 def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def pack_weights(t: np.ndarray) -> np.ndarray:
-    """Host-side: (K, N) {-1,0,1} -> (ceil(K/16), N) uint32 kernel format."""
-    return formats.pack_2bit(np.asarray(t), word=WORDS)
+def pack_weights(t: np.ndarray, scale=None, bias=None) -> weights.Dense2Bit:
+    """Host-side: (K, N) {-1,0,1} -> ``Dense2Bit`` container (16 weights per
+    uint32 word, the dense kernel format)."""
+    return weights.Dense2Bit.from_dense(np.asarray(t), scale=scale,
+                                        bias=bias)
 
 
 def pack_weights_tiled(t: np.ndarray, tile_k: int = 256,
-                       tile_n: int = 128) -> formats.TiledTernary:
-    """Host-side: (K, N) {-1,0,1} -> TiledTernary (packed words + per-tile
-    occupancy metadata) for the skipping kernel."""
-    return formats.TiledTernary.from_dense(np.asarray(t), tile_k=tile_k,
-                                           tile_n=tile_n)
+                       tile_n: int = 128, scale=None,
+                       bias=None) -> weights.Tiled:
+    """Host-side: (K, N) {-1,0,1} -> ``Tiled`` container (packed words +
+    per-tile occupancy metadata) for the skipping kernel."""
+    return weights.Tiled.from_dense(np.asarray(t), tile_k=tile_k,
+                                    tile_n=tile_n, scale=scale, bias=bias)
 
 
 def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
@@ -210,24 +230,360 @@ _gemm_bitplane.defvjp(_gemm_bitplane_fwd, _gemm_bitplane_bwd)
 
 
 # ---------------------------------------------------------------------------
-# The dispatcher
+# The kernel registry
 # ---------------------------------------------------------------------------
 
-def _resolve_impl(w: WeightOperand, impl: str) -> str:
-    if isinstance(w, formats.TiledTernary):
-        if impl == "auto":
-            return ("skip"
-                    if w.occupancy_fraction() <= SKIP_OCCUPANCY_CUTOFF
-                    else "dense")
-        return impl
-    if isinstance(w, (tuple, list)):
-        return {"auto": "bitplane"}.get(impl, impl)
-    return {"auto": "dense"}.get(impl, impl)
+@dataclasses.dataclass(frozen=True)
+class GemmPlan:
+    """Inspectable dispatch decision for one ternary GEMM.
 
+    Produced by ``ternary_gemm_plan``; consumed by the registered lowering.
+    ``block_*`` are ``None`` for reference (non-Pallas) impls."""
+
+    format: str
+    impl: str
+    m: int
+    k: int
+    n: int
+    block_m: Optional[int]
+    block_n: Optional[int]
+    block_k: Optional[int]
+    phase: Optional[str]
+    occupancy: float
+    interpret: bool
+    fuse_prelu: bool = False
+    prelu_alpha: float = 0.25
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelImpl:
+    """One registered lowering: ``(format, impl)`` -> kernel.
+
+    ``predicate(w, m, phase)`` gates ``impl="auto"`` selection (highest
+    admissible ``priority`` wins); ``plan_blocks(w, m, phase, bm, bn, bk)``
+    resolves block shapes (consulting the autotuner for ``None`` entries);
+    ``lower(plan, x, w, scale, bias)`` executes."""
+
+    format: str
+    impl: str
+    priority: int
+    predicate: Callable[[weights.TernaryWeight, int, Optional[str]], bool]
+    plan_blocks: Callable
+    lower: Callable
+
+
+_KERNELS: Dict[Tuple[str, str], KernelImpl] = {}
+
+
+def register_kernel(fmt: str, impl: str, *, priority: int = 0,
+                    predicate: Optional[Callable] = None,
+                    plan_blocks: Optional[Callable] = None):
+    """Decorator registering a lowering for ``(format, impl)``. The single
+    extension point for new kernels — dispatch, ``impl="auto"`` selection
+    and ``ternary_gemm_plan`` pick it up with no call-site changes."""
+
+    def deco(fn):
+        _KERNELS[(fmt, impl)] = KernelImpl(
+            format=fmt, impl=impl, priority=priority,
+            predicate=predicate or (lambda w, m, phase: True),
+            plan_blocks=plan_blocks or (lambda w, m, phase, bm, bn, bk:
+                                        (bm, bn, bk)),
+            lower=fn)
+        return fn
+
+    return deco
+
+
+def kernel_registry() -> Dict[Tuple[str, str], KernelImpl]:
+    """Snapshot of the registered ``(format, impl) -> KernelImpl`` table."""
+    return dict(_KERNELS)
+
+
+# --- block planning helpers -------------------------------------------------
+
+def _blocks_dense(w, m, phase, bm, bn, bk):
+    # Dense-decode traffic is occupancy-independent: tune under the dense
+    # key (sparsity=1.0) so plans do not depend on pack-time nnz metadata
+    # (keeps a restored checkpoint's plan identical to the packing boot's).
+    if bm is None or bn is None or bk is None:
+        cfg = autotune_lib.get_tuner().lookup(
+            m, w.k, w.n, sparsity=1.0, impl="dense", phase=phase)
+        bm = bm if bm is not None else cfg.block_m
+        bn = bn if bn is not None else cfg.block_n
+        bk = bk if bk is not None else cfg.block_k
+    return bm, bn, bk
+
+
+def _blocks_skip(w, m, phase, bm, bn, bk):
+    # Pack-time tile shapes dictate the kernel's K/N blocks.
+    if bn is not None and bn != w.tile_n:
+        raise ValueError(f"impl='skip': block_n={bn} must equal the pack's "
+                         f"tile_n={w.tile_n}")
+    if bk is not None and bk != w.tile_k:
+        raise ValueError(f"impl='skip': block_k={bk} must equal the pack's "
+                         f"tile_k={w.tile_k}")
+    if bm is None:
+        bm = autotune_lib.get_tuner().lookup(
+            m, w.k, w.n, sparsity=w.occupancy(), impl="skip",
+            fixed_n=w.tile_n, fixed_k=w.tile_k, phase=phase).block_m
+    return bm, w.tile_n, w.tile_k
+
+
+def _blocks_bitplane(impl):
+    def plan(w, m, phase, bm, bn, bk):
+        if bm is None or bn is None or bk is None:
+            cfg = autotune_lib.get_tuner().lookup(
+                m, w.k, w.n, impl=impl, phase=phase)
+            bm = bm if bm is not None else cfg.block_m
+            bn = bn if bn is not None else cfg.block_n
+            bk = bk if bk is not None else cfg.block_k
+        return bm, bn, bk
+    return plan
+
+
+def _no_blocks(w, m, phase, bm, bn, bk):
+    return None, None, None
+
+
+def _require_2d(w, *leaves):
+    for leaf in leaves:
+        if getattr(leaf, "ndim", 2) != 2:
+            raise ValueError(
+                f"{w.format_name} weight has stacked leaves "
+                f"{tuple(leaf.shape)}; slice the stack (scan/vmap) down to "
+                f"2-D before ternary_gemm")
+
+
+# --- dense2bit lowerings ----------------------------------------------------
+
+@register_kernel("dense2bit", "dense", priority=10,
+                 plan_blocks=_blocks_dense)
+def _lower_dense(plan, x, w, scale, bias):
+    wp = jnp.asarray(w.packed)
+    _require_2d(w, wp)
+    return _gemm_2bit(x, wp[:, :w.n], scale, bias, None, None,
+                      w.n, plan.block_m, plan.block_n, plan.block_k,
+                      plan.fuse_prelu, plan.prelu_alpha, plan.interpret)
+
+
+@register_kernel("dense2bit", "ref", plan_blocks=_no_blocks)
+def _lower_dense_ref(plan, x, w, scale, bias):
+    wp = jnp.asarray(w.packed)
+    _require_2d(w, wp)
+    return ref.packed2bit_matmul(
+        x, wp, w.k, alpha=scale, bias=bias,
+        prelu_alpha=plan.prelu_alpha if plan.fuse_prelu else None)[:, :w.n]
+
+
+# --- tiled lowerings --------------------------------------------------------
+
+@register_kernel("tiled", "skip", priority=10,
+                 predicate=lambda w, m, phase:
+                     w.occupancy() <= SKIP_OCCUPANCY_CUTOFF,
+                 plan_blocks=_blocks_skip)
+def _lower_skip(plan, x, w, scale, bias):
+    return _gemm_2bit(x, jnp.asarray(w.packed), scale, bias,
+                      jnp.asarray(w.kt_indices), jnp.asarray(w.kt_counts),
+                      w.n, plan.block_m, plan.block_n, plan.block_k,
+                      plan.fuse_prelu, plan.prelu_alpha, plan.interpret)
+
+
+@register_kernel("tiled", "dense", priority=5, plan_blocks=_blocks_dense)
+def _lower_tiled_dense(plan, x, w, scale, bias):
+    # packed word columns map 1:1 to W columns -> drop the N padding
+    return _gemm_2bit(x, jnp.asarray(w.packed)[:, :w.n], scale, bias,
+                      None, None, w.n, plan.block_m, plan.block_n,
+                      plan.block_k, plan.fuse_prelu, plan.prelu_alpha,
+                      plan.interpret)
+
+
+@register_kernel("tiled", "ref", plan_blocks=_no_blocks)
+def _lower_tiled_ref(plan, x, w, scale, bias):
+    return ref.packed2bit_matmul(
+        x, jnp.asarray(w.packed)[:, :w.n], w.k, alpha=scale, bias=bias,
+        prelu_alpha=plan.prelu_alpha if plan.fuse_prelu else None)
+
+
+# --- bitplane lowerings -----------------------------------------------------
+
+def _lower_bitplane_common(plan, x, w, scale, bias, factorized):
+    plus, minus = jnp.asarray(w.plus), jnp.asarray(w.minus)
+    _require_2d(w, plus)
+    bm, bn, bk = plan.block_m, plan.block_n, plan.block_k
+    xp = _pad_to(x, 1, plus.shape[0] * K_PER_BYTE)
+    y = _gemm_bitplane(xp, plus, minus, scale, bm, bn, bk, factorized,
+                       plan.interpret)
+    if bias is not None:
+        y = y + bias.reshape(1, -1).astype(y.dtype)
+    if plan.fuse_prelu:
+        y = jnp.where(y >= 0, y, jnp.asarray(plan.prelu_alpha, y.dtype) * y)
+    return y
+
+
+@register_kernel("bitplane", "bitplane", priority=10,
+                 plan_blocks=_blocks_bitplane("bitplane"))
+def _lower_bitplane(plan, x, w, scale, bias):
+    return _lower_bitplane_common(plan, x, w, scale, bias, factorized=False)
+
+
+@register_kernel("bitplane", "bitplane_factorized", priority=5,
+                 plan_blocks=_blocks_bitplane("bitplane_factorized"))
+def _lower_bitplane_fact(plan, x, w, scale, bias):
+    return _lower_bitplane_common(plan, x, w, scale, bias, factorized=True)
+
+
+@register_kernel("bitplane", "ref", plan_blocks=_no_blocks)
+def _lower_bitplane_ref(plan, x, w, scale, bias):
+    return ref.bitplane_matmul(
+        x, jnp.asarray(w.plus), jnp.asarray(w.minus), w.k, alpha=scale,
+        bias=bias,
+        prelu_alpha=plan.prelu_alpha if plan.fuse_prelu else None)[:, :w.n]
+
+
+# --- base3 lowering (the paper's value-compression format, ref-backed) ------
+
+@register_kernel("base3", "ref", priority=10, plan_blocks=_no_blocks)
+def _lower_base3_ref(plan, x, w, scale, bias):
+    return ref.base3_matmul(
+        x, jnp.asarray(w.packed), w.k, alpha=scale, bias=bias,
+        prelu_alpha=plan.prelu_alpha if plan.fuse_prelu else None)[:, :w.n]
+
+
+# ---------------------------------------------------------------------------
+# The planner
+# ---------------------------------------------------------------------------
+
+def _coerce_weight(w: Any, k: Optional[int],
+                   xk: Optional[int]) -> weights.TernaryWeight:
+    """Deprecation shim: wrap the pre-container operand union into the
+    equivalent typed container (bit-identical lowering)."""
+    if isinstance(w, weights.TernaryWeight):
+        return w
+    warnings.warn(
+        "passing a raw packed array / formats.TiledTernary / (plus, minus) "
+        "tuple to ternary_gemm is deprecated; pack into a "
+        "repro.core.weights.TernaryWeight (weights.pack / "
+        "kernels.pack_weights*) instead",
+        DeprecationWarning, stacklevel=3)
+    if isinstance(w, formats.TiledTernary):
+        return weights.Tiled.from_tiled(w)
+    if isinstance(w, (tuple, list)):
+        if len(w) != 2:
+            raise TypeError(f"bitplane operand must be a (plus, minus) "
+                            f"pair, got length {len(w)}")
+        kk = k if k is not None else xk
+        if kk is None:
+            raise ValueError("cannot infer K for a bare bitplane pair; "
+                             "pass k= or use weights.Bitplane")
+        return weights.Bitplane.from_planes(w[0], w[1], k=kk)
+    if getattr(w, "ndim", 0) == 2:
+        kk = k if k is not None else xk
+        if kk is None:
+            # Don't guess from the padded word count: a plan built on the
+            # wrong K would misdescribe (and mis-warm the autotuner for)
+            # the dispatch ternary_gemm later executes.
+            raise ValueError("cannot infer K for a raw packed word matrix; "
+                             "pass k= or use weights.Dense2Bit")
+        return weights.Dense2Bit.from_packed(w, k=kk)
+    raise TypeError(
+        f"unsupported ternary_gemm weight operand {type(w).__name__}; "
+        f"expected a repro.core.weights.TernaryWeight")
+
+
+def _validate_k(w: weights.TernaryWeight, xk: int, k: Optional[int]) -> None:
+    """One K check for every format (the old dispatcher inferred K from x on
+    the dense path but asserted on the operand for skip)."""
+    if k is not None and k != w.k:
+        raise ValueError(
+            f"k={k} does not match the {w.format_name} weight's logical "
+            f"K={w.k} (shape {w.shape})")
+    if xk != w.k:
+        raise ValueError(
+            f"x has K={xk} columns but the {w.format_name} weight encodes "
+            f"K={w.k} (shape {w.shape}); reshape x or repack the weight")
+
+
+def ternary_gemm_plan(
+    w: Any,
+    m: int,
+    *,
+    k: Optional[int] = None,
+    impl: str = "auto",
+    phase: Optional[str] = "__current__",
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
+    fuse_prelu: bool = False,
+    prelu_alpha: float = 0.25,
+    interpret: Optional[bool] = None,
+) -> GemmPlan:
+    """Plan (but do not run) a ternary GEMM: registry + autotuner -> an
+    inspectable ``GemmPlan``. ``phase`` defaults to the ambient
+    ``serving_phase`` scope; ``k`` is only needed to plan a *deprecated*
+    raw operand, whose logical K the container union carried implicitly.
+    Planning uses only static container metadata, so it is trace-safe and
+    cheap to precompute (the serving engine warms phase-keyed plans for
+    every packed weight at build time)."""
+    w = _coerce_weight(w, k, None)
+    if phase == "__current__":
+        phase = current_phase()
+    interpret = _auto_interpret() if interpret is None else interpret
+    fmt = w.format_name
+    if impl == "auto":
+        cands = sorted((ki for ki in _KERNELS.values() if ki.format == fmt),
+                       key=lambda ki: -ki.priority)
+        if not cands:
+            raise ValueError(f"no kernel registered for format {fmt!r}")
+        chosen = next((ki for ki in cands if ki.predicate(w, m, phase)),
+                      cands[-1])
+    else:
+        chosen = _KERNELS.get((fmt, impl))
+        if chosen is None:
+            avail = sorted(i for f, i in _KERNELS if f == fmt)
+            raise ValueError(f"no impl {impl!r} registered for format "
+                             f"{fmt!r}; available: {avail}")
+    bm, bn, bk = chosen.plan_blocks(w, m, phase, block_m, block_n, block_k)
+    return GemmPlan(format=fmt, impl=chosen.impl, m=m, k=w.k, n=w.n,
+                    block_m=bm, block_n=bn, block_k=bk, phase=phase,
+                    occupancy=w.occupancy(), interpret=interpret,
+                    fuse_prelu=fuse_prelu, prelu_alpha=prelu_alpha)
+
+
+def precompute_plans(params, *, prefill_ms=(), decode_ms=(),
+                     select: Optional[Callable] = None, impl: str = "auto",
+                     ) -> Dict[Tuple[int, ...], GemmPlan]:
+    """Warm phase-keyed plans for ``TernaryWeight``s in a param tree.
+
+    Called once at serving-engine build: every (weight, M-bucket, phase)
+    combination the hot loop will dispatch gets its autotune entry resolved
+    (and persisted) up front, so no serving step pays a first-call tune.
+    ``select(path, w) -> bool`` filters which containers to plan — the
+    engine selects only those that actually dispatch through
+    ``ternary_gemm`` (packed linears), not containers a model materializes
+    instead (MoE expert banks) — and ``impl`` should be the impl the apply
+    path will dispatch (planning ``"ref"`` touches no autotune state).
+    Returns the plans keyed by (leaf index, m, phase) for introspection."""
+    flat = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda v: isinstance(v, weights.TernaryWeight))[0]
+    ws = [(path, w) for path, w in flat
+          if isinstance(w, weights.TernaryWeight)
+          and (select is None or select(path, w))]
+    plans: Dict[Tuple[int, ...], GemmPlan] = {}
+    for i, (_, w) in enumerate(ws):
+        for phase, ms in (("prefill", prefill_ms), ("decode", decode_ms)):
+            for m in ms:
+                plans[(i, m, phase)] = ternary_gemm_plan(w, m, impl=impl,
+                                                         phase=phase)
+    return plans
+
+
+# ---------------------------------------------------------------------------
+# The public op
+# ---------------------------------------------------------------------------
 
 def ternary_gemm(
     x: jnp.ndarray,
-    w: WeightOperand,
+    w: Any,
     scale: Optional[jnp.ndarray] = None,
     bias: Optional[jnp.ndarray] = None,
     k: Optional[int] = None,
@@ -241,90 +597,19 @@ def ternary_gemm(
 ) -> jnp.ndarray:
     """Y = X @ decode(w) * scale + bias (+PReLU). Any (M, K, N).
 
-    ``w`` is a packed uint32 code matrix, a ``formats.TiledTernary``, or a
-    ``(plus, minus)`` bitplane pair; ``impl`` routes (see module docstring).
-    ``block_*`` left as ``None`` consult the autotuner.
+    ``w`` is a ``repro.core.weights.TernaryWeight``; ``scale``/``bias``
+    default to the container's own metadata. ``impl`` selects a registered
+    lowering explicitly ("auto" plans by format/occupancy/phase — see
+    module docstring); ``block_*`` left ``None`` consult the autotuner.
+    ``k`` is redundant with the container (validated) and kept for the
+    deprecated raw-operand union.
     """
-    interpret = _auto_interpret() if interpret is None else interpret
-    impl = _resolve_impl(w, impl)
-    m = x.shape[0]
-    tuner = autotune_lib.get_tuner()
-    phase = current_phase()
-
-    if impl == "skip":
-        assert isinstance(w, formats.TiledTernary), \
-            "impl='skip' needs a TiledTernary weight operand"
-        kk, n = w.shape
-        assert k is None or k == kk, (k, kk)
-        # Pack-time tile shapes dictate the kernel's K/N blocks.
-        assert block_n is None or block_n == w.tile_n, (block_n, w.tile_n)
-        assert block_k is None or block_k == w.tile_k, (block_k, w.tile_k)
-        bm = block_m if block_m is not None else tuner.lookup(
-            m, kk, n, sparsity=w.occupancy_fraction(), impl="skip",
-            fixed_n=w.tile_n, fixed_k=w.tile_k, phase=phase).block_m
-        return _gemm_2bit(x, jnp.asarray(w.packed), scale, bias,
-                          jnp.asarray(w.kt_indices), jnp.asarray(w.kt_counts),
-                          n, bm, w.tile_n, w.tile_k,
-                          fuse_prelu, prelu_alpha, interpret)
-
-    if impl in ("bitplane", "bitplane_factorized"):
-        assert isinstance(w, (tuple, list)) and len(w) == 2, \
-            f"impl={impl!r} needs a (plus, minus) bitplane pair"
-        plus, minus = w
-        kb, n = plus.shape
-        kk = x.shape[1] if k is None else k
-        assert kb * K_PER_BYTE >= kk
-        if block_m is None or block_n is None or block_k is None:
-            cfg = tuner.lookup(m, kk, n, impl=impl, phase=phase)
-            block_m = block_m if block_m is not None else cfg.block_m
-            block_n = block_n if block_n is not None else cfg.block_n
-            block_k = block_k if block_k is not None else cfg.block_k
-        bm, bn, bk = block_m, block_n, block_k
-        xp = _pad_to(x, 1, kb * K_PER_BYTE)
-        y = _gemm_bitplane(xp, plus, minus, scale, bm, bn, bk,
-                           impl == "bitplane_factorized", interpret)
-        if bias is not None:
-            y = y + bias.reshape(1, -1).astype(y.dtype)
-        if fuse_prelu:
-            y = jnp.where(y >= 0, y, jnp.asarray(prelu_alpha, y.dtype) * y)
-        return y
-
-    # 2-bit-code paths ("dense" / "ref")
-    if isinstance(w, formats.TiledTernary):
-        # packed word columns map 1:1 to W columns -> drop the N padding
-        w_packed = jnp.asarray(w.packed)[:, :w.shape[1]]
-    else:
-        w_packed = w
-    kw, n = w_packed.shape
-    kk = x.shape[1] if k is None else k
-    assert kw * K_PER_WORD >= kk, (kw, kk)
-
-    if impl == "ref":
-        return ref.packed2bit_matmul(
-            x, w_packed, kk, alpha=scale, bias=bias,
-            prelu_alpha=prelu_alpha if fuse_prelu else None)[:, :n]
-
-    assert impl == "dense", f"unknown impl {impl!r}"
-    if block_m is None or block_n is None or block_k is None:
-        sparsity = (w.occupancy_fraction()
-                    if isinstance(w, formats.TiledTernary) else 1.0)
-        cfg = tuner.lookup(m, kk, n, sparsity=sparsity, impl="dense",
-                           phase=phase)
-        block_m = block_m if block_m is not None else cfg.block_m
-        block_n = block_n if block_n is not None else cfg.block_n
-        block_k = block_k if block_k is not None else cfg.block_k
-    bm, bn, bk = block_m, block_n, block_k
-    return _gemm_2bit(x, w_packed, scale, bias, None, None,
-                      n, bm, bn, bk, fuse_prelu, prelu_alpha, interpret)
-
-
-class TernaryGemmConfig:
-    """Block-shape configuration record used by the benchmark sweeps
-    (the TPU analogue of the paper's unroll-factor grid search, Figs 2-4)."""
-
-    def __init__(self, block_m=128, block_n=128, block_k=512):
-        self.block_m, self.block_n, self.block_k = block_m, block_n, block_k
-
-    def vmem_bytes(self, dtype_bytes=2) -> int:
-        return autotune_lib.BlockConfig(
-            self.block_m, self.block_n, self.block_k).vmem_bytes(dtype_bytes)
+    w = _coerce_weight(w, k, x.shape[1])
+    _validate_k(w, x.shape[1], k)
+    scale = w.scale if scale is None else scale
+    bias = w.bias if bias is None else bias
+    plan = ternary_gemm_plan(
+        w, x.shape[0], impl=impl, block_m=block_m, block_n=block_n,
+        block_k=block_k, fuse_prelu=fuse_prelu, prelu_alpha=prelu_alpha,
+        interpret=interpret)
+    return _KERNELS[(plan.format, plan.impl)].lower(plan, x, w, scale, bias)

@@ -14,6 +14,8 @@ Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch ternary-paper --reduced \
       --requests 32 --slots 8 --prompt-len 32 --gen-lens 8,64
   ... --static --batch 8     # legacy static-batch A/B reference
+  ... --packed --ternary-min-dim 64   # TernaryWeight packed serving
+                                      # (reduced configs need the override)
 """
 from __future__ import annotations
 
@@ -161,21 +163,50 @@ def main(argv: Optional[Sequence[str]] = None):
                     help="cache capacity (0: prompt+max(gen-lens)+1)")
     ap.add_argument("--static", action="store_true",
                     help="legacy static-batch loop (A/B reference)")
+    ap.add_argument("--packed", action="store_true",
+                    help="quantize+pack ternarizable projections into the "
+                         "TernaryWeight serving format before load (the "
+                         "engine precomputes phase-keyed GemmPlans)")
+    ap.add_argument("--ternary-min-dim", type=int, default=0,
+                    help=">0: override cfg.ternary_min_dim — reduced smoke "
+                         "configs need ~64 for --packed to convert their "
+                         "small projections")
     ap.add_argument("--eos-id", type=int, default=-1,
                     help=">=0: stop a request early on this token")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch, reduced=args.reduced)
+    overrides = ({"ternary_min_dim": args.ternary_min_dim}
+                 if args.ternary_min_dim > 0 else {})
+    cfg = get_config(args.arch, reduced=args.reduced, **overrides)
     gen_lens = [int(g) for g in args.gen_lens.split(",")]
     max_len = args.max_len or args.prompt_len + max(gen_lens) + 1
     prompts, gens, extras = build_workload(cfg, args.requests,
                                            args.prompt_len, gen_lens,
                                            seed=args.seed)
 
+    params = LM(cfg).init(jax.random.PRNGKey(args.seed))
+    if args.packed:
+        import dataclasses
+        import sys
+        from repro.core import weights
+        from repro.models import layers as L
+        params = L.pack_params(params, cfg)
+        n_packed = sum(isinstance(w, weights.TernaryWeight)
+                       for w in jax.tree_util.tree_leaves(
+                           params, is_leaf=lambda v: isinstance(
+                               v, weights.TernaryWeight)))
+        if n_packed:
+            cfg = dataclasses.replace(cfg, quantization="ternary_packed")
+        else:
+            print(f"warning: --packed converted nothing (quantization="
+                  f"{cfg.quantization!r}, no projection meets "
+                  f"ternary_min_dim={cfg.ternary_min_dim}); serving the "
+                  f"dense model", file=sys.stderr)
+
     if args.static:
         server = BatchedServer(cfg, max_len)
-        server.load(server.model.init(jax.random.PRNGKey(args.seed)))
+        server.load(params)
         _, metrics = run_static(server, prompts, gens, args.batch,
                                 extras=extras)
     else:
@@ -183,7 +214,7 @@ def main(argv: Optional[Sequence[str]] = None):
         eos = args.eos_id if args.eos_id >= 0 else None
         engine = ContinuousScheduler(cfg, max_slots=args.slots,
                                      max_len=max_len, eos_id=eos)
-        engine.load(engine.model.init(jax.random.PRNGKey(args.seed)))
+        engine.load(params)
         _, metrics = run_continuous(engine, prompts, gens)
     print(json.dumps(metrics))
     return metrics

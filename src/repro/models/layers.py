@@ -20,8 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core import formats, quantize
-from repro.kernels import ref as kref
+from repro.core import quantize, weights
 
 # Logical axis names (resolved in distributed/sharding.py)
 FSDP = "fsdp"      # -> data axes if cfg.fsdp else None
@@ -52,14 +51,22 @@ def linear_init(key, cfg: ModelConfig, d_in: int, d_out: int,
     ternary = _is_ternary(cfg, d_in, d_out)
     params, specs = {}, {}
     if cfg.quantization == "ternary_packed" and ternary:
+        # Serving format: a TernaryWeight container is the parameter (its
+        # array leaves flow through stacking/scan/sharding like any other
+        # leaf; the spec twin mirrors it with PartitionSpec leaves).
         kw = (d_in + 15) // 16
-        params["w_packed"] = jnp.zeros((kw, d_out), jnp.uint32)
-        params["w_scale"] = jnp.ones((d_out,), jnp.float32)
-        specs["w_packed"] = P(in_axis, out_axis)
-        specs["w_scale"] = P(out_axis)
-    else:
-        params["w"] = jax.random.normal(key, (d_in, d_out), _pdtype(cfg)) * std
-        specs["w"] = P(in_axis, out_axis)
+        wc = weights.Dense2Bit(
+            packed=jnp.zeros((kw, d_out), jnp.uint32),
+            scale=jnp.ones((d_out,), jnp.float32),
+            bias=jnp.zeros((d_out,), jnp.float32) if use_bias else None,
+            shape=(d_in, d_out))
+        params["w_packed"] = wc
+        specs["w_packed"] = wc.replace(
+            packed=P(in_axis, out_axis), scale=P(out_axis),
+            bias=P(out_axis) if use_bias else None)
+        return params, specs
+    params["w"] = jax.random.normal(key, (d_in, d_out), _pdtype(cfg)) * std
+    specs["w"] = P(in_axis, out_axis)
     if use_bias:
         params["b"] = jnp.zeros((d_out,), _pdtype(cfg))
         specs["b"] = P(out_axis)
@@ -79,21 +86,29 @@ def _use_pallas_gemm(cfg: ModelConfig) -> bool:
     return jax.default_backend() == "tpu"
 
 
+def gemm_impl(cfg: ModelConfig) -> str:
+    """The ``ternary_gemm`` impl the packed-linear apply path dispatches
+    for this config: ``"auto"`` (registry + autotuner, Pallas) when the
+    Pallas path is active, else the XLA dense-decode ``"ref"`` oracle.
+    Single source of truth — the serving engine warms GemmPlans for
+    exactly this impl."""
+    return "auto" if _use_pallas_gemm(cfg) else "ref"
+
+
 def linear_apply(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
     """x: (..., d_in) -> (..., d_out)."""
-    if "w_packed" in params:
-        k = x.shape[-1]
+    wc = params.get("w_packed")
+    if wc is not None and not isinstance(wc, weights.TernaryWeight):
+        raise TypeError(
+            "params['w_packed'] is a raw array (the pre-container packed "
+            "format); re-pack from the latent (unpacked) weights with "
+            "models.layers.pack_params, or wrap the buffer directly via "
+            "weights.Dense2Bit.from_packed(words, k=d_in, scale=...)")
+    if isinstance(wc, weights.TernaryWeight):
         lead = x.shape[:-1]
-        x2 = x.reshape(-1, k)
-        if _use_pallas_gemm(cfg):
-            # Autotuned Pallas kernel (blocks=None -> kernels.autotune pick);
-            # on CPU the XLA dense-decode path below is the faster oracle.
-            from repro.kernels import ops as kops
-            y = kops.ternary_gemm(x2, params["w_packed"],
-                                  scale=params["w_scale"], k=k)
-        else:
-            y = kref.packed2bit_matmul(x2, params["w_packed"], k,
-                                       alpha=params["w_scale"])
+        x2 = x.reshape(-1, x.shape[-1])
+        from repro.kernels import ops as kops
+        y = kops.ternary_gemm(x2, wc, impl=gemm_impl(cfg))
         y = y.reshape(*lead, -1)
     else:
         w = params["w"]
@@ -107,31 +122,38 @@ def linear_apply(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
 
 def pack_linear(params: dict, cfg: ModelConfig) -> dict:
     """Convert a latent-weight linear into the packed serving format
-    (host-side; used by examples/quantize_and_pack.py and serve path).
+    (host-side): the parameter becomes a ``weights.Dense2Bit`` container
+    carrying per-channel ternarization scales (and the bias, when present).
     Handles scan-stacked weights: a (L, K, N) stack packs to
-    (L, ceil(K/16), N) + per-layer scales — scan slicing hands the kernel
-    2-D blocks at apply time."""
-    import numpy as np
+    (L, ceil(K/16), N) leaves — scan slicing hands the kernel 2-D blocks
+    at apply time."""
     if "w" not in params:
         return params
     w = params["w"]
     if not _is_ternary(cfg, *w.shape[-2:]):
         return params
-    if w.ndim == 2:
-        t, alpha = quantize.ternarize(w, cfg.ternary_threshold)
-        out = {"w_packed": jnp.asarray(formats.pack_2bit(np.asarray(t))),
-               "w_scale": jnp.asarray(alpha.reshape(-1))}
-    else:
-        packs, scales = [], []
-        for i in range(w.shape[0]):
-            t, alpha = quantize.ternarize(w[i], cfg.ternary_threshold)
-            packs.append(formats.pack_2bit(np.asarray(t)))
-            scales.append(np.asarray(alpha).reshape(-1))
-        out = {"w_packed": jnp.asarray(np.stack(packs)),
-               "w_scale": jnp.asarray(np.stack(scales))}
-    if "b" in params:
-        out["b"] = params["b"]
-    return out
+    return {"w_packed": weights.pack(w, "dense2bit", bias=params.get("b"),
+                                     threshold=cfg.ternary_threshold)}
+
+
+def pack_params(params, cfg: ModelConfig):
+    """Walk a model param tree, converting every ternarizable projection
+    (plain or scan-stacked linears, MoE expert banks) into the packed
+    ``TernaryWeight`` serving format. The single pack entry point for
+    serving / checkpointing (examples, launch.serve, tests)."""
+    from repro.models import moe as moe_lib
+
+    def walk(p):
+        if isinstance(p, dict):
+            if "router" in p and "w_in" in p:
+                return moe_lib.pack_moe(p, cfg)
+            if "w" in p and getattr(p["w"], "ndim", 0) in (2, 3) \
+                    and min(p["w"].shape[-2:]) >= cfg.ternary_min_dim:
+                return pack_linear(p, cfg)
+            return {k: walk(v) for k, v in p.items()}
+        return p
+
+    return walk(params)
 
 
 # ---------------------------------------------------------------------------

@@ -22,8 +22,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core import quantize
-from repro.models.layers import FSDP, MODEL, _pdtype
+from repro.core import quantize, weights
+from repro.models.layers import FSDP, MODEL, _is_ternary, _pdtype
 
 EXPERT = "expert"   # logical axis: resolved to "model" when E % model == 0
 
@@ -39,25 +39,30 @@ def moe_init(key, cfg: ModelConfig):
         "router": P(None, None),
     }
     if cfg.quantization == "ternary_packed":
-        # serving format: 2-bit packed expert weights + per-channel scales —
-        # 16x less weight bandwidth where it matters most (expert weights
-        # dominate MoE bytes; the paper's technique at its highest leverage)
+        # serving format: TernaryWeight containers of 2-bit packed expert
+        # banks + per-channel scales — 16x less weight bandwidth where it
+        # matters most (expert weights dominate MoE bytes; the paper's
+        # technique at its highest leverage)
         kw_d, kw_f = (d + 15) // 16, (f + 15) // 16
+
+        def bank(kw, n, kdim):
+            return weights.Dense2Bit(
+                packed=jnp.zeros((e, kw, n), jnp.uint32),
+                scale=jnp.ones((e, n), jnp.float32), bias=None,
+                shape=(kdim, n))
+
         params.update({
-            "w_in_packed": jnp.zeros((e, kw_d, f), jnp.uint32),
-            "w_in_scale": jnp.ones((e, f), jnp.float32),
-            "w_gate_packed": jnp.zeros((e, kw_d, f), jnp.uint32),
-            "w_gate_scale": jnp.ones((e, f), jnp.float32),
-            "w_out_packed": jnp.zeros((e, kw_f, d), jnp.uint32),
-            "w_out_scale": jnp.ones((e, d), jnp.float32),
+            "w_in": bank(kw_d, f, d),
+            "w_gate": bank(kw_d, f, d),
+            "w_out": bank(kw_f, d, f),
         })
         specs.update({
-            "w_in_packed": P(EXPERT, FSDP, MODEL),
-            "w_in_scale": P(EXPERT, MODEL),
-            "w_gate_packed": P(EXPERT, FSDP, MODEL),
-            "w_gate_scale": P(EXPERT, MODEL),
-            "w_out_packed": P(EXPERT, MODEL, FSDP),
-            "w_out_scale": P(EXPERT, FSDP),
+            "w_in": params["w_in"].replace(
+                packed=P(EXPERT, FSDP, MODEL), scale=P(EXPERT, MODEL)),
+            "w_gate": params["w_gate"].replace(
+                packed=P(EXPERT, FSDP, MODEL), scale=P(EXPERT, MODEL)),
+            "w_out": params["w_out"].replace(
+                packed=P(EXPERT, MODEL, FSDP), scale=P(EXPERT, FSDP)),
         })
     else:
         params.update({
@@ -130,18 +135,11 @@ def moe_apply(params, x: jnp.ndarray, cfg: ModelConfig
     # (§Perf D2 tried pinning the dispatch sharding here; measured: it
     # fights GSPMD propagation — t_coll 165 -> 436 s. Refuted; see
     # EXPERIMENTS.md §Perf cell D.)
-    if "w_in_packed" in params:
-        from repro.core import formats
-
-        def dec(packed, scale, kdim):
-            w = jax.vmap(lambda p: formats.decode_2bit(p, kdim, x.dtype))(
-                packed)
-            return w * scale[:, None, :].astype(x.dtype)
-
-        w_in = dec(params["w_in_packed"], params["w_in_scale"], d)
-        w_gate = dec(params["w_gate_packed"], params["w_gate_scale"], d)
-        w_out = dec(params["w_out_packed"], params["w_out_scale"],
-                    cfg.d_ff_expert)
+    if isinstance(params["w_in"], weights.TernaryWeight):
+        # packed expert banks: decode + scale into the compute dtype
+        w_in = params["w_in"].materialize(x.dtype, with_scale=True)
+        w_gate = params["w_gate"].materialize(x.dtype, with_scale=True)
+        w_out = params["w_out"].materialize(x.dtype, with_scale=True)
     else:
         w_in = _expert_weight(params["w_in"], cfg).astype(x.dtype)
         w_gate = _expert_weight(params["w_gate"], cfg).astype(x.dtype)
@@ -169,3 +167,23 @@ def moe_apply(params, x: jnp.ndarray, cfg: ModelConfig
         jax.nn.one_hot(top_ids[..., 0], e, dtype=jnp.float32), axis=(0, 1))
     aux = e * jnp.sum(me * ce)
     return y.reshape(b, s, d).astype(x.dtype), aux
+
+
+def pack_moe(params: dict, cfg: ModelConfig) -> dict:
+    """Host-side: convert a latent MoE node's expert banks ((E, K, N) or
+    scan-stacked (L, E, K, N)) into packed ``Dense2Bit`` containers, each
+    expert matrix ternarized per-channel. Router / shared-expert weights
+    stay latent (they are small and always-on). Gated like
+    ``layers.pack_linear``: an unquantized config (or experts below
+    ``ternary_min_dim``) passes through untouched — packing is lossy and
+    must never be applied unrequested."""
+    if isinstance(params.get("w_in"), weights.TernaryWeight) \
+            or "w_in" not in params \
+            or not _is_ternary(cfg, *params["w_in"].shape[-2:]):
+        return params
+    out = {k: v for k, v in params.items()
+           if k not in ("w_in", "w_gate", "w_out")}
+    for name in ("w_in", "w_gate", "w_out"):
+        out[name] = weights.pack(params[name], "dense2bit",
+                                 threshold=cfg.ternary_threshold)
+    return out

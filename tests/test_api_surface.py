@@ -1,0 +1,84 @@
+"""Public-API surface lock.
+
+Golden lists of the exported names of the packages whose surface downstream
+code (benchmarks, examples, serving deployments) programs against. An
+accidental rename / deletion / unexported addition fails here before it
+breaks a consumer; a *deliberate* API change updates the golden list in the
+same PR (that diff is the review signal).
+"""
+import importlib
+
+import pytest
+
+GOLDEN = {
+    "repro": {
+        "configs", "core", "checkpoint", "data", "distributed", "kernels",
+        "launch", "models", "optim", "serving",
+        "TernaryWeight", "Dense2Bit", "Tiled", "Bitplane", "Base3", "pack",
+        "ternary_gemm", "ternary_gemm_plan",
+    },
+    "repro.core": {
+        "formats", "quantize", "weights",
+        "TernaryWeight", "Dense2Bit", "Tiled", "Bitplane", "Base3",
+        "pack", "register_format",
+    },
+    "repro.core.weights": {
+        "TernaryWeight", "Dense2Bit", "Tiled", "Bitplane", "Base3",
+        "FORMATS", "register_format", "pack", "ternarize_stacked",
+    },
+    "repro.kernels": {
+        "ternary_gemm", "ternary_gemm_plan", "GemmPlan",
+        "register_kernel", "kernel_registry", "serving_phase",
+        "pack_weights", "pack_weights_tiled",
+        "ternary_gemm_pallas", "ternary_gemm_skip_pallas",
+        "ternary_gemm_bitplane", "K_PER_WORD", "flash_attention_pallas",
+        "Autotuner", "BlockConfig", "get_tuner",
+    },
+    "repro.serving": {
+        "ContinuousScheduler", "Request", "RequestQueue", "SlotPool",
+    },
+    "repro.checkpoint": {"save", "restore", "latest_step"},
+}
+
+# Formats every deployment depends on being registered + dispatchable.
+GOLDEN_FORMATS = {"dense2bit", "tiled", "bitplane", "base3"}
+GOLDEN_KERNELS = {
+    ("dense2bit", "dense"), ("dense2bit", "ref"),
+    ("tiled", "skip"), ("tiled", "dense"), ("tiled", "ref"),
+    ("bitplane", "bitplane"), ("bitplane", "bitplane_factorized"),
+    ("bitplane", "ref"),
+    ("base3", "ref"),
+}
+
+
+@pytest.mark.parametrize("module", sorted(GOLDEN))
+def test_all_matches_golden(module):
+    mod = importlib.import_module(module)
+    assert set(mod.__all__) == GOLDEN[module], (
+        f"{module}.__all__ drifted from the golden list — if intentional, "
+        f"update tests/test_api_surface.py in the same change")
+
+
+@pytest.mark.parametrize("module", sorted(GOLDEN))
+def test_exports_resolve(module):
+    mod = importlib.import_module(module)
+    for name in GOLDEN[module]:
+        assert getattr(mod, name, None) is not None, f"{module}.{name}"
+
+
+def test_format_and_kernel_registries_locked():
+    from repro.core import weights
+    from repro.kernels import ops
+    assert GOLDEN_FORMATS <= set(weights.FORMATS), (
+        "a registered weight format disappeared")
+    assert GOLDEN_KERNELS <= set(ops.kernel_registry()), (
+        "a registered kernel lowering disappeared")
+
+
+def test_legacy_shim_is_contained():
+    """The old weight-operand union must survive only as ops' deprecation
+    shim — no public module re-exports it."""
+    import repro.kernels as K
+    assert not hasattr(K, "TernaryGemmConfig")
+    assert not hasattr(importlib.import_module("repro.kernels.ops"),
+                       "TernaryGemmConfig")

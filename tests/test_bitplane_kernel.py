@@ -47,7 +47,8 @@ def test_bitplane_equals_2bit_kernel():
     plus, minus = formats.pack_bitplanes(w)
     y1 = ternary_gemm_bitplane(x, jnp.asarray(plus), jnp.asarray(minus),
                                block_n=32, block_k=64, interpret=True)
-    y2 = ops.ternary_gemm(x, jnp.asarray(formats.pack_2bit(w)), k=k,
+    from repro.core import weights
+    y2 = ops.ternary_gemm(x, weights.pack(w, "dense2bit"),
                           block_n=32, block_k=64)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
                                rtol=1e-5, atol=1e-5)

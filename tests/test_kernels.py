@@ -7,15 +7,16 @@ import numpy as np
 import pytest
 
 from _hyp import given, settings, st
-from repro.core import formats
+from repro.core import formats, weights
 from repro.kernels import ops, ref
+from repro.kernels.autotune import BlockConfig
 
 
 def _setup(m, k, n, s, dtype=jnp.float32, seed=0):
     rng = np.random.default_rng(seed)
     w = formats.random_ternary(rng, k, n, s)
     x = jnp.asarray(rng.standard_normal((m, k)), dtype)
-    packed = jnp.asarray(formats.pack_2bit(w))
+    packed = weights.pack(w, "dense2bit")
     return x, w, packed
 
 
@@ -24,7 +25,7 @@ def _setup(m, k, n, s, dtype=jnp.float32, seed=0):
 def test_kernel_matches_oracle(m, k, n, s):
     x, w, packed = _setup(m, k, n, s)
     y0 = ref.ternary_matmul_dense(x, jnp.asarray(w))
-    y = ops.ternary_gemm(x, packed, k=k, block_n=64, block_k=64)
+    y = ops.ternary_gemm(x, packed, block_n=64, block_k=64)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
                                rtol=1e-4, atol=1e-4)
 
@@ -33,7 +34,7 @@ def test_kernel_matches_oracle(m, k, n, s):
 def test_kernel_dtypes(dtype):
     x, w, packed = _setup(16, 256, 128, 0.25, dtype)
     y0 = ref.ternary_matmul_dense(x, jnp.asarray(w))
-    y = ops.ternary_gemm(x, packed, k=256, block_n=128, block_k=128)
+    y = ops.ternary_gemm(x, packed, block_n=128, block_k=128)
     assert y.dtype == dtype
     tol = 1e-4 if dtype == jnp.float32 else 5e-2
     np.testing.assert_allclose(np.asarray(y, np.float32),
@@ -47,7 +48,7 @@ def test_kernel_block_shapes(block_m, block_n, block_k):
     shape must give identical results."""
     x, w, packed = _setup(32, 512, 128, 0.25)
     y0 = ref.ternary_matmul_dense(x, jnp.asarray(w))
-    y = ops.ternary_gemm(x, packed, k=512, block_m=block_m,
+    y = ops.ternary_gemm(x, packed, block_m=block_m,
                          block_n=block_n, block_k=block_k)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
                                rtol=1e-4, atol=1e-4)
@@ -60,7 +61,7 @@ def test_kernel_fused_epilogue():
     bias = jnp.asarray(rng.standard_normal(96), jnp.float32)
     y0 = ref.ternary_matmul_dense(x, jnp.asarray(w), alpha, bias,
                                   prelu_alpha=0.25)
-    y = ops.ternary_gemm(x, packed, alpha, bias, k=128, block_n=32,
+    y = ops.ternary_gemm(x, packed, alpha, bias, block_n=32,
                          block_k=64, fuse_prelu=True)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
                                rtol=1e-4, atol=1e-4)
@@ -72,7 +73,7 @@ def test_kernel_vjp():
     bias = jnp.zeros((48,), jnp.float32)
 
     def f(xx):
-        return jnp.sum(ops.ternary_gemm(xx, packed, alpha, bias, k=64,
+        return jnp.sum(ops.ternary_gemm(xx, packed, alpha, bias,
                                         block_n=16, block_k=32) ** 2)
 
     def f_ref(xx):
@@ -99,7 +100,7 @@ def test_kernel_vjp_scale_bias_combos(use_scale, use_bias):
         if use_bias else None
 
     def f(xx):
-        return jnp.sum(ops.ternary_gemm(xx, packed, alpha, bias, k=64,
+        return jnp.sum(ops.ternary_gemm(xx, packed, alpha, bias,
                                         block_n=16, block_k=32) ** 2)
 
     def f_ref(xx):
@@ -111,7 +112,7 @@ def test_kernel_vjp_scale_bias_combos(use_scale, use_bias):
                                rtol=1e-3, atol=1e-3)
     if use_scale:
         gs = jax.grad(lambda a: jnp.sum(
-            ops.ternary_gemm(x, packed, a, bias, k=64, block_n=16,
+            ops.ternary_gemm(x, packed, a, bias, block_n=16,
                              block_k=32) ** 2))(alpha)
         gs_ref = jax.grad(lambda a: jnp.sum(
             ref.ternary_matmul_dense(x, jnp.asarray(w), a, bias) ** 2))(alpha)
@@ -119,7 +120,7 @@ def test_kernel_vjp_scale_bias_combos(use_scale, use_bias):
                                    rtol=1e-3, atol=1e-3)
     if use_bias:
         gb = jax.grad(lambda b: jnp.sum(
-            ops.ternary_gemm(x, packed, alpha, b, k=64, block_n=16,
+            ops.ternary_gemm(x, packed, alpha, b, block_n=16,
                              block_k=32) ** 2))(bias)
         gb_ref = jax.grad(lambda b: jnp.sum(
             ref.ternary_matmul_dense(x, jnp.asarray(w), alpha, b) ** 2))(bias)
@@ -163,12 +164,12 @@ def test_kernel_property_random_shapes(m, k, n, s, seed):
     """Property: the kernel handles arbitrary (unaligned) shapes via padding."""
     x, w, packed = _setup(m, k, n, s, seed=seed)
     y0 = ref.ternary_matmul_dense(x, jnp.asarray(w))
-    y = ops.ternary_gemm(x, packed, k=k, block_n=32, block_k=32)
+    y = ops.ternary_gemm(x, packed, block_n=32, block_k=32)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
                                rtol=1e-4, atol=1e-4)
 
 
 def test_vmem_budget():
     """BlockSpec working set must fit VMEM (16 MB v5e) for default blocks."""
-    cfg = ops.TernaryGemmConfig()
+    cfg = BlockConfig(128, 128, 512)
     assert cfg.vmem_bytes() < 16 * 2**20

@@ -104,7 +104,8 @@ def test_blocked_moe_routing_matches_global():
 def test_packed_moe_matches_qat():
     """MoE experts in the 2-bit packed serving format == QAT forward."""
     import dataclasses
-    from repro.core import formats, quantize
+    from repro.core import weights
+    from repro.models import layers as L
     cfg = get_config("mixtral-8x22b", reduced=True, dtype="float32",
                      ternary_min_dim=64, quantization="ternary",
                      d_model=128, d_ff_expert=128)
@@ -113,42 +114,11 @@ def test_packed_moe_matches_qat():
     toks = jnp.arange(64, dtype=jnp.int32).reshape(2, 32) % cfg.vocab_size
     x1, _, _ = m.forward(params, {"tokens": toks})
 
-    # pack the expert weights per (layer, expert)
-    def pack_moe(p):
-        if isinstance(p, dict):
-            if "w_in" in p and "router" in p:
-                out = {"router": p["router"]}
-                for nm, kdim in (("w_in", cfg.d_model),
-                                 ("w_gate", cfg.d_model),
-                                 ("w_out", cfg.d_ff_expert)):
-                    w = np.asarray(p[nm])           # (L, E, K, N)
-                    packs, scales = [], []
-                    for li in range(w.shape[0]):
-                        pl_, sl_ = [], []
-                        for e in range(w.shape[1]):
-                            t, a = quantize.ternarize(
-                                jnp.asarray(w[li, e]), cfg.ternary_threshold)
-                            pl_.append(formats.pack_2bit(np.asarray(t)))
-                            sl_.append(np.asarray(a).reshape(-1))
-                        packs.append(np.stack(pl_))
-                        scales.append(np.stack(sl_))
-                    out[nm + "_packed"] = jnp.asarray(np.stack(packs))
-                    out[nm + "_scale"] = jnp.asarray(np.stack(scales))
-                return out
-            return {k: pack_moe(v) for k, v in p.items()}
-        return p
-
-    from repro.models import layers as L
-
-    def pack_linears(p):
-        if isinstance(p, dict):
-            if "w" in p and getattr(p["w"], "ndim", 0) in (2, 3) \
-                    and min(p["w"].shape[-2:]) >= cfg.ternary_min_dim:
-                return L.pack_linear(p, cfg)
-            return {k: pack_linears(v) for k, v in p.items()}
-        return p
-
-    packed = pack_linears(pack_moe(params))
+    # one call packs expert banks (per layer, per expert) and linears alike
+    packed = L.pack_params(params, cfg)
+    moe_node = packed["block0"]["ffn"]
+    assert isinstance(moe_node["w_in"], weights.TernaryWeight)
+    assert moe_node["w_in"].packed.ndim == 4       # (L, E, K/16, N) leaves
     cfg2 = dataclasses.replace(cfg, quantization="ternary_packed")
     m2 = LM(cfg2)
     x2, _, _ = m2.forward(packed, {"tokens": toks})

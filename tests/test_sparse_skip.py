@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import formats
+from repro.core import formats, weights
 from repro.kernels import ops, ref
 from repro.kernels.autotune import Autotuner, BlockConfig, cache_key
 
@@ -19,7 +19,7 @@ def _tile_setup(m, k, n, s, tile_k=32, tile_n=16, seed=0):
     kp = -(-k // tile_k) * tile_k
     npad = -(-n // tile_n) * tile_n
     w = formats.random_tile_ternary(rng, kp, npad, tile_k, tile_n, s)[:k, :n]
-    tt = formats.TiledTernary.from_dense(w, tile_k=tile_k, tile_n=tile_n)
+    tt = weights.pack(w, "tiled", tile_k=tile_k, tile_n=tile_n)
     x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
     return x, w, tt
 
@@ -31,7 +31,8 @@ def _tile_setup(m, k, n, s, tile_k=32, tile_n=16, seed=0):
 @pytest.mark.parametrize("s", SPARSITIES)
 @pytest.mark.parametrize("k,n", [(128, 64), (96, 40), (200, 33)])
 def test_tiled_occupancy_matches_count_nonzero(k, n, s):
-    _, w, tt = _tile_setup(4, k, n, s)
+    _, w, _ = _tile_setup(4, k, n, s)
+    tt = formats.TiledTernary.from_dense(w, tile_k=32, tile_n=16)
     kp = tt.n_ktiles * tt.tile_k
     npad = tt.n_ntiles * tt.tile_n
     wp = np.zeros((kp, npad), np.int8)
@@ -53,11 +54,18 @@ def test_tiled_occupancy_matches_count_nonzero(k, n, s):
 
 
 def test_tiled_roundtrip_and_counts():
-    _, w, tt = _tile_setup(4, 96, 48, 0.25)
+    _, w, wc = _tile_setup(4, 96, 48, 0.25)
+    tt = formats.TiledTernary.from_dense(w, tile_k=32, tile_n=16)
     assert tt.occupied_tiles() == int((tt.tile_nnz > 0).sum())
     assert tt.total_tiles() == tt.n_ktiles * tt.n_ntiles
     assert 0.0 < tt.occupancy_fraction() <= 1.0
     assert tt.visited_tiles() >= tt.occupied_tiles() // tt.n_ntiles
+    # the container wrapper mirrors the raw format's static geometry
+    assert wc.occupied_tiles == tt.occupied_tiles()
+    assert wc.total_tiles() == tt.total_tiles()
+    assert wc.occupancy() == tt.occupancy_fraction()
+    assert wc.visited_tiles() == tt.visited_tiles()
+    assert (np.asarray(wc.materialize(jnp.int8)) == w).all()
 
 
 # ---------------------------------------------------------------------------
@@ -82,8 +90,7 @@ def test_skip_kernel_bit_exact_vs_dense(s):
     m, k, n = 16, 256, 64
     x, w, tt = _tile_setup(m, k, n, s, tile_k=64, tile_n=32, seed=7)
     y_skip = ops.ternary_gemm(x, tt, impl="skip")
-    y_dense = ops.ternary_gemm(x, jnp.asarray(tt.packed), k=k,
-                               block_n=32, block_k=64, impl="dense")[:, :n]
+    y_dense = ops.ternary_gemm(x, tt, block_n=32, block_k=64, impl="dense")
     assert np.array_equal(np.asarray(y_skip), np.asarray(y_dense))
 
 
@@ -92,7 +99,7 @@ def test_skip_kernel_epilogue_and_empty_columns():
     rng = np.random.default_rng(5)
     w = formats.random_tile_ternary(rng, k, n, 32, 16, 0.25)
     w[:, 16:32] = 0                       # a fully-empty N-tile column
-    tt = formats.TiledTernary.from_dense(w, tile_k=32, tile_n=16)
+    tt = weights.pack(w, "tiled", tile_k=32, tile_n=16)
     assert int(tt.kt_counts[1]) == 0
     x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
     alpha = jnp.asarray(rng.standard_normal(n) ** 2 + 0.1, jnp.float32)
@@ -118,16 +125,18 @@ def test_skip_kernel_grad():
 # Dispatcher
 # ---------------------------------------------------------------------------
 
-def test_dispatcher_auto_picks_skip_for_sparse():
+def test_planner_auto_picks_skip_for_sparse():
     _, _, tt = _tile_setup(4, 128, 64, 0.0625)
-    assert ops._resolve_impl(tt, "auto") == "skip"
+    assert ops.ternary_gemm_plan(tt, 4).impl == "skip"
     dense_w = formats.random_ternary(np.random.default_rng(0), 64, 32, 0.5)
-    tt_dense = formats.TiledTernary.from_dense(dense_w, tile_k=16, tile_n=16)
+    tt_dense = weights.pack(dense_w, "tiled", tile_k=16, tile_n=16)
     # unstructured 1/2-sparse weights occupy every tile -> dense fallback
-    assert tt_dense.occupancy_fraction() == 1.0
-    assert ops._resolve_impl(tt_dense, "auto") == "dense"
-    assert ops._resolve_impl(jnp.zeros((4, 8), jnp.uint32), "auto") == "dense"
-    # dense fallback on a TiledTernary operand still computes correctly
+    assert tt_dense.occupancy() == 1.0
+    assert ops.ternary_gemm_plan(tt_dense, 4).impl == "dense"
+    assert ops.ternary_gemm_plan(
+        weights.Dense2Bit.from_packed(jnp.zeros((4, 8), jnp.uint32), k=64),
+        4).impl == "dense"
+    # dense fallback on a tiled operand still computes correctly
     x = jnp.asarray(np.random.default_rng(1).standard_normal((4, 64)),
                     jnp.float32)
     y = ops.ternary_gemm(x, tt_dense)
@@ -141,19 +150,19 @@ def test_dispatcher_bitplane_paths():
     rng = np.random.default_rng(11)
     w = formats.random_ternary(rng, k, n, 0.25)
     x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
-    planes = tuple(jnp.asarray(a) for a in formats.pack_bitplanes(w))
+    planes = weights.pack(w, "bitplane")
     alpha = jnp.asarray(rng.standard_normal(n) ** 2 + 0.1, jnp.float32)
     bias = jnp.asarray(rng.standard_normal(n), jnp.float32)
     y0 = ref.ternary_matmul_dense(x, jnp.asarray(w), alpha, bias,
                                   prelu_alpha=0.25)
-    assert ops._resolve_impl(planes, "auto") == "bitplane"
+    assert ops.ternary_gemm_plan(planes, m).impl == "bitplane"
     for impl in ("bitplane", "bitplane_factorized"):
-        y = ops.ternary_gemm(x, planes, alpha, bias, k=k, fuse_prelu=True,
+        y = ops.ternary_gemm(x, planes, alpha, bias, fuse_prelu=True,
                              impl=impl)
         np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
                                    rtol=1e-4, atol=1e-4, err_msg=impl)
     g = jax.grad(lambda xx: jnp.sum(
-        ops.ternary_gemm(xx, planes, k=k, impl="bitplane_factorized") ** 2))(x)
+        ops.ternary_gemm(xx, planes, impl="bitplane_factorized") ** 2))(x)
     g0 = jax.grad(lambda xx: jnp.sum(
         ref.ternary_matmul_dense(xx, jnp.asarray(w)) ** 2))(x)
     np.testing.assert_allclose(np.asarray(g), np.asarray(g0),
@@ -165,8 +174,8 @@ def test_dispatcher_ref_impl():
     rng = np.random.default_rng(12)
     w = formats.random_ternary(rng, k, n, 0.25)
     x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
-    packed = jnp.asarray(formats.pack_2bit(w))
-    y = ops.ternary_gemm(x, packed, k=k, impl="ref")
+    packed = weights.pack(w, "dense2bit")
+    y = ops.ternary_gemm(x, packed, impl="ref")
     y0 = ref.ternary_matmul_dense(x, jnp.asarray(w))
     np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
                                rtol=1e-5, atol=1e-5)
@@ -200,8 +209,8 @@ def test_dense_fallback_with_large_pack_tile():
     m, k, n = 8, 200, 64
     rng = np.random.default_rng(21)
     w = formats.random_ternary(rng, k, n, 0.5)       # occupancy 1.0 -> dense
-    tt = formats.TiledTernary.from_dense(w, tile_k=512, tile_n=32)
-    assert ops._resolve_impl(tt, "auto") == "dense"
+    tt = weights.pack(w, "tiled", tile_k=512, tile_n=32)
+    assert ops.ternary_gemm_plan(tt, m).impl == "dense"
     x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
     y = ops.ternary_gemm(x, tt, block_m=8, block_n=32, block_k=64)
     y0 = ref.ternary_matmul_dense(x, jnp.asarray(w))
@@ -248,9 +257,9 @@ def test_autotuned_blocks_give_same_numerics():
     rng = np.random.default_rng(13)
     w = formats.random_ternary(rng, k, n, 0.25)
     x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
-    packed = jnp.asarray(formats.pack_2bit(w))
-    y_auto = ops.ternary_gemm(x, packed, k=k)
-    y_explicit = ops.ternary_gemm(x, packed, k=k, block_m=8, block_n=32,
+    packed = weights.pack(w, "dense2bit")
+    y_auto = ops.ternary_gemm(x, packed)
+    y_explicit = ops.ternary_gemm(x, packed, block_m=8, block_n=32,
                                   block_k=32)
     np.testing.assert_allclose(np.asarray(y_auto), np.asarray(y_explicit),
                                rtol=1e-5, atol=1e-5)

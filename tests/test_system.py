@@ -72,16 +72,8 @@ def test_packed_serving_matches_qat_logits():
     logits_qat = np.asarray(m._logits(params, x), np.float32)
 
     # pack every ternarizable linear (2-D or scan-stacked 3-D) into the
-    # serving format
-    def pack_tree(p):
-        if isinstance(p, dict):
-            if "w" in p and getattr(p["w"], "ndim", 0) in (2, 3) \
-                    and min(p["w"].shape[-2:]) >= cfg.ternary_min_dim:
-                return L.pack_linear(p, cfg)
-            return {k: pack_tree(v) for k, v in p.items()}
-        return p
-
-    packed_params = pack_tree(params)
+    # TernaryWeight serving format
+    packed_params = L.pack_params(params, cfg)
     cfg_packed = get_config("ternary-paper", reduced=True, ternary_min_dim=64,
                             num_layers=2, quantization="ternary_packed",
                             dtype="float32")

@@ -1,0 +1,343 @@
+"""TernaryWeight container API: pytree round-trips (flatten / jit-closure /
+jit-argument / device_put / scan slicing), registry planning (GemmPlan),
+the deprecation shim's bit-exact equivalence with the old operand union,
+unified K validation, the base3 format, and checkpoint save -> restore ->
+serve token-exactness against a direct packed boot."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import formats, weights
+from repro.kernels import ops, ref
+
+ALL_FORMATS = ["dense2bit", "tiled", "bitplane", "base3"]
+
+
+def _mk(fmt, k=96, n=48, s=0.25, seed=0, **opts):
+    rng = np.random.default_rng(seed)
+    w = formats.random_ternary(rng, k, n, s)
+    if fmt == "tiled":
+        opts.setdefault("tile_k", 32)
+        opts.setdefault("tile_n", 16)
+    wc = weights.pack(w, fmt, **opts)
+    x = jnp.asarray(rng.standard_normal((8, k)), jnp.float32)
+    return x, w, wc
+
+
+# ---------------------------------------------------------------------------
+# Pytree contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", ALL_FORMATS)
+def test_pytree_roundtrip(fmt):
+    x, w, wc = _mk(fmt)
+    leaves, treedef = jax.tree_util.tree_flatten(wc)
+    wc2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert type(wc2) is type(wc)
+    assert wc2.shape == wc.shape and int(wc2.nnz) == int(wc.nnz)
+    y0 = ref.ternary_matmul_dense(x, jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(ops.ternary_gemm(x, wc2)),
+                               np.asarray(y0), rtol=1e-4, atol=1e-4)
+    # named key paths (checkpoint leaf keys) resolve to the field names
+    key_leaves = jax.tree_util.tree_flatten_with_path(wc)[0]
+    names = {path[-1].name for path, _ in key_leaves}
+    assert names <= set(type(wc)._leaves)
+
+
+@pytest.mark.parametrize("fmt", ALL_FORMATS)
+def test_pytree_jit_closure_and_argument(fmt):
+    x, w, wc = _mk(fmt)
+    y0 = np.asarray(ref.ternary_matmul_dense(x, jnp.asarray(w)))
+    y_closure = jax.jit(lambda xx: ops.ternary_gemm(xx, wc))(x)
+    np.testing.assert_allclose(np.asarray(y_closure), y0,
+                               rtol=1e-4, atol=1e-4)
+    # as a jit *argument* the leaves become tracers: planning must rely on
+    # static aux only
+    y_arg = jax.jit(lambda xx, ww: ops.ternary_gemm(xx, ww))(x, wc)
+    np.testing.assert_allclose(np.asarray(y_arg), y0, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("fmt", ALL_FORMATS)
+def test_pytree_device_put(fmt):
+    x, w, wc = _mk(fmt)
+    wd = jax.device_put(wc)
+    assert type(wd) is type(wc) and wd.shape == wc.shape
+    # stats survive the round-trip as plain ints with plain int equality
+    assert type(wd.nnz) is int and wd.nnz == int(wc.nnz)
+    np.testing.assert_array_equal(
+        np.asarray(wd.materialize(jnp.int8)), w)
+    assert wc.device_put().shape == wc.shape
+
+
+def test_stacked_container_scan_slicing():
+    """A scan-stacked Dense2Bit (leading L dim on every leaf) slices to the
+    per-layer 2-D container inside jax.lax.scan with static aux intact."""
+    rng = np.random.default_rng(3)
+    k, n, layers = 64, 32, 3
+    ws = np.stack([formats.random_ternary(rng, k, n, 0.5)
+                   for _ in range(layers)])
+    wc = weights.Dense2Bit.from_dense(ws)
+    assert wc.shape == (k, n) and wc.packed.ndim == 3
+    x = jnp.asarray(rng.standard_normal((4, k)), jnp.float32)
+
+    def body(carry, layer_wc):
+        y = ops.ternary_gemm(carry[:, :k], layer_wc, impl="ref")
+        return jnp.pad(y, ((0, 0), (0, k - n))), y
+
+    _, ys = jax.lax.scan(body, x, wc)
+    for i in range(layers):
+        y0 = ref.ternary_matmul_dense(
+            x if i == 0 else jnp.pad(np.asarray(ys[i - 1]),
+                                     ((0, 0), (0, k - n))),
+            jnp.asarray(ws[i]))
+        np.testing.assert_allclose(np.asarray(ys[i]), np.asarray(y0),
+                                   rtol=1e-4, atol=1e-4)
+    # un-sliced stacked containers are rejected with a clear error
+    with pytest.raises(ValueError, match="stacked"):
+        ops.ternary_gemm(x, wc)
+
+
+# ---------------------------------------------------------------------------
+# Planner / registry
+# ---------------------------------------------------------------------------
+
+def test_gemm_plan_inspectable():
+    rng = np.random.default_rng(5)
+    w = formats.random_tile_ternary(rng, 96, 48, 32, 16, 0.0625)
+    wc = weights.pack(w, "tiled", tile_k=32, tile_n=16)
+    plan = ops.ternary_gemm_plan(wc, 8)
+    assert plan.format == "tiled" and plan.impl == "skip"
+    assert (plan.k, plan.n) == (96, 48)
+    assert plan.block_n == wc.tile_n and plan.block_k == wc.tile_k
+    assert 0.0 < plan.occupancy <= 1.0
+    # phase keying
+    with ops.serving_phase("decode"):
+        assert ops.ternary_gemm_plan(wc, 8).phase == "decode"
+    assert ops.ternary_gemm_plan(wc, 8, phase="prefill").phase == "prefill"
+
+
+def test_registry_contents_and_unknown_impl():
+    reg = ops.kernel_registry()
+    for key in [("dense2bit", "dense"), ("dense2bit", "ref"),
+                ("tiled", "skip"), ("tiled", "dense"), ("tiled", "ref"),
+                ("bitplane", "bitplane"), ("bitplane", "bitplane_factorized"),
+                ("bitplane", "ref"), ("base3", "ref")]:
+        assert key in reg, key
+    _, _, wc = _mk("dense2bit")
+    with pytest.raises(ValueError, match="available"):
+        ops.ternary_gemm_plan(wc, 8, impl="skip")
+
+
+def test_precompute_plans_warms_phase_keys():
+    _, _, wc = _mk("dense2bit")
+    tree = {"layer": {"w_packed": wc, "w_in": wc}}
+    plans = ops.precompute_plans(tree, prefill_ms=(8, 64), decode_ms=(4,))
+    assert len(plans) == 6                      # both containers, no filter
+    assert {p.phase for p in plans.values()} == {"prefill", "decode"}
+    # the engine's filter: only containers that dispatch through the gemm
+    # (packed linears) are planned, not materialized MoE banks
+    plans = ops.precompute_plans(
+        tree, prefill_ms=(8, 64), decode_ms=(4,),
+        select=lambda path, w: getattr(path[-1], "key", None) == "w_packed")
+    assert len(plans) == 3
+
+
+@pytest.mark.parametrize("fmt", ALL_FORMATS)
+def test_k_validation_unified(fmt):
+    """The planner validates X-vs-weight K once, for every format."""
+    x, w, wc = _mk(fmt)
+    bad = jnp.zeros((4, wc.k + 16), jnp.float32)
+    with pytest.raises(ValueError, match="encodes K"):
+        ops.ternary_gemm(bad, wc)
+    with pytest.raises(ValueError, match="does not match"):
+        ops.ternary_gemm(x, wc, k=wc.k + 16)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shim: old union == new API, bit-exact
+# ---------------------------------------------------------------------------
+
+def test_shim_equivalence_bit_exact():
+    rng = np.random.default_rng(7)
+    k, n = 128, 64
+    w = formats.random_tile_ternary(rng, k, n, 32, 16, 0.125)
+    x = jnp.asarray(rng.standard_normal((8, k)), jnp.float32)
+
+    legacy = {
+        "dense2bit": (jnp.asarray(formats.pack_2bit(w)), {"k": k}),
+        "tiled": (formats.TiledTernary.from_dense(w, tile_k=32, tile_n=16),
+                  {}),
+        "bitplane": (tuple(jnp.asarray(a)
+                           for a in formats.pack_bitplanes(w)), {"k": k}),
+    }
+    modern = {
+        "dense2bit": weights.pack(w, "dense2bit"),
+        "tiled": weights.pack(w, "tiled", tile_k=32, tile_n=16),
+        "bitplane": weights.pack(w, "bitplane"),
+    }
+    for fmt, (old_operand, kw) in legacy.items():
+        with pytest.warns(DeprecationWarning):
+            y_old = ops.ternary_gemm(x, old_operand, **kw)
+        y_new = ops.ternary_gemm(x, modern[fmt])
+        assert np.array_equal(np.asarray(y_old), np.asarray(y_new)), fmt
+
+
+# ---------------------------------------------------------------------------
+# Base3 is a first-class, dispatchable format
+# ---------------------------------------------------------------------------
+
+def test_base3_registered_and_correct():
+    assert "base3" in weights.FORMATS
+    rng = np.random.default_rng(9)
+    k, n = 100, 40                       # K not a multiple of 5: padding path
+    w = formats.random_ternary(rng, k, n, 0.25)
+    x = jnp.asarray(rng.standard_normal((6, k)), jnp.float32)
+    alpha = jnp.asarray(rng.standard_normal(n) ** 2 + 0.1, jnp.float32)
+    bias = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    wc = weights.pack(w, "base3", scale=alpha, bias=bias)
+    assert ops.ternary_gemm_plan(wc, 6).impl == "ref"
+    y = ops.ternary_gemm(x, wc)
+    y0 = ref.ternary_matmul_dense(x, jnp.asarray(w), alpha, bias)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                               rtol=1e-4, atol=1e-4)
+    # 5 trits/byte beats 2-bit packing on code bytes
+    assert wc.packed.nbytes < weights.pack(w, "dense2bit").packed.nbytes
+    np.testing.assert_array_equal(np.asarray(wc.materialize(jnp.int8)), w)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint: save -> restore -> serve without re-packing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_packed_restore_serves_token_exact(tmp_path):
+    """A server restoring a packed TernaryWeight checkpoint into the
+    ternary_packed model skeleton must produce exactly the tokens of the
+    boot that packed the weights in-process (no re-quantization drift)."""
+    from repro import checkpoint as ckpt
+    from repro.configs import get_config
+    from repro.models import LM, layers as L
+    from repro.serving import ContinuousScheduler
+
+    cfg = get_config("ternary-paper", reduced=True, ternary_min_dim=64,
+                     num_layers=2, dtype="float32")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    packed = L.pack_params(params, cfg)
+    cfg_packed = dataclasses.replace(cfg, quantization="ternary_packed")
+
+    ckpt.save(str(tmp_path), 1, {"params": packed})
+    target = {"params": LM(cfg_packed).init(jax.random.PRNGKey(1))}
+    step, restored = ckpt.restore(str(tmp_path), target=target)
+    assert step == 1
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, size=(4, 8)).astype(np.int32)
+    gens = [5, 2, 3, 4]
+
+    def serve(ps):
+        eng = ContinuousScheduler(cfg_packed, max_slots=2, max_len=16)
+        eng.load(ps)
+        reqs = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+        metrics = eng.run()
+        assert metrics["planned_gemms"] > 0      # plans precomputed at load
+        return [list(r.tokens) for r in reqs]
+
+    assert serve(packed) == serve(restored["params"])
+
+
+def test_checkpoint_rejects_nothing_on_plain_trees(tmp_path):
+    """Sanity: the GetAttrKey path support doesn't disturb plain trees."""
+    from repro import checkpoint as ckpt
+    state = {"a": jnp.arange(4.0), "nested": {"b": jnp.ones((2, 2))}}
+    ckpt.save(str(tmp_path), 3, state)
+    step, out = ckpt.restore(str(tmp_path), target=state)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.arange(4.0))
+
+
+# ---------------------------------------------------------------------------
+# Container metadata defaults flow into the gemm
+# ---------------------------------------------------------------------------
+
+def test_container_scale_bias_defaults_and_override():
+    rng = np.random.default_rng(11)
+    k, n = 64, 32
+    w = formats.random_ternary(rng, k, n, 0.5)
+    x = jnp.asarray(rng.standard_normal((4, k)), jnp.float32)
+    alpha = jnp.asarray(rng.standard_normal(n) ** 2 + 0.1, jnp.float32)
+    bias = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    wc = weights.pack(w, "dense2bit", scale=alpha, bias=bias)
+    y_implicit = ops.ternary_gemm(x, wc)
+    y0 = ref.ternary_matmul_dense(x, jnp.asarray(w), alpha, bias)
+    np.testing.assert_allclose(np.asarray(y_implicit), np.asarray(y0),
+                               rtol=1e-4, atol=1e-4)
+    # explicit operands override the container's metadata
+    y_override = ops.ternary_gemm(x, wc, scale=jnp.ones_like(alpha))
+    y1 = ref.ternary_matmul_dense(x, jnp.asarray(w), None, bias)
+    np.testing.assert_allclose(np.asarray(y_override), np.asarray(y1),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_legacy_raw_packed_param_dict_rejected_clearly():
+    """A pre-container param dict ({'w_packed': raw uint32 array}) must
+    fail with an actionable TypeError, not a KeyError mid-forward."""
+    from repro.configs import get_config
+    from repro.models import layers as L
+    cfg = get_config("ternary-paper", reduced=True,
+                     quantization="ternary_packed")
+    legacy = {"w_packed": jnp.zeros((8, 64), jnp.uint32),
+              "w_scale": jnp.ones((64,), jnp.float32)}
+    with pytest.raises(TypeError, match="from_packed"):
+        L.linear_apply(legacy, jnp.zeros((2, 128), jnp.float32), cfg)
+
+
+def test_spec_twins_survive_packing():
+    """Sharding-spec twins built at init (nnz=-1 placeholders) must stay
+    structurally compatible with params packed from a trained latent tree
+    (real nnz): pack statistics ride in aux data but are excluded from
+    treedef identity."""
+    from repro.configs import get_config
+    from repro.distributed import sharding
+    from repro.models import LM, layers as L
+    cfg = get_config("ternary-paper", reduced=True, ternary_min_dim=64,
+                     num_layers=2, dtype="float32")
+    cfg_packed = dataclasses.replace(cfg, quantization="ternary_packed")
+    _, specs = LM(cfg_packed).init_with_specs(jax.random.PRNGKey(0))
+    packed = L.pack_params(LM(cfg).init(jax.random.PRNGKey(0)), cfg)
+    mesh = jax.make_mesh((1,), ("model",))
+    shardings = sharding.resolve_specs(specs, packed, mesh, fsdp=False)
+    assert jax.tree_util.tree_structure(shardings) == \
+        jax.tree_util.tree_structure(packed)
+
+
+def test_pack_params_respects_quantization_gate():
+    """pack_params must be a no-op on an unquantized config — packing is
+    lossy and must never be applied unrequested (MoE banks included)."""
+    from repro.configs import get_config
+    from repro.models import LM, layers as L
+    cfg = get_config("mixtral-8x22b", reduced=True)    # quantization="none"
+    assert cfg.quantization == "none"
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    packed = L.pack_params(params, cfg)
+    assert jax.tree_util.tree_structure(packed) == \
+        jax.tree_util.tree_structure(params)
+    assert not any(isinstance(w, weights.TernaryWeight)
+                   for w in jax.tree_util.tree_leaves(
+                       packed, is_leaf=lambda v: isinstance(
+                           v, weights.TernaryWeight)))
+
+
+def test_float_pack_autoternarizes():
+    rng = np.random.default_rng(13)
+    wf = jnp.asarray(rng.standard_normal((64, 32)) * 0.05, jnp.float32)
+    wc = weights.pack(wf, "dense2bit")
+    assert wc.scale is not None and 0.0 < wc.occupancy() <= 1.0
+    from repro.core import quantize
+    t, alpha = quantize.ternarize(wf)
+    x = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32)
+    y0 = ref.ternary_matmul_dense(x, t, alpha.reshape(-1))
+    np.testing.assert_allclose(np.asarray(ops.ternary_gemm(x, wc)),
+                               np.asarray(y0), rtol=1e-4, atol=1e-4)
