@@ -1,0 +1,113 @@
+"""Paged-serving frontier sweep (DESIGN.md §9): page size x kv-dtype x
+slot count -> (cache bytes, useful tok/s, concurrency, prefix hits).
+
+This is the measurement behind the acceptance claim: at a fixed page-pool
+byte budget (the dense baseline's ``max_slots x max_len`` cache), smaller
+pages waste less tail space and int8 pages halve bytes/token, so more
+requests fit in flight. Each sweep point runs the same shared-prefix
+workload through the continuous engine and reports the memory/throughput
+frontier as CSV (and optionally JSON).
+
+Usage:
+  PYTHONPATH=src:. python benchmarks/paging_bench.py --quick
+  ... --json experiments/paging_frontier.json
+  ... --page-sizes 4,8,16 --slots 4,8,16 --kv-dtypes bf16,int8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import List, Optional, Sequence
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.serve import run_continuous
+from repro.serving import ContinuousScheduler
+
+
+def sweep_point(cfg, params, prompts, gens, *, max_len: int, slots: int,
+                page_size: int, kv_dtype: Optional[str],
+                n_pages: int) -> dict:
+    eng = ContinuousScheduler(cfg, max_slots=slots, max_len=max_len,
+                              cache="paged", page_size=page_size,
+                              n_pages=n_pages, kv_dtype=kv_dtype)
+    eng.load(params)
+    _, m = run_continuous(eng, prompts, gens)
+    return {
+        "page_size": page_size,
+        "kv_dtype": kv_dtype or "bf16",
+        "slots": slots,
+        "pages": m["cache"]["pages_total"],
+        "cache_bytes": m["cache"]["nbytes"],
+        "tok_per_s": m["tok_per_s"],
+        "wall_s": m["wall_s"],
+        "peak_live": m["concurrency"]["peak"],
+        "mean_live": m["concurrency"]["mean"],
+        "prefix_hit_rate": m["cache"]["prefix"]["hit_rate"],
+        "preemptions": m["cache"]["preemptions"],
+        "deferrals": m["cache"]["deferrals"],
+        "drained": m["drained"],
+    }
+
+
+def main(argv: Optional[Sequence[str]] = None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--page-sizes", default="")
+    ap.add_argument("--slots", default="")
+    ap.add_argument("--kv-dtypes", default="bf16,int8")
+    ap.add_argument("--requests", type=int, default=0)
+    ap.add_argument("--json", default="",
+                    help="also write the frontier rows as JSON")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config("ternary-paper", reduced=True, num_layers=2)
+    quick = args.quick
+    requests = args.requests or (12 if quick else 32)
+    prefix_len, distinct_len = (8, 8) if quick else (16, 16)
+    gen_lens = (4, 4, 4, 24) if quick else (8, 8, 8, 48)
+    max_len = prefix_len + distinct_len + max(gen_lens) + 1
+    page_sizes = [int(p) for p in args.page_sizes.split(",") if p] or \
+        ([4, 8] if quick else [4, 8, 16])
+    slot_counts = [int(s) for s in args.slots.split(",") if s] or \
+        ([4, 8] if quick else [4, 8, 16])
+    kv_dtypes = [None if d in ("bf16", "") else d
+                 for d in args.kv_dtypes.split(",")]
+
+    from benchmarks.serving_bench import _prefixed_workload
+    prompts, gens = _prefixed_workload(cfg, requests, prefix_len,
+                                       distinct_len, gen_lens,
+                                       seed=args.seed)
+    # one shared byte budget for every point: the dense baseline's pool
+    budget_slots = min(slot_counts)
+    from repro.models import LM
+    params = LM(cfg).init(jax.random.PRNGKey(args.seed))
+
+    rows: List[dict] = []
+    print("page_size,kv_dtype,slots,pages,cache_bytes,tok_per_s,"
+          "peak_live,mean_live,prefix_hit_rate,preemptions,deferrals")
+    for ps in page_sizes:
+        n_pages = budget_slots * max_len // ps
+        for dt in kv_dtypes:
+            for slots in slot_counts:
+                row = sweep_point(cfg, params, prompts, gens,
+                                  max_len=max_len, slots=slots,
+                                  page_size=ps, kv_dtype=dt,
+                                  n_pages=n_pages)
+                rows.append(row)
+                print(",".join(str(row[k]) for k in (
+                    "page_size", "kv_dtype", "slots", "pages",
+                    "cache_bytes", "tok_per_s", "peak_live", "mean_live",
+                    "prefix_hit_rate", "preemptions", "deferrals")))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"version": 1, "quick": quick, "rows": rows}, f,
+                      indent=1)
+        print(f"wrote {len(rows)} frontier rows to {args.json}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

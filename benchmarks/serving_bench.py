@@ -12,6 +12,7 @@ timed on the second pass.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 from benchmarks.common import record
 from repro.configs import get_config
@@ -58,4 +59,85 @@ def serving_continuous_vs_static(quick: bool = False):
         f"({ms['tok_per_s']} tok/s)")
 
 
-ALL = [serving_continuous_vs_static]
+def _prefixed_workload(cfg, requests, prefix_len, distinct_len, gen_lens,
+                       seed=0):
+    """Mixed-budget workload whose prompts share a common leading prefix
+    (the realistic serving shape prefix caching exploits: shared system
+    prompt + distinct user turns)."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, size=prefix_len)
+    prompts = np.stack([
+        np.concatenate([prefix,
+                        rng.integers(0, cfg.vocab_size, size=distinct_len)])
+        for _ in range(requests)]).astype(np.int32)
+    gens = [int(g) for g in rng.choice(list(gen_lens), size=requests)]
+    return prompts, gens
+
+
+def serving_paged_vs_dense(quick: bool = False):
+    """Paged vs dense cache at an *equal memory budget* (DESIGN.md §9).
+
+    The dense pool must preallocate ``max_slots x max_len`` rows, so its
+    concurrency is bytes/(max_len·row) regardless of how long requests
+    actually run. The paged pool spends the same bytes on pages allocated
+    on demand (plus shared-prefix reuse), so it keeps >= 2x as many
+    requests in flight — pinned here with token-exact outputs vs the dense
+    engine on the identical stream."""
+    cfg = get_config("ternary-paper", reduced=True, num_layers=2)
+    requests = 16 if quick else 32
+    dense_slots = 4
+    page_size = 8
+    prefix_len, distinct_len = (8, 8) if quick else (16, 16)
+    gen_lens = (4, 4, 4, 24) if quick else (8, 8, 8, 48)
+    prompt_len = prefix_len + distinct_len
+    max_len = prompt_len + max(gen_lens) + 1
+    prompts, gens = _prefixed_workload(cfg, requests, prefix_len,
+                                       distinct_len, gen_lens)
+
+    dense = ContinuousScheduler(cfg, max_slots=dense_slots, max_len=max_len)
+    params = dense.model.init(jax.random.PRNGKey(0))
+    dense.load(params)
+    outs_d, md = run_continuous(dense, prompts, gens)
+
+    # paged pool sized to the dense pool's token budget (block-table and
+    # trash-page overhead included in the nbytes check below)
+    n_pages = dense_slots * max_len // page_size
+    # paged_attn="jax" is the lowering with the *bitwise* dense-equality
+    # guarantee (DESIGN.md §9) — auto would pick pallas on TPU hosts,
+    # which is only allclose vs dense and could flip a greedy tie
+    paged = ContinuousScheduler(cfg, max_slots=2 * dense_slots,
+                                max_len=max_len, cache="paged",
+                                page_size=page_size, n_pages=n_pages,
+                                paged_attn="jax")
+    paged.load(params)
+    outs_p, mp = run_continuous(paged, prompts, gens)
+
+    exact = all(len(a) == len(b) and (a == b).all()
+                for a, b in zip(outs_d, outs_p))
+    dense_bytes = md["cache"]["nbytes"]
+    paged_bytes = mp["cache"]["nbytes"]
+    peak = mp["concurrency"]["peak"]
+    ratio = peak / dense_slots
+    record("serving/paged", mp["wall_s"],
+           f"tok_per_s={mp['tok_per_s']},peak_live={peak},"
+           f"mean_live={mp['concurrency']['mean']},"
+           f"nbytes={paged_bytes},prefix_hit_rate="
+           f"{mp['cache']['prefix']['hit_rate']},"
+           f"preempt={mp['cache']['preemptions']},"
+           f"defer={mp['cache']['deferrals']}")
+    record("serving/dense_equal_mem", md["wall_s"],
+           f"tok_per_s={md['tok_per_s']},peak_live="
+           f"{md['concurrency']['peak']},nbytes={dense_bytes}")
+    record("serving/paged_concurrency", 0.0,
+           f"ratio={ratio:.2f},token_exact={exact}")
+    assert exact, "paged outputs diverged from the dense engine"
+    assert paged_bytes <= dense_bytes, (
+        f"paged cache ({paged_bytes}B) exceeds the dense budget "
+        f"({dense_bytes}B)")
+    assert peak >= 2 * dense_slots, (
+        f"paged peak concurrency {peak} < 2x dense slots {dense_slots}")
+    assert mp["concurrency"]["mean"] > dense_slots, (
+        "paged mode did not sustain more live requests than the dense cap")
+
+
+ALL = [serving_continuous_vs_static, serving_paged_vs_dense]

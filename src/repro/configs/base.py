@@ -111,6 +111,10 @@ class ModelConfig:
     cache_dtype: str = "bfloat16"      # KV/SSM-conv cache storage dtype
     cache_layout: str = "bshd"         # bshd | opt — opt: K (B,KV,S,hd) /
                                        # V (B,KV,hd,S): transpose-free dots
+    paged_attn_impl: str = "auto"      # paged decode-attention lowering
+                                       # (auto | jax | pallas — DESIGN.md §9;
+                                       # auto = pallas on TPU, else the
+                                       # dense-bit-identical jax gather)
     head_pad: int = 0                  # pad q-heads to a TP-divisible count
                                        # (zero wo rows -> identical function)
     gqa_repeat_kv: bool = False        # repeat K/V to H heads: all attention

@@ -1,9 +1,11 @@
 from repro.kernels.autotune import Autotuner, BlockConfig, get_tuner
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.ops import (GemmPlan, kernel_registry, pack_weights,
+from repro.kernels.ops import (GemmPlan, kernel_registry,
+                               paged_attention_registry,
+                               paged_decode_attention, pack_weights,
                                pack_weights_tiled, register_kernel,
-                               serving_phase, ternary_gemm,
-                               ternary_gemm_plan)
+                               register_paged_attn, serving_phase,
+                               ternary_gemm, ternary_gemm_plan)
 from repro.kernels.ternary_gemm import (K_PER_WORD, ternary_gemm_pallas,
                                         ternary_gemm_skip_pallas)
 from repro.kernels.ternary_gemm_bitplane import ternary_gemm_bitplane
@@ -13,4 +15,6 @@ __all__ = ["ternary_gemm", "ternary_gemm_plan", "GemmPlan",
            "pack_weights", "pack_weights_tiled",
            "ternary_gemm_pallas", "ternary_gemm_skip_pallas",
            "ternary_gemm_bitplane", "K_PER_WORD", "flash_attention_pallas",
+           "paged_decode_attention", "register_paged_attn",
+           "paged_attention_registry",
            "Autotuner", "BlockConfig", "get_tuner"]

@@ -64,7 +64,9 @@ from repro.kernels.ternary_gemm_bitplane import (K_PER_BYTE,
 __all__ = ["ternary_gemm", "ternary_gemm_plan", "GemmPlan", "KernelImpl",
            "register_kernel", "kernel_registry", "precompute_plans",
            "pack_weights", "pack_weights_tiled",
-           "serving_phase", "current_phase", "SKIP_OCCUPANCY_CUTOFF"]
+           "serving_phase", "current_phase", "SKIP_OCCUPANCY_CUTOFF",
+           "paged_decode_attention", "register_paged_attn",
+           "paged_attention_registry"]
 
 # Serving-phase tag consumed at trace time: prefill GEMMs are M=B·L
 # GEMM-shaped, decode GEMMs are M=slots GEMV-shaped, and the two must not
@@ -447,6 +449,82 @@ def _lower_base3_ref(plan, x, w, scale, bias):
     return ref.base3_matmul(
         x, jnp.asarray(w.packed), w.k, alpha=scale, bias=bias,
         prelu_alpha=plan.prelu_alpha if plan.fuse_prelu else None)[:, :w.n]
+
+
+# ---------------------------------------------------------------------------
+# Paged-attention kernel registry (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+#
+# Same registry discipline as the GEMM table above, for the paged KV-cache
+# decode-attention lowerings: each impl registers a name, a priority and an
+# admissibility predicate, and ``impl="auto"`` picks the best admissible one
+# (the Pallas kernel on TPU backends, the gather + dense-identical JAX path
+# elsewhere — the latter is what the paged-vs-dense token-exactness
+# guarantee rests on). Lowerings live in ``repro.paging.kernels`` and
+# register themselves on import.
+
+@dataclasses.dataclass(frozen=True)
+class PagedAttnImpl:
+    """One registered paged decode-attention lowering."""
+
+    impl: str
+    priority: int
+    predicate: Callable[..., bool]
+    fn: Callable
+
+
+_PAGED_ATTN: Dict[str, PagedAttnImpl] = {}
+
+
+def register_paged_attn(impl: str, *, priority: int = 0,
+                        predicate: Optional[Callable] = None):
+    """Decorator registering a paged decode-attention lowering under
+    ``impl``. ``predicate(q, k_pages, v_pages, block_table, lengths)``
+    gates ``impl="auto"`` selection (highest admissible priority wins)."""
+
+    def deco(fn):
+        _PAGED_ATTN[impl] = PagedAttnImpl(
+            impl=impl, priority=priority,
+            predicate=predicate or (lambda *a, **k: True), fn=fn)
+        return fn
+
+    return deco
+
+
+def paged_attention_registry() -> Dict[str, "PagedAttnImpl"]:
+    """Snapshot of the registered paged-attention impl table."""
+    _ensure_paged_impls()
+    return dict(_PAGED_ATTN)
+
+
+def _ensure_paged_impls() -> None:
+    # the lowerings self-register on import; imported lazily so kernels.ops
+    # stays importable without pulling the paging subsystem in
+    import repro.paging.kernels  # noqa: F401
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_table, lengths, *,
+                           window: int = 0, impl: str = "auto",
+                           interpret: Optional[bool] = None):
+    """Decode attention over block-table-indexed KV pages.
+
+    q (B, H, hd); k_pages/v_pages (P, ps, KV, hd) arrays or
+    ``paging.quant.Int8Pages``; block_table (B, T) int32; lengths (B,)
+    int32 valid-token counts (including the current token). ``impl`` picks
+    a registered lowering ("auto" = best admissible by priority)."""
+    _ensure_paged_impls()
+    if impl == "auto":
+        cands = sorted(_PAGED_ATTN.values(), key=lambda pi: -pi.priority)
+        chosen = next((pi for pi in cands
+                       if pi.predicate(q, k_pages, v_pages, block_table,
+                                       lengths)), cands[-1])
+    else:
+        chosen = _PAGED_ATTN.get(impl)
+        if chosen is None:
+            raise ValueError(f"no paged-attention impl {impl!r} registered; "
+                             f"available: {sorted(_PAGED_ATTN)}")
+    return chosen.fn(q, k_pages, v_pages, block_table, lengths,
+                     window=window, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

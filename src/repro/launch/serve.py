@@ -16,6 +16,9 @@ Usage:
   ... --static --batch 8     # legacy static-batch A/B reference
   ... --packed --ternary-min-dim 64   # TernaryWeight packed serving
                                       # (reduced configs need the override)
+  ... --cache paged --page-size 16 --kv-dtype int8   # paged KV cache
+                                      # (block tables + quantized pages +
+                                      #  prefix reuse, DESIGN.md §9)
 """
 from __future__ import annotations
 
@@ -163,6 +166,25 @@ def main(argv: Optional[Sequence[str]] = None):
                     help="cache capacity (0: prompt+max(gen-lens)+1)")
     ap.add_argument("--static", action="store_true",
                     help="legacy static-batch loop (A/B reference)")
+    ap.add_argument("--cache", default="dense", choices=("dense", "paged"),
+                    help="continuous mode cache: dense slot rows, or the "
+                         "paged block-table pool (DESIGN.md §9)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="--cache paged: tokens per KV page")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="--cache paged: page-pool capacity incl. the "
+                         "trash page (0: slots*ceil(max_len/page_size)+1)")
+    ap.add_argument("--kv-dtype", default="", choices=("", "int8"),
+                    help="--cache paged: int8-quantized pages with "
+                         "per-page scales (default: cfg.cache_dtype)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="--cache paged: disable shared-prefix page reuse")
+    ap.add_argument("--paged-attn", default=None,
+                    choices=("auto", "jax", "pallas"),
+                    help="--cache paged: decode-attention lowering "
+                         "(default: inherit cfg.paged_attn_impl; auto = "
+                         "pallas on TPU, dense-bit-identical jax gather "
+                         "elsewhere)")
     ap.add_argument("--packed", action="store_true",
                     help="quantize+pack ternarizable projections into the "
                          "TernaryWeight serving format before load (the "
@@ -213,7 +235,13 @@ def main(argv: Optional[Sequence[str]] = None):
         from repro.serving import ContinuousScheduler
         eos = args.eos_id if args.eos_id >= 0 else None
         engine = ContinuousScheduler(cfg, max_slots=args.slots,
-                                     max_len=max_len, eos_id=eos)
+                                     max_len=max_len, eos_id=eos,
+                                     cache=args.cache,
+                                     page_size=args.page_size,
+                                     n_pages=args.pages,
+                                     kv_dtype=args.kv_dtype or None,
+                                     prefix_cache=not args.no_prefix_cache,
+                                     paged_attn=args.paged_attn)
         engine.load(params)
         _, metrics = run_continuous(engine, prompts, gens)
     print(json.dumps(metrics))

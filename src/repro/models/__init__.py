@@ -1,3 +1,3 @@
-from repro.models.transformer import LM, set_mesh
+from repro.models.transformer import LM, set_mesh, tree_nbytes
 
-__all__ = ["LM", "set_mesh"]
+__all__ = ["LM", "set_mesh", "tree_nbytes"]

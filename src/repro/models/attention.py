@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
 from repro.models.layers import FSDP, MODEL, linear_apply, linear_init, rope
 
 NEG_INF = -1e30
@@ -239,11 +240,15 @@ def attn_apply(params, x: jnp.ndarray, cfg: ModelConfig, *,
                cache: Optional[dict] = None,
                cache_pos: Optional[jnp.ndarray] = None,
                kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+               block_table: Optional[jnp.ndarray] = None,
                ) -> Tuple[jnp.ndarray, Optional[dict]]:
     """One attention layer.
 
     * train/prefill: cache=None (or a cache dict to fill at positions 0..S).
     * decode: cache given + cache_pos scalar; x is (B, 1, d).
+    * paged decode: cache = {"k_pages", "v_pages"} + block_table (B, T) +
+      cache_pos (B,) vector (DESIGN.md §9); prefill never sees a paged
+      cache — the page pool scatters prefilled dense rows into pages.
     * cross-attention: kv_override = (k, v) precomputed from the encoder.
     """
     kv, hd = cfg.num_kv_heads, cfg.head_dim
@@ -258,6 +263,13 @@ def attn_apply(params, x: jnp.ndarray, cfg: ModelConfig, *,
     else:
         k, v = kv_override
         causal = False
+
+    if cache is not None and "k_pages" in cache:
+        assert cache_pos is not None and block_table is not None, (
+            "paged caches are decode-only and need a block table")
+        y, new_cache = _paged_decode(params, x, cfg, q, k, v, cache,
+                                     cache_pos, block_table)
+        return y, new_cache
 
     new_cache = cache
     opt = cache is not None and cfg.cache_layout == "opt"
@@ -389,6 +401,61 @@ def attn_apply(params, x: jnp.ndarray, cfg: ModelConfig, *,
                                 window=cfg.sliding_window)
     y = linear_apply(params["o"], o.reshape(*x.shape[:-1], h * hd), cfg)
     return y, new_cache
+
+
+def _paged_decode(params, x, cfg: ModelConfig, q, k, v, cache,
+                  cache_pos, block_table):
+    """Paged decode step (DESIGN.md §9): scatter the token's K/V into its
+    row's current page, then attend over the block-table-indexed pages.
+
+    Every live row writes to a page it privately owns (COW in the page pool
+    guarantees this); free slots' block tables are all-zero, so their
+    garbage writes land in the reserved trash page 0 and are never read.
+    """
+    from repro.paging.quant import Int8Pages, quantize_rows
+
+    k_pages, v_pages = cache["k_pages"], cache["v_pages"]
+    quantized = isinstance(k_pages, Int8Pages)
+    ps = (k_pages.codes if quantized else k_pages).shape[-3]
+    pos = jnp.asarray(cache_pos)
+    rows = jnp.arange(k.shape[0])
+    pids = block_table[rows, pos // ps]           # (B,) page of this token
+    offs = pos % ps
+    k_tok, v_tok = k[:, 0], v[:, 0]               # (B, KV, hd)
+    if quantized:
+        kc, ks = quantize_rows(k_tok)
+        vc, vs = quantize_rows(v_tok)
+        k_pages = Int8Pages(k_pages.codes.at[pids, offs].set(kc),
+                            k_pages.scales.at[pids, offs].set(ks))
+        v_pages = Int8Pages(v_pages.codes.at[pids, offs].set(vc),
+                            v_pages.scales.at[pids, offs].set(vs))
+    else:
+        k_pages = k_pages.at[pids, offs].set(k_tok.astype(k_pages.dtype))
+        v_pages = v_pages.at[pids, offs].set(v_tok.astype(v_pages.dtype))
+    o = kops.paged_decode_attention(
+        q[:, 0], k_pages, v_pages, block_table, pos + 1,
+        window=cfg.sliding_window, impl=cfg.paged_attn_impl)
+    h = cfg.num_heads + cfg.head_pad
+    y = linear_apply(params["o"],
+                     o[:, None].reshape(*x.shape[:-1], h * cfg.head_dim),
+                     cfg)
+    return y, {"k_pages": k_pages, "v_pages": v_pages}
+
+
+def init_paged_kv_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                        dtype=jnp.bfloat16, kv_dtype: Optional[str] = None,
+                        ) -> dict:
+    """Per-layer page arrays for the paged KV cache (DESIGN.md §9): K and V
+    as (n_pages, page_size, KV, hd), either dense ``dtype`` buffers or
+    int8 ``Int8Pages`` containers (``kv_dtype="int8"``). Page id 0 is the
+    pool's reserved trash page for free-slot garbage writes."""
+    shape = (n_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+    if kv_dtype in ("int8", "i8"):
+        from repro.paging.quant import Int8Pages
+        return {"k_pages": Int8Pages.zeros(shape),
+                "v_pages": Int8Pages.zeros(shape)}
+    return {"k_pages": jnp.zeros(shape, dtype),
+            "v_pages": jnp.zeros(shape, dtype)}
 
 
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,

@@ -28,6 +28,20 @@ from repro.models import attention, layers, moe, ssm
 from repro.models.layers import MODEL
 
 
+def tree_nbytes(tree) -> int:
+    """Total payload bytes across a cache/param tree's array leaves — the
+    serving-memory figure of merit (dense slot pools and paged pools
+    alike report it in the engine metrics)."""
+    import numpy as np
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        nb = getattr(leaf, "nbytes", None)
+        if nb is None:
+            nb = int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+        total += int(nb)
+    return total
+
+
 def _stack_tree(trees):
     return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
 
@@ -137,13 +151,13 @@ class LM:
     # ------------------------------------------------------------------
     def _apply_block(self, bparams, x, kind: str, ffn: str, *,
                      positions, causal=True, cache=None, cache_pos=None,
-                     enc_out=None):
+                     enc_out=None, block_table=None):
         cfg = self.cfg
         h = layers.norm_apply(bparams["norm1"], x, cfg)
         if kind == "attn":
             h, new_cache = attention.attn_apply(
                 bparams["mixer"], h, cfg, positions=positions, causal=causal,
-                cache=cache, cache_pos=cache_pos)
+                cache=cache, cache_pos=cache_pos, block_table=block_table)
         else:
             h, new_cache = ssm.ssm_apply(
                 bparams["mixer"], h, cfg, cache=cache, cache_pos=cache_pos)
@@ -173,8 +187,11 @@ class LM:
     # Stacked decoder
     # ------------------------------------------------------------------
     def _run_stack(self, params, x, *, positions, causal=True,
-                   caches=None, cache_pos=None, enc_out=None):
-        """caches: dict block{j} -> stacked (n_groups, ...) cache trees."""
+                   caches=None, cache_pos=None, enc_out=None,
+                   block_table=None):
+        """caches: dict block{j} -> stacked (n_groups, ...) cache trees.
+        ``block_table`` (paged decode) is layer-invariant, so it rides into
+        the scan body as a closure constant rather than a sliced xs leaf."""
         cfg = self.cfg
 
         def body(carry, xs):
@@ -186,7 +203,7 @@ class LM:
                 x, nc, aux = self._apply_block(
                     xs[f"block{j}"], x, kind, ffn, positions=positions,
                     causal=causal, cache=c, cache_pos=cache_pos,
-                    enc_out=enc_out)
+                    enc_out=enc_out, block_table=block_table)
                 aux_total += aux
                 if nc is not None:
                     new_caches[f"cache{j}"] = nc
@@ -299,6 +316,26 @@ class LM:
                 lambda x: jnp.broadcast_to(x, (self.n_groups, *x.shape)), one)
         return {"layers": caches, "pos": jnp.zeros((), jnp.int32)}
 
+    def init_paged_cache(self, n_pages: int, page_size: int, batch: int,
+                         dtype=None, kv_dtype=None):
+        """Paged-cache layer tree (DESIGN.md §9): attention layers hold
+        global page arrays (``n_pages`` shared across all slots, indexed
+        through per-slot block tables), while SSM layers keep their O(1)
+        per-slot rows — state paging buys nothing for constant-size state.
+        Owned and indexed by ``repro.paging.PagePool``."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.cache_dtype) if dtype is None else dtype
+        caches = {}
+        for j, (kind, _) in enumerate(self.block_kinds):
+            if kind == "attn":
+                one = attention.init_paged_kv_cache(
+                    cfg, n_pages, page_size, dtype, kv_dtype)
+            else:
+                one = ssm.init_ssm_cache(cfg, batch, dtype)
+            caches[f"cache{j}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (self.n_groups, *x.shape)), one)
+        return {"layers": caches}
+
     @staticmethod
     def insert_cache(pool_layers, req_layers, slots):
         """Slot-pool cache contract: write a freshly prefilled k-request
@@ -370,7 +407,9 @@ class LM:
 
         ``cache["pos"]`` may be a scalar (classic batched decode: all rows
         at the same position) or a (B,) vector (continuous batching: each
-        slot decodes at its own position; K/V writes scatter per slot)."""
+        slot decodes at its own position; K/V writes scatter per slot).
+        A ``cache["block_table"]`` entry switches attention layers to the
+        paged cache path (pages + block tables, DESIGN.md §9)."""
         cfg = self.cfg
         pos = cache["pos"]
         positions_src = pos[:, None] if jnp.ndim(pos) else pos
@@ -379,7 +418,8 @@ class LM:
         x, new_caches, _ = self._run_stack(
             params, x, positions=positions, causal=True,
             caches=cache["layers"], cache_pos=pos,
-            enc_out=cache.get("enc_out"))
+            enc_out=cache.get("enc_out"),
+            block_table=cache.get("block_table"))
         x = layers.norm_apply(params["final_norm"], x, cfg)
         logits = self._logits(params, x)
         # delta-mode commit (§Perf A7): the scan emitted per-layer K/V

@@ -1,0 +1,19 @@
+"""Paged KV-cache subsystem (DESIGN.md §9):
+
+``PagePool`` (global fixed-size pages, free-list + refcounts, OOM-safe
+admission, on-demand growth, copy-on-write) + ``PrefixCache`` (chained-hash
+shared-prefix page reuse) + ``Int8Pages`` (quantized pages with per-page
+scales) + the Pallas/JAX paged decode-attention lowerings
+(``paging.kernels``, dispatched through
+``repro.kernels.ops.paged_decode_attention``).
+
+The serving engine selects it with ``ContinuousScheduler(...,
+cache="paged")``; the dense slot pool remains the bit-exact A/B baseline.
+"""
+from repro.models import tree_nbytes
+from repro.paging.pages import Admission, PagePool
+from repro.paging.prefix import PrefixCache, page_keys
+from repro.paging.quant import Int8Pages
+
+__all__ = ["PagePool", "Admission", "PrefixCache", "Int8Pages",
+           "page_keys", "tree_nbytes"]

@@ -1,0 +1,240 @@
+"""Paged decode attention: Pallas kernel + references (DESIGN.md §9).
+
+Decode attention where K/V live in fixed-size *pages* owned by a global
+pool and each batch row reads its own sequence through a block table
+(``block_table[b, t]`` = page id of the t-th page of row ``b``).
+
+Three registered lowerings (``kernels.ops.register_paged_attn``):
+
+* ``jax`` — batched page gather + exactly the dense decode's attention
+  math (the einsum/mask/softmax lines mirror
+  ``models.attention.naive_attention`` with ``causal=False``). Because the
+  ops match the dense path line-for-line, a paged serving run is
+  **bit-identical** in logits to the dense-cache run — this is what the
+  paged-vs-dense token-exactness guarantee rests on, and it is the
+  ``impl="auto"`` choice off-TPU.
+* ``pallas`` — ``PrefetchScalarGridSpec`` kernel: the block table and
+  per-row lengths ride in as scalar-prefetch operands so the page grid
+  dimension's BlockSpec index maps DMA exactly the pages the row owns
+  (same steering mechanism as the tile-skipping GEMM, DESIGN.md §3). Pages
+  are staged (and int8-dequantized) into VMEM scratch; the final grid step
+  runs the row's attention from VMEM. Bit-exact against ``..._ref``.
+* the pure-JAX **reference** (``paged_decode_attention_ref``) mirrors the
+  kernel's per-row compute (same ``_attend_one_row`` function, same casts)
+  so kernel-vs-reference comparisons are bitwise, not approximate.
+
+All three accept bf16 page arrays or ``quant.Int8Pages`` containers
+(per-page scales dequantized after the gather — inside the kernel for the
+Pallas path, so HBM reads stay int8).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ops import register_paged_attn
+from repro.kernels.ternary_gemm import CompilerParams
+from repro.paging.quant import Int8Pages, dequantize_rows
+
+NEG_INF = -1e30
+
+__all__ = ["paged_decode_attention_pallas", "paged_decode_attention_ref",
+           "paged_decode_attention_jax"]
+
+Pages = Union[jnp.ndarray, Int8Pages]
+
+
+def _page_geometry(pages: Pages):
+    """(n_pages, page_size, kv_heads, head_dim) of a page operand."""
+    shape = pages.codes.shape if isinstance(pages, Int8Pages) else pages.shape
+    assert len(shape) == 4, f"expected (P, ps, KV, hd) pages, got {shape}"
+    return shape
+
+
+def _attend_one_row(q, k, v, *, kv_heads: int, length, window: int):
+    """One row's decode attention, f32 in/out.
+
+    q (H, hd); k/v (S, KV, hd); ``length`` = valid tokens (traced scalar,
+    includes the current token, whose position is ``length - 1``).
+    Shared verbatim between the Pallas kernel body and the pure-JAX
+    reference so the two are bit-exact by construction.
+    """
+    h, hd = q.shape
+    s_len = k.shape[0]
+    g = h // kv_heads
+    qg = q.reshape(kv_heads, g, hd)
+    scores = jnp.einsum("kgd,skd->kgs", qg, k,
+                        preferred_element_type=jnp.float32) \
+        * (1.0 / math.sqrt(hd))
+    k_pos = jnp.arange(s_len)
+    mask = k_pos < length
+    if window:
+        mask &= (length - 1 - k_pos) < window
+    scores = jnp.where(mask[None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("kgs,skd->kgd", p, v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(h, hd)
+
+
+def _gather(pages: Pages, block_table: jnp.ndarray, dtype) -> jnp.ndarray:
+    """(B, T) block table -> (B, T*ps, KV, hd) gathered sequence view.
+    int8 pages dequantize to ``dtype``; raw pages keep their storage dtype
+    (it already equals the dense cache dtype, which the bit-exactness
+    contract with the dense path requires)."""
+    if isinstance(pages, Int8Pages):
+        codes = pages.codes[block_table]          # (B, T, ps, KV, hd)
+        scales = pages.scales[block_table]        # (B, T, ps, KV)
+        seq = dequantize_rows(codes, scales, dtype)
+    else:
+        seq = pages[block_table]
+    b, t, ps, kv, hd = seq.shape
+    return seq.reshape(b, t * ps, kv, hd)
+
+
+# ---------------------------------------------------------------------------
+# Pure-JAX lowerings
+# ---------------------------------------------------------------------------
+
+@register_paged_attn("jax", priority=10)
+def paged_decode_attention_jax(q, k_pages: Pages, v_pages: Pages,
+                               block_table, lengths, *, window: int = 0,
+                               interpret: Optional[bool] = None):
+    """Gather + dense-identical attention (see module docstring).
+
+    q (B, H, hd); returns (B, H, hd). The einsum/mask/softmax sequence
+    below MUST stay line-identical to ``models.attention.naive_attention``
+    (causal=False) — tests/test_paging.py pins the bitwise equality."""
+    del interpret
+    b, h, hd = q.shape
+    ks = _gather(k_pages, block_table, q.dtype)
+    vs = _gather(v_pages, block_table, q.dtype)
+    kvh = ks.shape[2]
+    qg = q.reshape(b, 1, kvh, h // kvh, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, ks,
+                   preferred_element_type=jnp.float32) \
+        * (1.0 / math.sqrt(hd))
+    lengths = jnp.asarray(lengths)
+    k_pos = jnp.arange(ks.shape[1])
+    mask = jnp.ones((b, 1, ks.shape[1]), bool)
+    if window:
+        q_pos = (lengths - 1)[:, None, None]
+        mask &= q_pos - k_pos < window
+    mask = mask & (k_pos < lengths[:, None, None])
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(vs.dtype), vs,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, h, hd)[:, 0].astype(q.dtype)
+
+
+def paged_decode_attention_ref(q, k_pages: Pages, v_pages: Pages,
+                               block_table, lengths, *, window: int = 0):
+    """Bit-exact mirror of the Pallas kernel: per-row gather into an f32
+    staging buffer, then the *same* ``_attend_one_row``. Reference only —
+    O(B) python loop, used by tests to pin the kernel bitwise."""
+    b = q.shape[0]
+    outs = []
+    for i in range(b):
+        ks = _gather(k_pages, block_table[i][None],
+                     jnp.float32)[0].astype(jnp.float32)
+        vs = _gather(v_pages, block_table[i][None],
+                     jnp.float32)[0].astype(jnp.float32)
+        o = _attend_one_row(q[i].astype(jnp.float32), ks, vs,
+                            kv_heads=ks.shape[1], length=lengths[i],
+                            window=window)
+        outs.append(o.astype(q.dtype))
+    return jnp.stack(outs)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel
+# ---------------------------------------------------------------------------
+
+def _kernel(bt_ref, len_ref, q_ref, *refs, n_pages_seq: int, page_size: int,
+            kv_heads: int, window: int, quantized: bool):
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+    if quantized:
+        kc_ref, ks_ref, vc_ref, vs_ref = refs[:4]
+        o_ref, k_scr, v_scr = refs[4:]
+        k_page = dequantize_rows(kc_ref[0], ks_ref[0], jnp.float32)
+        v_page = dequantize_rows(vc_ref[0], vs_ref[0], jnp.float32)
+    else:
+        k_ref, v_ref = refs[:2]
+        o_ref, k_scr, v_scr = refs[2:]
+        k_page = k_ref[0].astype(jnp.float32)
+        v_page = v_ref[0].astype(jnp.float32)
+    # stage this row's t-th page into the VMEM sequence buffer
+    idx = (pl.dslice(t * page_size, page_size), slice(None), slice(None))
+    pl.store(k_scr, idx, k_page)
+    pl.store(v_scr, idx, v_page)
+
+    @pl.when(t == n_pages_seq - 1)
+    def _attend():
+        o = _attend_one_row(q_ref[0].astype(jnp.float32), k_scr[...],
+                            v_scr[...], kv_heads=kv_heads,
+                            length=len_ref[b], window=window)
+        o_ref[0] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "interpret"))
+def paged_decode_attention_pallas(q, k_pages: Pages, v_pages: Pages,
+                                  block_table, lengths, *, window: int = 0,
+                                  interpret: Optional[bool] = None):
+    """q (B, H, hd); pages (P, ps, KV, hd) (or ``Int8Pages``); block_table
+    (B, T) int32 (pad unused entries with any valid page id, e.g. 0 — their
+    keys are masked out by ``lengths``); lengths (B,) int32 valid-token
+    counts including the current token. Returns (B, H, hd)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, h, hd = q.shape
+    _, ps, kv, _ = _page_geometry(k_pages)
+    t = block_table.shape[1]
+    quantized = isinstance(k_pages, Int8Pages)
+
+    page_spec = pl.BlockSpec((1, ps, kv, hd),
+                             lambda i, j, bt, ln: (bt[i, j], 0, 0, 0))
+    scale_spec = pl.BlockSpec((1, ps, kv),
+                              lambda i, j, bt, ln: (bt[i, j], 0, 0))
+    in_specs = [pl.BlockSpec((1, h, hd), lambda i, j, bt, ln: (i, 0, 0))]
+    if quantized:
+        in_specs += [page_spec, scale_spec, page_spec, scale_spec]
+        operands = [q, k_pages.codes, k_pages.scales,
+                    v_pages.codes, v_pages.scales]
+    else:
+        in_specs += [page_spec, page_spec]
+        operands = [q, k_pages, v_pages]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, t),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, h, hd), lambda i, j, bt, ln: (i, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((t * ps, kv, hd), jnp.float32),
+                        pltpu.VMEM((t * ps, kv, hd), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, n_pages_seq=t, page_size=ps, kv_heads=kv,
+                          window=window, quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(block_table, jnp.int32), jnp.asarray(lengths, jnp.int32),
+      *operands)
+
+
+# registered lowering: the kernel wants explicit interpret resolution
+register_paged_attn(
+    "pallas", priority=20,
+    predicate=lambda *a, **k: jax.default_backend() == "tpu",
+)(paged_decode_attention_pallas)

@@ -1,0 +1,354 @@
+"""Page-granular KV/SSM cache pool (DESIGN.md §9).
+
+``PagePool`` replaces the dense ``serving.SlotPool`` rows with fixed-size
+pages owned globally: attention layers hold one ``(n_groups, n_pages,
+page_size, KV, hd)`` array pair (or int8 ``Int8Pages`` containers) shared
+by *all* slots, and each slot reads its own sequence through a host-side
+block table pushed to the device when it changes. SSM layers keep their
+O(1)-per-slot dense rows inside the same tree — paging buys nothing for
+constant-size state.
+
+Host-side ownership model:
+
+* **free list** (LIFO) of page ids; page 0 is reserved as the *trash page*
+  — free slots' block tables are all-zero, so the garbage K/V their decode
+  lanes write lands there and is never read.
+* **refcounts** count live-slot references; the prefix registry
+  (``prefix.PrefixCache``) additionally *pins* pages holding registered
+  prompt content. A page returns to the free list only at refcount 0 and
+  unpinned; pinned refcount-0 pages are reclaimed LRU-first under
+  pressure.
+* **admission** (``admit``) is OOM-safe: it either finds every page the
+  prompt needs (shared prefix hits + fresh allocations + reclamation) or
+  returns ``None`` with all side effects rolled back — the engine defers
+  the request instead of crashing.
+* **growth** (``ensure_append``) allocates the next page on demand during
+  decode and performs **copy-on-write** when the target page is shared
+  (registered or multiply referenced): the page is copied to a private one
+  and the block table repointed before the append. Returns ``False`` when
+  the pool is dry — the engine preempts its youngest request and retries.
+
+Device-side, the pool owns two jitted tree ops: ``insert`` (scatter a
+prefilled dense cache into the prompt's pages — page chunks for attention
+leaves, slot rows for SSM leaves) and the COW page copy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import tree_nbytes
+from repro.paging.prefix import PrefixCache
+from repro.paging.quant import Int8Pages, quantize_rows
+
+__all__ = ["PagePool", "Admission"]
+
+
+@dataclasses.dataclass
+class Admission:
+    """One admitted request's page plan."""
+
+    slot: int
+    page_ids: List[int]          # prompt pages, in sequence order
+    n_shared: int                # leading pages satisfied by the prefix cache
+
+
+class PagePool:
+    """Global paged KV/SSM cache pool with prefix sharing and COW."""
+
+    def __init__(self, model, max_slots: int, max_len: int, *,
+                 page_size: int = 16, n_pages: int = 0,
+                 kv_dtype: Optional[str] = None, cache_dtype=None,
+                 prefix_cache: bool = True):
+        assert max_slots >= 1 and page_size >= 1
+        cfg = model.cfg
+        if cfg.cache_layout == "opt":
+            raise ValueError("paged caches need cache_layout='bshd' "
+                             "(the 'opt' delta-decode layout is dense-only)")
+        if cfg.sliding_window:
+            raise ValueError("paged caches do not support rolling "
+                             "sliding-window models yet; use cache='dense'")
+        self.model = model
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.pages_per_slot = -(-max_len // page_size)
+        # +1: page 0 is the reserved trash page
+        self.n_pages = n_pages or max_slots * self.pages_per_slot + 1
+        if self.n_pages < self.pages_per_slot + 1:
+            raise ValueError(
+                f"n_pages={self.n_pages} cannot hold even one max-length "
+                f"request ({self.pages_per_slot} pages + trash page)")
+        self.kv_dtype = kv_dtype
+        self.layers = model.init_paged_cache(
+            self.n_pages, page_size, max_slots, dtype=cache_dtype,
+            kv_dtype=kv_dtype)["layers"]
+
+        # ---- host ownership state ----
+        self._free_slots: List[int] = list(range(max_slots))[::-1]
+        self._slot_live = np.zeros(max_slots, bool)
+        self._free_pages: List[int] = list(range(1, self.n_pages))[::-1]
+        self._refcount = np.zeros(self.n_pages, np.int32)
+        # registered pages with no live references, in the order they went
+        # cold — the O(1) reclaim pool (scanning the whole registry per
+        # reclaimed page would make admission-under-pressure O(n_pages²))
+        self._reclaimable: Dict[int, None] = {}
+        self.slot_pages: Dict[int, List[int]] = {s: [] for s in range(max_slots)}
+        self.table = np.zeros((max_slots, self.pages_per_slot), np.int32)
+        self.table_dirty = True
+        self.prefix = PrefixCache(page_size) if prefix_cache else None
+
+        # ---- stats ----
+        self.cow_count = 0
+        self.pages_used_peak = 0
+
+        def copy_page(layers, src, dst):
+            out = {}
+            for key, entry in layers.items():
+                if "k_pages" in entry:
+                    out[key] = jax.tree.map(
+                        lambda p: p.at[:, dst].set(p[:, src]), entry)
+                else:
+                    out[key] = entry
+            return out
+
+        self._copy_page_fn = jax.jit(copy_page, donate_argnums=(0,))
+        self._insert_fn = jax.jit(self._insert_impl, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------
+    # Geometry / accounting
+    # ------------------------------------------------------------------
+    @property
+    def n_free(self) -> int:            # slots (SlotPool-compatible name)
+        return len(self._free_slots)
+
+    @property
+    def n_live(self) -> int:
+        return self.max_slots - len(self._free_slots)
+
+    @property
+    def usable_pages(self) -> int:
+        return self.n_pages - 1
+
+    @property
+    def pages_used(self) -> int:
+        """Pages not on the free list (live refs + pinned prefix pages)."""
+        return self.usable_pages - len(self._free_pages)
+
+    @property
+    def nbytes(self) -> int:
+        """Device bytes of the cache tree + the block table."""
+        return tree_nbytes(self.layers) + int(self.table.nbytes)
+
+    def pages_needed(self, prompt_len: int) -> int:
+        return -(-prompt_len // self.page_size)
+
+    def _note_usage(self) -> None:
+        self.pages_used_peak = max(self.pages_used_peak, self.pages_used)
+
+    def _shared(self, pid: int) -> bool:
+        """Copy-on-write trigger: more than one live slot references the
+        page. A *registered* page with a single live referent appends in
+        place — appends only touch rows at/after the registrant's prompt
+        tail, which future prefix matchers mask until their own first
+        append (when refcount > 1 forces them to COW), so the prompt rows
+        the registry vouches for stay immutable without per-request
+        copies."""
+        return self._refcount[pid] > 1
+
+    # ------------------------------------------------------------------
+    # Page allocation / reclamation
+    # ------------------------------------------------------------------
+    def _reclaim_one(self) -> Optional[int]:
+        """Unpin + take the coldest registered page with no live
+        references, O(1). None when nothing is reclaimable."""
+        if self.prefix is None or not self._reclaimable:
+            return None
+        pid = next(iter(self._reclaimable))
+        del self._reclaimable[pid]
+        assert self._refcount[pid] == 0, pid
+        self.prefix.unregister_page(pid)
+        return pid
+
+    def _alloc_pages(self, n: int) -> Optional[List[int]]:
+        out: List[int] = []
+        while len(out) < n:
+            if self._free_pages:
+                out.append(self._free_pages.pop())
+            else:
+                pid = self._reclaim_one()
+                if pid is None:
+                    self._free_pages.extend(reversed(out))  # rollback
+                    return None
+                out.append(pid)
+        return out
+
+    def _unref(self, pid: int) -> None:
+        assert self._refcount[pid] > 0, pid
+        self._refcount[pid] -= 1
+        if self._refcount[pid] == 0:
+            if self.prefix is not None and self.prefix.holds(pid):
+                self._reclaimable[pid] = None      # cold prefix page
+            else:
+                self._free_pages.append(pid)
+
+    # ------------------------------------------------------------------
+    # Admission / growth / release
+    # ------------------------------------------------------------------
+    def admit(self, prompt: np.ndarray) -> Optional[Admission]:
+        """Reserve a slot + every page the prompt needs, reusing registered
+        prefix pages. All-or-nothing: on failure every side effect is
+        rolled back and ``None`` is returned (the engine defers)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        n_p = self.pages_needed(prompt.size)
+        assert n_p <= self.pages_per_slot, (n_p, self.pages_per_slot)
+        if not self._free_slots:
+            return None
+        matched: List[int] = []
+        keys: List[bytes] = []
+        if self.prefix is not None:
+            keys, matched = self.prefix.lookup(prompt)
+            for pid in matched:          # pin before reclamation can run
+                self._refcount[pid] += 1
+                self._reclaimable.pop(pid, None)
+        fresh = self._alloc_pages(n_p - len(matched))
+        if fresh is None:
+            for pid in matched:          # rollback
+                self._unref(pid)
+            return None
+        for pid in fresh:
+            self._refcount[pid] = 1
+        if self.prefix is not None:
+            for key, pid in zip(keys[len(matched):], fresh):
+                self.prefix.register(key, pid)
+        slot = self._free_slots.pop()
+        self._slot_live[slot] = True
+        pids = matched + fresh
+        self.slot_pages[slot] = pids
+        self.table[slot] = 0
+        self.table[slot, :n_p] = pids
+        self.table_dirty = True
+        self._note_usage()
+        return Admission(slot=slot, page_ids=pids, n_shared=len(matched))
+
+    def ensure_append(self, slot: int, pos: int) -> bool:
+        """Make position ``pos`` of ``slot`` writable before a decode step:
+        allocate the next page when ``pos`` crosses a page boundary, and
+        copy-on-write when the target page is shared. ``False`` = pool dry
+        (caller preempts and retries)."""
+        assert self._slot_live[slot], slot
+        pi = pos // self.page_size
+        pages = self.slot_pages[slot]
+        if pi < len(pages):
+            pid = pages[pi]
+            if not self._shared(pid):
+                return True
+            new = self._alloc_pages(1)
+            if new is None:
+                return False
+            new = new[0]
+            self.layers = self._copy_page_fn(
+                self.layers, jnp.asarray(pid), jnp.asarray(new))
+            self._unref(pid)
+            self._refcount[new] = 1
+            pages[pi] = new
+            self.table[slot, pi] = new
+            self.table_dirty = True
+            self.cow_count += 1
+            self._note_usage()
+            return True
+        assert pi == len(pages) and pi < self.pages_per_slot, (slot, pos)
+        new = self._alloc_pages(1)
+        if new is None:
+            return False
+        new = new[0]
+        self._refcount[new] = 1
+        pages.append(new)
+        self.table[slot, pi] = new
+        self.table_dirty = True
+        self._note_usage()
+        return True
+
+    def release(self, slot: int) -> None:
+        """Return a slot and its page references; registered prefix pages
+        stay resident (pinned) for future shared-prefix admissions."""
+        assert self._slot_live[slot], slot
+        for pid in self.slot_pages[slot]:
+            self._unref(pid)
+        self.slot_pages[slot] = []
+        self.table[slot] = 0
+        self.table_dirty = True
+        self._slot_live[slot] = False
+        self._free_slots.append(slot)
+
+    # ------------------------------------------------------------------
+    # Device scatter: prefilled dense cache -> pages (+ SSM slot rows)
+    # ------------------------------------------------------------------
+    def _insert_impl(self, layers, req_layers, flat_pids, slots):
+        ps = self.page_size
+        out = {}
+        for key, entry in layers.items():
+            src = req_layers[key]
+            if "k_pages" in entry:
+                new = {}
+                for pk, sk in (("k_pages", "k"), ("v_pages", "v")):
+                    pages, seq = entry[pk], src[sk]
+                    quant = isinstance(pages, Int8Pages)
+                    kv, hd = (pages.codes if quant else pages).shape[-2:]
+                    # (G, B, L, ...) -> (G, B*n_chunks, ps, KV, hd); L is
+                    # page-aligned (the engine prefills at ceil(L/ps)*ps)
+                    chunks = seq.reshape(seq.shape[0], -1, ps, kv, hd)
+                    if quant:
+                        codes, scales = quantize_rows(chunks)
+                        new[pk] = Int8Pages(
+                            pages.codes.at[:, flat_pids].set(codes),
+                            pages.scales.at[:, flat_pids].set(scales))
+                    else:
+                        new[pk] = pages.at[:, flat_pids].set(
+                            chunks.astype(pages.dtype))
+                out[key] = new
+            else:                         # SSM state/conv: dense slot rows
+                out[key] = jax.tree.map(
+                    lambda big, small: big.at[:, slots].set(
+                        small.astype(big.dtype)), entry, src)
+        return out
+
+    def insert(self, admissions: List[Admission], req_layers) -> None:
+        """Scatter a freshly prefilled batch (batch dim k, seq dim padded
+        to a page multiple) into each request's pages. Prefix-matched
+        pages already hold this content (written by the admission that
+        registered them) and may be under concurrent read by live sharers,
+        so their chunks are redirected to the trash page — never rewritten.
+        The redirect keeps the scatter shape static per (k, prompt_len)."""
+        flat = [0 if i < adm.n_shared else pid
+                for adm in admissions
+                for i, pid in enumerate(adm.page_ids)]
+        slots = [adm.slot for adm in admissions]
+        self.layers = self._insert_fn(
+            self.layers, req_layers, jnp.asarray(flat, jnp.int32),
+            jnp.asarray(slots, jnp.int32))
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        prefix = None
+        if self.prefix is not None:
+            hr = self.prefix.hit_rate
+            prefix = {"lookups": self.prefix.lookups,
+                      "hits": self.prefix.hits,
+                      "hit_rate": round(hr, 4) if hr is not None else None,
+                      "registered_pages": len(self.prefix)}
+        return {
+            "page_size": self.page_size,
+            "pages_total": self.usable_pages,
+            "pages_used": self.pages_used,
+            "pages_used_peak": self.pages_used_peak,
+            "occupancy_peak": round(
+                self.pages_used_peak / max(self.usable_pages, 1), 4),
+            "kv_dtype": self.kv_dtype or "cache_dtype",
+            "cow_copies": self.cow_count,
+            "prefix": prefix,
+        }

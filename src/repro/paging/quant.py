@@ -1,0 +1,111 @@
+"""Quantized KV pages (DESIGN.md §9).
+
+``Int8Pages`` is the paged-cache analogue of the ``core.weights``
+containers: a frozen-dataclass JAX pytree whose array payloads (int8 codes +
+per-page scale tensors) are leaves and whose treedef carries no dynamic
+state, so a page pool built from ``Int8Pages`` containers passes through
+``jit`` arguments, ``lax.scan`` layer-stacking (the leading ``n_groups`` dim
+slices off both leaves together) and ``jax.device_put`` exactly like the
+bf16 page arrays it replaces.
+
+Quantization is symmetric per (token-row, kv-head): each row of each page
+carries its own f32 scale (``amax / 127``), so appending one token during
+decode re-quantizes only that token's row — existing codes and scales are
+never rescaled. The scale payload is 4 bytes per (token, kv-head) against
+``head_dim`` bytes of codes, so the cache footprint stays ~``head_dim/(
+head_dim+4)`` of bf16's half — the scales *live with the page* (allocated,
+shared, copied and freed at page granularity), which is what "per-page
+scales" means operationally: COW and prefix sharing move codes and scales
+as one unit.
+
+Both the pure-JAX gather path and the Pallas paged-attention kernel
+dequantize *after* the gather (``codes.astype(f32) * scale``), inside the
+kernel for the Pallas path — HBM traffic is int8.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Int8Pages", "quantize_rows", "dequantize_rows"]
+
+INT8_MAX = 127.0
+
+
+def quantize_rows(x: jnp.ndarray):
+    """Symmetric int8 quantization over the trailing (head_dim) axis.
+
+    x: (..., hd) float -> (codes (..., hd) int8, scales (...) f32).
+    All-zero rows get scale 1.0 (codes 0) so dequantization is exact there.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.where(amax > 0, amax / INT8_MAX, 1.0)
+    codes = jnp.clip(jnp.round(xf / scale[..., None]), -INT8_MAX, INT8_MAX)
+    return codes.astype(jnp.int8), scale
+
+
+def dequantize_rows(codes: jnp.ndarray, scales: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    """Inverse of ``quantize_rows``: (..., hd) int8 + (...) f32 -> float."""
+    return (codes.astype(jnp.float32)
+            * scales[..., None].astype(jnp.float32)).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Pages:
+    """int8-quantized K or V pages with per-(token-row, kv-head) scales.
+
+    codes:  (..., n_pages, page_size, KV, hd) int8
+    scales: (..., n_pages, page_size, KV)     f32
+
+    Leading dims (the layer-group stack) are arbitrary; the two leaves
+    always share them, so tree-mapped page scatters/copies touch both.
+    """
+
+    codes: Any
+    scales: Any
+
+    @classmethod
+    def zeros(cls, shape, *_ignored, **__ignored) -> "Int8Pages":
+        """Allocate zeroed pages for a (..., n_pages, ps, KV, hd) shape."""
+        return cls(codes=jnp.zeros(shape, jnp.int8),
+                   scales=jnp.ones(shape[:-1], jnp.float32))
+
+    @classmethod
+    def quantize(cls, x: jnp.ndarray) -> "Int8Pages":
+        codes, scales = quantize_rows(x)
+        return cls(codes=codes, scales=scales)
+
+    def dequantize(self, dtype=jnp.float32) -> jnp.ndarray:
+        return dequantize_rows(self.codes, self.scales, dtype)
+
+    @property
+    def shape(self):
+        return self.codes.shape
+
+    @property
+    def nbytes(self) -> int:
+        n = 0
+        for leaf in (self.codes, self.scales):
+            nb = getattr(leaf, "nbytes", None)
+            if nb is None:       # tracers / ShapeDtypeStructs
+                import numpy as np
+                nb = int(leaf.size) * np.dtype(leaf.dtype).itemsize
+            n += int(nb)
+        return n
+
+    def __repr__(self) -> str:   # leaves may be tracers; keep repr static
+        return f"Int8Pages(shape={tuple(self.codes.shape)})"
+
+
+jax.tree_util.register_pytree_with_keys(
+    Int8Pages,
+    lambda p: ([(jax.tree_util.GetAttrKey("codes"), p.codes),
+                (jax.tree_util.GetAttrKey("scales"), p.scales)], None),
+    lambda aux, children: Int8Pages(*children),
+    lambda p: ([p.codes, p.scales], None),
+)

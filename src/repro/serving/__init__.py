@@ -4,6 +4,11 @@
 ``ContinuousScheduler`` (interleaved prefill/decode/evict) ->
 ``SlotPool`` (fixed ``max_slots x max_len`` KV/SSM cache, free-list reuse)
 -> the ternary kernels, phase-tagged for the autotuner.
+
+``ContinuousScheduler(..., cache="paged")`` swaps the slot pool for the
+paged KV cache (``repro.paging.PagePool``: block tables, quantized pages,
+prefix reuse with copy-on-write — DESIGN.md §9); the dense mode remains
+the bit-exact A/B baseline.
 """
 from repro.serving.engine import ContinuousScheduler
 from repro.serving.queue import Request, RequestQueue

@@ -29,9 +29,19 @@ admit/evict events (O(requests), not O(tokens)).
 Kernel selection: prefill traces under ``ops.serving_phase("prefill")``
 (M=B·L GEMM-shaped) and decode under ``"decode"`` (M=slots GEMV-shaped), so
 the block-shape autotuner keys the two phases separately.
+
+Cache modes (DESIGN.md §9): ``cache="dense"`` is the original fixed
+``max_slots x max_len`` slot pool (kept bit-exact as the A/B baseline);
+``cache="paged"`` swaps in ``repro.paging.PagePool`` — per-request block
+tables over a global page pool, on-demand page growth each decode step,
+OOM-safe admission (requests defer instead of crashing), copy-on-write
+prefix sharing, and preempt-and-replay (greedy decoding is deterministic,
+so a preempted request replayed from its original prompt reproduces its
+tokens exactly) when the pool runs dry mid-decode.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Any, Dict, List, Optional
 
@@ -48,19 +58,38 @@ from repro.serving.slots import SlotPool
 
 class ContinuousScheduler:
     def __init__(self, cfg: ModelConfig, max_slots: int, max_len: int,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None, *, cache: str = "dense",
+                 page_size: int = 16, n_pages: int = 0,
+                 kv_dtype: Optional[str] = None, prefix_cache: bool = True,
+                 paged_attn: Optional[str] = None):
         if cfg.is_encdec or cfg.family == "vlm":
             raise ValueError(
                 f"family {cfg.family!r} needs per-request encoder/frontend "
                 "state; use the static BatchedServer for it")
+        assert cache in ("dense", "paged"), cache
+        # paged_attn=None inherits cfg.paged_attn_impl; an explicit value
+        # overrides it for this engine only
+        if cache == "paged" and paged_attn is not None \
+                and paged_attn != cfg.paged_attn_impl:
+            cfg = dataclasses.replace(cfg, paged_attn_impl=paged_attn)
         self.cfg = cfg
+        self.cache_mode = cache
         self.model = LM(cfg)
         self.max_slots = max_slots
         self.max_len = max_len
         self.eos_id = eos_id
         self.params = None
         self.queue = RequestQueue()
-        self.pool = SlotPool(self.model, max_slots, max_len)
+        if cache == "paged":
+            from repro.paging import PagePool
+            self.pool = PagePool(self.model, max_slots, max_len,
+                                 page_size=page_size, n_pages=n_pages,
+                                 kv_dtype=kv_dtype,
+                                 prefix_cache=prefix_cache)
+            self._dev_table = jnp.asarray(self.pool.table)
+            self.pool.table_dirty = False
+        else:
+            self.pool = SlotPool(self.model, max_slots, max_len)
         self._live: Dict[int, Request] = {}          # slot -> request
         self._pos = np.zeros(max_slots, np.int32)    # host mirror
         self._tok = np.zeros(max_slots, np.int32)    # host mirror
@@ -71,27 +100,51 @@ class ContinuousScheduler:
         self.total_drained = 0
         self.prefill_steps = 0
         self.decode_steps = 0
+        self.preemptions = 0
+        self.deferrals = 0
         self._depth_samples: List[int] = []
+        self._live_samples: List[int] = []
 
         def prefill(params, toks):
-            cache, logits = self.model.prefill(params, {"tokens": toks},
-                                               max_len)
-            return cache["layers"], jnp.argmax(logits[:, -1],
-                                               axis=-1).astype(jnp.int32)
+            cache_, logits = self.model.prefill(params, {"tokens": toks},
+                                                max_len)
+            return cache_["layers"], jnp.argmax(logits[:, -1],
+                                                axis=-1).astype(jnp.int32)
+
+        def prefill_paged(params, toks):
+            # page-aligned cache length: the pool scatters whole pages
+            pad = -(-toks.shape[1] // page_size) * page_size
+            cache_, logits = self.model.prefill(params, {"tokens": toks},
+                                                pad)
+            return cache_["layers"], jnp.argmax(logits[:, -1],
+                                                axis=-1).astype(jnp.int32)
 
         def decode(params, layers, pos, toks):
             # free slots keep decoding garbage; clamp their write position
             # so it can never run past the cache (live rows are bounded by
             # the submit-time prompt+budget <= max_len assertion)
-            cache = {"layers": layers,
-                     "pos": jnp.minimum(pos, max_len - 1)}
-            logits, new_cache = self.model.decode_step(params, cache,
+            cache_ = {"layers": layers,
+                      "pos": jnp.minimum(pos, max_len - 1)}
+            logits, new_cache = self.model.decode_step(params, cache_,
                                                        toks[:, None])
             nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
             return new_cache["layers"], new_cache["pos"], nxt
 
-        self._prefill = jax.jit(prefill)
+        def decode_paged(params, layers, table, pos, toks):
+            # free slots' block tables are all-zero, so their clamped
+            # garbage writes land in the pool's reserved trash page 0
+            cache_ = {"layers": layers,
+                      "pos": jnp.minimum(pos, max_len - 1),
+                      "block_table": table}
+            logits, new_cache = self.model.decode_step(params, cache_,
+                                                       toks[:, None])
+            nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+            return new_cache["layers"], new_cache["pos"], nxt
+
+        self._prefill = jax.jit(prefill if cache == "dense"
+                                else prefill_paged)
         self._decode = jax.jit(decode, donate_argnums=(1,))
+        self._decode_paged = jax.jit(decode_paged, donate_argnums=(1,))
 
     # ------------------------------------------------------------------
     def load(self, params) -> None:
@@ -128,7 +181,63 @@ class ContinuousScheduler:
         return self.queue.submit(prompt, max_new, eos_id=self.eos_id)
 
     # ------------------------------------------------------------------
+    def _prefill_group(self, group) -> None:
+        """Prefill one admitted group and wire up per-request state.
+        ``group`` is ``[(request, slot, Admission|None)]`` — the admission
+        carries the paged pool's page plan, ``None`` in dense mode. Shared
+        between both cache modes so their bookkeeping cannot diverge."""
+        prompts = np.stack([r.prompt for r, _, _ in group])
+        with kops.serving_phase("prefill"):
+            req_layers, toks_dev = self._prefill(
+                self.params, jnp.asarray(prompts))
+        self.prefill_steps += 1
+        if self.cache_mode == "paged":
+            self.pool.insert([a for _, _, a in group], req_layers)
+        else:
+            self.pool.insert([s for _, s, _ in group], req_layers)
+        toks = np.asarray(toks_dev)
+        now = time.monotonic()
+        for (req, slot, _), tok in zip(group, toks):
+            req.slot = slot
+            req.tokens.append(int(tok))
+            req.first_token_t = now
+            self._pos[slot] = req.prompt_len
+            self._tok[slot] = tok
+            self._live[slot] = req
+            self._dirty = True
+            if req.done:                 # max_new == 1 (or instant EOS)
+                self._evict(slot)
+
+    def _admit_paged(self) -> None:
+        """Paged admission: a request is admitted only when the page pool
+        can cover its whole prompt (shared prefix pages + fresh pages,
+        reclaiming cold prefix pages under pressure). A request the pool
+        cannot place right now *defers* — admission stops for this step and
+        retries after the next round of evictions frees pages."""
+        while self.queue and self.pool.n_free:
+            adm = self.pool.admit(self.queue.peek().prompt)
+            if adm is None:
+                self.deferrals += 1
+                return
+            group = [(self.queue.pop(), adm.slot, adm)]
+            plen = group[0][0].prompt_len
+            deferred = False
+            while (self.queue and self.pool.n_free
+                   and self.queue.peek().prompt_len == plen):
+                nxt = self.pool.admit(self.queue.peek().prompt)
+                if nxt is None:
+                    self.deferrals += 1
+                    deferred = True
+                    break
+                group.append((self.queue.pop(), nxt.slot, nxt))
+            self._prefill_group(group)
+            if deferred:    # already counted — don't re-attempt this step
+                return
+
     def _admit(self) -> None:
+        if self.cache_mode == "paged":
+            self._admit_paged()
+            return
         while self.queue and self.pool.n_free:
             # grouped admission: prefill a FIFO run of equal-length prompts
             # (up to the free-slot count) as one batch — one kernel dispatch
@@ -138,25 +247,8 @@ class ContinuousScheduler:
             while (len(group) < self.pool.n_free and self.queue
                    and self.queue.peek().prompt_len == plen):
                 group.append(self.queue.pop())
-            slots = [self.pool.alloc() for _ in group]
-            prompts = np.stack([r.prompt for r in group])
-            with kops.serving_phase("prefill"):
-                req_layers, toks_dev = self._prefill(
-                    self.params, jnp.asarray(prompts))
-            self.prefill_steps += 1
-            self.pool.insert(slots, req_layers)
-            toks = np.asarray(toks_dev)
-            now = time.monotonic()
-            for req, slot, tok in zip(group, slots, toks):
-                req.slot = slot
-                req.tokens.append(int(tok))
-                req.first_token_t = now
-                self._pos[slot] = req.prompt_len
-                self._tok[slot] = tok
-                self._live[slot] = req
-                self._dirty = True
-                if req.done:                 # max_new == 1 (or instant EOS)
-                    self._evict(slot)
+            self._prefill_group(
+                [(req, self.pool.alloc(), None) for req in group])
 
     def _evict(self, slot: int) -> None:
         req = self._live.pop(slot)
@@ -165,23 +257,70 @@ class ContinuousScheduler:
         self._pos[slot] = 0
         self._tok[slot] = 0
         self._dirty = True
-        self.pool.free(slot)
+        if self.cache_mode == "paged":
+            self.pool.release(slot)
+        else:
+            self.pool.free(slot)
         self._finished.append(req)
         self.total_drained += 1
+
+    def _preempt(self, slot: int) -> None:
+        """Paged OOM recovery: release the slot's pages and replay the
+        request from scratch later. Greedy decode is deterministic, so the
+        replay regenerates the exact same tokens — preemption trades
+        wasted compute for memory, never correctness."""
+        req = self._live.pop(slot)
+        self.pool.release(slot)
+        self._pos[slot] = 0
+        self._tok[slot] = 0
+        self._dirty = True
+        req.slot = None
+        req.tokens.clear()
+        req.first_token_t = None
+        self.queue.push_front(req)
+        self.preemptions += 1
+
+    def _grow_paged(self) -> None:
+        """Before each paged decode step, make every live row's write
+        position appendable: allocate pages crossed into this step and COW
+        shared pages about to be written. When the pool is dry, preempt the
+        *youngest* live request and retry — the oldest request is never
+        preempted while others live, which guarantees drain progress."""
+        for slot in list(self._live):
+            if slot not in self._live:       # preempted by an earlier turn
+                continue
+            while not self.pool.ensure_append(slot, int(self._pos[slot])):
+                victim = next(reversed(self._live))
+                self._preempt(victim)
+                if victim == slot:
+                    break
 
     def step(self) -> None:
         """One scheduler iteration: admit + prefill, decode, evict."""
         self._depth_samples.append(self.queue.depth())
         self._admit()
+        if self.cache_mode == "paged":
+            self._grow_paged()
         if not self._live:
             return
+        self._live_samples.append(len(self._live))
         if self._dirty:
             self._dev_pos = jnp.asarray(self._pos)
             self._dev_tok = jnp.asarray(self._tok)
             self._dirty = False
         with kops.serving_phase("decode"):
-            self.pool.layers, self._dev_pos, self._dev_tok = self._decode(
-                self.params, self.pool.layers, self._dev_pos, self._dev_tok)
+            if self.cache_mode == "paged":
+                if self.pool.table_dirty:
+                    self._dev_table = jnp.asarray(self.pool.table)
+                    self.pool.table_dirty = False
+                self.pool.layers, self._dev_pos, self._dev_tok = \
+                    self._decode_paged(self.params, self.pool.layers,
+                                       self._dev_table, self._dev_pos,
+                                       self._dev_tok)
+            else:
+                self.pool.layers, self._dev_pos, self._dev_tok = \
+                    self._decode(self.params, self.pool.layers,
+                                 self._dev_pos, self._dev_tok)
         self.decode_steps += 1
         toks = np.asarray(self._dev_tok)
         for slot in list(self._live):
@@ -200,7 +339,13 @@ class ContinuousScheduler:
         n0 = self.total_drained
         p0, d0 = self.prefill_steps, self.decode_steps
         self._depth_samples = []
+        self._live_samples = []
         budget = (self.queue.depth() + len(self._live)) * self.max_len + 1
+        if self.cache_mode == "paged":
+            # preempt-and-replay re-runs requests; each replay costs at most
+            # max_len extra steps and the oldest-never-preempted rule bounds
+            # the churn, but give the watchdog generous headroom
+            budget *= 8
         while self.queue or self._live:
             assert budget > 0, "scheduler failed to make progress"
             budget -= 1
@@ -213,10 +358,22 @@ class ContinuousScheduler:
         gen = sum(len(r.tokens) for r in done)
         ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
         depths = self._depth_samples or [0]
+        lives = self._live_samples or [0]
+        cache_metrics: Dict[str, Any] = {
+            "mode": self.cache_mode,
+            "nbytes": int(self.pool.nbytes),
+        }
+        if self.cache_mode == "paged":
+            cache_metrics.update(self.pool.stats())
+            cache_metrics["preemptions"] = self.preemptions
+            cache_metrics["deferrals"] = self.deferrals
         return {
             "engine": "continuous",
             "max_slots": self.max_slots,
             "max_len": self.max_len,
+            "cache": cache_metrics,
+            "concurrency": {"peak": int(np.max(lives)),
+                            "mean": round(float(np.mean(lives)), 3)},
             "planned_gemms": len(getattr(self, "gemm_plans", {})),
             "per_request": [r.metrics() for r in done],
             "submitted": len(done),

@@ -87,6 +87,11 @@ class RequestQueue:
     def pop(self) -> Request:
         return self._q.popleft()
 
+    def push_front(self, req: Request) -> None:
+        """Re-queue a preempted request at the head (it keeps its original
+        ``submit_t`` and rid; ``submitted`` is not re-counted)."""
+        self._q.appendleft(req)
+
     def peek(self) -> Optional[Request]:
         return self._q[0] if self._q else None
 

@@ -13,6 +13,7 @@ from __future__ import annotations
 from typing import List, Optional
 
 import jax
+import numpy as np
 
 
 class SlotPool:
@@ -25,8 +26,11 @@ class SlotPool:
         self.layers = model.init_cache(max_slots, max_len,
                                        dtype=cache_dtype)["layers"]
         # LIFO free list: reuse the most recently freed slot first (keeps
-        # the touched working set small at low load).
+        # the touched working set small at low load). Liveness rides in a
+        # boolean array so double-free detection is O(1), not an O(slots)
+        # membership scan per eviction (O(slots²) at high churn).
         self._free: List[int] = list(range(max_slots))[::-1]
+        self._live = np.zeros(max_slots, bool)
         self._insert = jax.jit(model.insert_cache, donate_argnums=(0,))
 
     @property
@@ -37,11 +41,23 @@ class SlotPool:
     def n_live(self) -> int:
         return self.max_slots - len(self._free)
 
+    @property
+    def nbytes(self) -> int:
+        """Device bytes of the pool's cache tree (the serving-memory
+        figure of merit reported in the engine metrics)."""
+        from repro.models import tree_nbytes
+        return tree_nbytes(self.layers)
+
     def alloc(self) -> Optional[int]:
-        return self._free.pop() if self._free else None
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._live[slot] = True
+        return slot
 
     def free(self, slot: int) -> None:
-        assert 0 <= slot < self.max_slots and slot not in self._free, slot
+        assert 0 <= slot < self.max_slots and self._live[slot], slot
+        self._live[slot] = False
         self._free.append(slot)
 
     def insert(self, slots, req_layers) -> None:

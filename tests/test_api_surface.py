@@ -13,7 +13,7 @@ import pytest
 GOLDEN = {
     "repro": {
         "configs", "core", "checkpoint", "data", "distributed", "kernels",
-        "launch", "models", "optim", "serving",
+        "launch", "models", "optim", "paging", "serving",
         "TernaryWeight", "Dense2Bit", "Tiled", "Bitplane", "Base3", "pack",
         "ternary_gemm", "ternary_gemm_plan",
     },
@@ -32,10 +32,16 @@ GOLDEN = {
         "pack_weights", "pack_weights_tiled",
         "ternary_gemm_pallas", "ternary_gemm_skip_pallas",
         "ternary_gemm_bitplane", "K_PER_WORD", "flash_attention_pallas",
+        "paged_decode_attention", "register_paged_attn",
+        "paged_attention_registry",
         "Autotuner", "BlockConfig", "get_tuner",
     },
     "repro.serving": {
         "ContinuousScheduler", "Request", "RequestQueue", "SlotPool",
+    },
+    "repro.paging": {
+        "PagePool", "Admission", "PrefixCache", "Int8Pages",
+        "page_keys", "tree_nbytes",
     },
     "repro.checkpoint": {"save", "restore", "latest_step"},
 }
@@ -49,6 +55,7 @@ GOLDEN_KERNELS = {
     ("bitplane", "ref"),
     ("base3", "ref"),
 }
+GOLDEN_PAGED_ATTN = {"jax", "pallas"}
 
 
 @pytest.mark.parametrize("module", sorted(GOLDEN))
@@ -73,6 +80,8 @@ def test_format_and_kernel_registries_locked():
         "a registered weight format disappeared")
     assert GOLDEN_KERNELS <= set(ops.kernel_registry()), (
         "a registered kernel lowering disappeared")
+    assert GOLDEN_PAGED_ATTN <= set(ops.paged_attention_registry()), (
+        "a registered paged-attention lowering disappeared")
 
 
 def test_legacy_shim_is_contained():
