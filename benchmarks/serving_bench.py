@@ -19,6 +19,7 @@ from repro.configs import get_config
 from repro.launch.serve import (BatchedServer, build_workload, run_continuous,
                                 run_static)
 from repro.serving import ContinuousScheduler
+from repro.spec import SpecConfig
 
 
 def serving_continuous_vs_static(quick: bool = False):
@@ -140,4 +141,92 @@ def serving_paged_vs_dense(quick: bool = False):
         "paged mode did not sustain more live requests than the dense cap")
 
 
-ALL = [serving_continuous_vs_static, serving_paged_vs_dense]
+def _pruned_tail_params(model, key, cut: int):
+    """Init params whose decoder layers >= ``cut`` contribute *exactly*
+    zero to the residual stream (their attention/MLP output projections
+    are zeroed), so a ``layer_skip(cut)`` draft is logit-identical to the
+    full model while the full model still pays for every layer. This is
+    the controlled acceptance shape the spec gate measures at: acceptance
+    is 1.0 by construction and the speedup isolates the engine mechanics —
+    one (slots, k+1) verify GEMM + a short-stack draft round vs k+1
+    GEMV-shaped sequential decode steps."""
+    params = model.init(key)
+    blk = dict(params["block0"])
+    for proj in (("mixer", "o"), ("ffn", "out")):
+        outer = dict(blk[proj[0]])
+        inner = dict(outer[proj[1]])
+        inner["w"] = inner["w"].at[cut:].set(0.0)
+        outer[proj[1]] = inner
+        blk[proj[0]] = outer
+    params["block0"] = blk
+    return params
+
+
+def serving_spec_vs_sequential(quick: bool = False):
+    """Speculative vs sequential decoding on the continuous engine
+    (DESIGN.md §10), token-exact by construction, gated in CI on the
+    tokens/s ratio at the controlled acceptance shape (a pruned-tail model
+    whose layer-skip draft always agrees — see ``_pruned_tail_params``)."""
+    layers, cut, k = 6, 2, 6
+    cfg = get_config("ternary-paper", reduced=True, num_layers=layers)
+    requests, slots = (12, 8) if quick else (24, 8)
+    prompt_len = 16 if quick else 32
+    # decode-heavy budgets: the ratio measures the decode loop, so keep
+    # the (identical-cost) prefill share of the wall small
+    gen_lens = (24, 48) if quick else (32, 96)
+    max_len = prompt_len + max(gen_lens) + 1 + k
+    prompts, gens, _ = build_workload(cfg, requests, prompt_len, gen_lens)
+
+    seq = ContinuousScheduler(cfg, max_slots=slots, max_len=max_len)
+    params = _pruned_tail_params(seq.model, jax.random.PRNGKey(0), cut)
+    seq.load(params)
+    spec = ContinuousScheduler(
+        cfg, max_slots=slots, max_len=max_len,
+        spec=SpecConfig(draft="layer_skip", k=k, draft_layers=cut))
+    spec.load(params)
+
+    def best_of(engine, n=3):
+        """1 compile-warmup pass + n timed passes, keep the fastest: CPU
+        wall times swing 2x under runner noise (see check_regression.py's
+        rationale for not gating per-entry times) and best-of-n recovers
+        the structural ratio from that noise."""
+        run_continuous(engine, prompts, gens)
+        best = None
+        for _ in range(n):
+            outs, m = run_continuous(engine, prompts, gens)
+            if best is None or m["tok_per_s"] > best[1]["tok_per_s"]:
+                best = (outs, m)
+        return best
+
+    outs_q, mq = best_of(seq)
+    outs_s, ms = best_of(spec)
+
+    exact = all(len(a) == len(b) and (a == b).all()
+                for a, b in zip(outs_q, outs_s))
+    ratio = ms["tok_per_s"] / mq["tok_per_s"]
+    sm = ms["spec"]
+    record("serving/spec", ms["wall_s"],
+           f"tok_per_s={ms['tok_per_s']},rounds={sm['rounds']},"
+           f"acceptance={sm['acceptance_rate']},"
+           f"mean_accepted_len={sm['mean_accepted_len']}")
+    record("serving/sequential_for_spec", mq["wall_s"],
+           f"tok_per_s={mq['tok_per_s']},decode_steps={mq['decode_steps']}")
+    # the gated ratio is capped at 1.8: measured speedups swing 1.6-2.4x
+    # with runner noise, and recording a lucky 2.4 would push the CI floor
+    # (baseline x 0.75) above the structural ~1.6 minimum. The cap keeps
+    # the gate at the issue's >= 1.3x contract (floor 1.8 x 0.75 = 1.35)
+    # without riding a fast run.
+    record("serving/spec_speedup", 0.0,
+           f"ratio={min(ratio, 1.8):.2f},token_exact={exact},"
+           f"measured={ratio:.2f}")
+    assert exact, "speculative outputs diverged from the sequential engine"
+    assert sm["acceptance_rate"] > 0.95, (
+        f"acceptance shape broken: rate {sm['acceptance_rate']} on the "
+        f"pruned-tail model (expected ~1.0)")
+    assert ratio >= 1.3, (
+        f"speculative decoding ({ms['tok_per_s']} tok/s) below the 1.3x "
+        f"floor vs sequential ({mq['tok_per_s']} tok/s)")
+
+
+ALL = [serving_continuous_vs_static, serving_paged_vs_dense,
+       serving_spec_vs_sequential]

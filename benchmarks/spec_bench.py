@@ -1,0 +1,139 @@
+"""Speculative-serving frontier sweep (DESIGN.md §10): draft depth k x
+draft sparsity x slot count -> (useful tok/s, acceptance rate, mean
+accepted length, verify rounds).
+
+The trade this measures: a deeper window (larger k) amortizes more target
+decode steps per verify GEMM but wastes more draft work when acceptance is
+low, and a sparser re-ternarized draft is cheaper per proposal but agrees
+with the target less often. Every sweep point runs the same mixed-budget
+workload through the continuous engine with a ``resparsify`` draft (packed
+``TernaryWeight`` params re-ternarized at the sweep sparsity) and is
+token-exact vs the sequential baseline by construction — the frontier is
+pure throughput/acceptance, never quality. Sequential (spec=off) baselines
+per slot count anchor the speedup column.
+
+Usage:
+  PYTHONPATH=src:. python benchmarks/spec_bench.py --quick
+  ... --json experiments/spec_frontier.json
+  ... --ks 1,2,4 --sparsities 0.125,0.25,0.5 --slots 2,4
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+from typing import List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.serve import build_workload, run_continuous
+from repro.serving import ContinuousScheduler
+from repro.spec import SpecConfig
+
+
+def _packed_setup(seed: int = 0, num_layers: int = 2):
+    """Reduced ternary-paper config with every projection packed into
+    ``TernaryWeight`` containers (resparsify drafts re-pack from these)."""
+    from repro.models import LM, layers as L
+    cfg = get_config("ternary-paper", reduced=True, num_layers=num_layers,
+                     ternary_min_dim=64)
+    params = LM(cfg).init(jax.random.PRNGKey(seed))
+    packed = L.pack_params(params, cfg)
+    cfg = dataclasses.replace(cfg, quantization="ternary_packed")
+    return cfg, packed
+
+
+def sweep_point(cfg, params, prompts, gens, *, max_len: int, slots: int,
+                spec: Optional[SpecConfig], base_tok_s: Optional[float],
+                ) -> dict:
+    eng = ContinuousScheduler(cfg, max_slots=slots, max_len=max_len,
+                              spec=spec)
+    eng.load(params)
+    run_continuous(eng, prompts, gens)           # compile warmup
+    outs, m = run_continuous(eng, prompts, gens)
+    s = m["spec"] or {}
+    return {
+        "k": spec.k if spec else 0,
+        "draft_sparsity": spec.draft_sparsity if spec else None,
+        "slots": slots,
+        "tok_per_s": m["tok_per_s"],
+        "wall_s": m["wall_s"],
+        "speedup": (round(m["tok_per_s"] / base_tok_s, 3)
+                    if base_tok_s else None),
+        "acceptance_rate": s.get("acceptance_rate"),
+        "mean_accepted_len": s.get("mean_accepted_len"),
+        "rounds": s.get("rounds"),
+        "decode_steps": m["decode_steps"],
+        "drained": m["drained"],
+        "outs": outs,
+    }
+
+
+def main(argv: Optional[Sequence[str]] = None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--ks", default="")
+    ap.add_argument("--sparsities", default="")
+    ap.add_argument("--slots", default="")
+    ap.add_argument("--requests", type=int, default=0)
+    ap.add_argument("--json", default="",
+                    help="also write the frontier rows as JSON")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    quick = args.quick
+    requests = args.requests or (8 if quick else 24)
+    prompt_len = 12 if quick else 24
+    gen_lens = (4, 16) if quick else (8, 48)
+    ks = [int(k) for k in args.ks.split(",") if k] or \
+        ([2, 4] if quick else [1, 2, 4])
+    sparsities = [float(s) for s in args.sparsities.split(",") if s] or \
+        ([0.25, 1.0] if quick else [0.125, 0.25, 0.5, 1.0])
+    slot_counts = [int(s) for s in args.slots.split(",") if s] or \
+        ([2] if quick else [2, 4])
+    max_len = prompt_len + max(gen_lens) + 1 + max(ks)
+
+    cfg, params = _packed_setup(args.seed)
+    prompts, gens, _ = build_workload(cfg, requests, prompt_len, gen_lens,
+                                      seed=args.seed)
+
+    rows: List[dict] = []
+    print("k,draft_sparsity,slots,tok_per_s,speedup,acceptance_rate,"
+          "mean_accepted_len,decode_steps")
+    for slots in slot_counts:
+        base = sweep_point(cfg, params, prompts, gens, max_len=max_len,
+                           slots=slots, spec=None, base_tok_s=None)
+        base_outs, base_tok_s = base.pop("outs"), base["tok_per_s"]
+        rows.append(base)
+        print(f"0,,{slots},{base['tok_per_s']},1.0,,,"
+              f"{base['decode_steps']}")
+        for k in ks:
+            for sp in sparsities:
+                row = sweep_point(
+                    cfg, params, prompts, gens, max_len=max_len,
+                    slots=slots, base_tok_s=base_tok_s,
+                    spec=SpecConfig(draft="resparsify", k=k,
+                                    draft_sparsity=sp))
+                outs = row.pop("outs")
+                exact = all(len(a) == len(b) and (np.asarray(a)
+                                                  == np.asarray(b)).all()
+                            for a, b in zip(base_outs, outs))
+                assert exact, (
+                    f"spec outputs diverged at k={k} s={sp} slots={slots}")
+                rows.append(row)
+                print(",".join(str(row[c]) for c in (
+                    "k", "draft_sparsity", "slots", "tok_per_s", "speedup",
+                    "acceptance_rate", "mean_accepted_len",
+                    "decode_steps")))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"version": 1, "quick": quick, "rows": rows}, f,
+                      indent=1)
+        print(f"wrote {len(rows)} frontier rows to {args.json}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -4,7 +4,15 @@ interleaved prefill/decode) and print per-request TTFT/latency plus engine
 throughput. Pass ``--static`` to run the same workload through the legacy
 static-batch server for an A/B comparison.
 
+Pass ``--spec`` to run the same engine with self-speculative decoding
+(DESIGN.md §10): a layer-skip draft proposes ``--spec-k`` tokens per slot
+per round and the target verifies them in one multi-token forward —
+outputs are token-exact vs the plain engine, and the printed spec block
+shows the acceptance rate the draft achieved.
+
 Run:  PYTHONPATH=src python examples/serve_batched.py --arch mixtral-8x22b
+      PYTHONPATH=src python examples/serve_batched.py \
+          --arch ternary-paper --spec --spec-k 4
 """
 import argparse
 import json
@@ -26,11 +34,16 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-lens", default="4,16")
     ap.add_argument("--static", action="store_true")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative decoding (layer-skip draft; "
+                         "token-exact vs the plain engine)")
+    ap.add_argument("--spec-k", type=int, default=4)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
     gen_lens = [int(g) for g in args.gen_lens.split(",")]
-    max_len = args.prompt_len + max(gen_lens) + 1
+    max_len = args.prompt_len + max(gen_lens) + 1 \
+        + (args.spec_k if args.spec else 0)
     prompts, gens, extras = build_workload(cfg, args.requests,
                                            args.prompt_len, gen_lens)
 
@@ -46,8 +59,23 @@ def main():
         for i, out in enumerate(outs):
             print(f"req {i}: {len(out)} tokens; sample: {out[:8].tolist()}")
     else:
-        engine = ContinuousScheduler(cfg, max_slots=args.slots,
-                                     max_len=max_len)
+        spec = None
+        if args.spec:
+            from repro.spec import SpecConfig
+            spec = SpecConfig(draft="layer_skip", k=args.spec_k)
+        try:
+            engine = ContinuousScheduler(cfg, max_slots=args.slots,
+                                         max_len=max_len, spec=spec)
+        except ValueError as e:
+            # the engine owns the spec-support predicate (rolling-SWA /
+            # SSM / opt-layout caches cannot roll back) — fall back rather
+            # than duplicating its rules here
+            if spec is None:
+                raise
+            print(f"# --spec unsupported for {args.arch}: {e}")
+            spec = None
+            engine = ContinuousScheduler(cfg, max_slots=args.slots,
+                                         max_len=max_len)
         engine.load(engine.model.init(jax.random.PRNGKey(0)))
         outs, metrics = run_continuous(engine, prompts, gens)
         for r in sorted(metrics["per_request"], key=lambda r: r["rid"]):
@@ -55,6 +83,11 @@ def main():
             print(f"req {r['rid']}: {r['gen_len']} tokens, "
                   f"ttft {r['ttft_s']:.3f}s, latency {r['latency_s']:.3f}s; "
                   f"sample: {out[:8].tolist()}")
+        if metrics["spec"] is not None:
+            s = metrics["spec"]
+            print(f"# spec: draft={s['draft']} k={s['k']} "
+                  f"acceptance={s['acceptance_rate']} "
+                  f"mean_accepted_len={s['mean_accepted_len']}")
     print(json.dumps({k: v for k, v in metrics.items()
                       if k != "per_request"}))
 

@@ -1,6 +1,6 @@
 from repro.kernels.autotune import Autotuner, BlockConfig, get_tuner
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.ops import (GemmPlan, kernel_registry,
+from repro.kernels.ops import (SERVING_PHASES, GemmPlan, kernel_registry,
                                paged_attention_registry,
                                paged_decode_attention, pack_weights,
                                pack_weights_tiled, register_kernel,
@@ -12,6 +12,7 @@ from repro.kernels.ternary_gemm_bitplane import ternary_gemm_bitplane
 
 __all__ = ["ternary_gemm", "ternary_gemm_plan", "GemmPlan",
            "register_kernel", "kernel_registry", "serving_phase",
+           "SERVING_PHASES",
            "pack_weights", "pack_weights_tiled",
            "ternary_gemm_pallas", "ternary_gemm_skip_pallas",
            "ternary_gemm_bitplane", "K_PER_WORD", "flash_attention_pallas",

@@ -53,8 +53,11 @@ CANDIDATE_BLOCKS: Tuple[Tuple[int, int, int], ...] = (
     (64, 128, 512), (8, 128, 512), (8, 256, 512),
 )
 
-# Extra candidates considered only for the serving decode phase: M = slots
-# is GEMV-shaped (tiny block_m), so trade the M tile for deeper K reuse.
+# Extra candidates considered for the serving decode phase: M = slots is
+# GEMV-shaped (tiny block_m), so trade the M tile for deeper K reuse. The
+# speculative-decoding verify phase (M = slots·(k+1), still small-M but
+# GEMM-shaped) shares the widened grid so its own cache entries can land
+# on the GEMV-leaning shapes when the model scores them best.
 DECODE_CANDIDATE_BLOCKS: Tuple[Tuple[int, int, int], ...] = (
     (8, 128, 1024), (8, 256, 1024), (8, 512, 512), (16, 256, 512),
 )
@@ -153,7 +156,7 @@ class Autotuner:
         are dictated by the data layout (TiledTernary tile shapes). The
         decode phase widens the grid with GEMV-shaped candidates."""
         grid = CANDIDATE_BLOCKS
-        if phase == "decode":
+        if phase in ("decode", "verify"):
             grid = grid + DECODE_CANDIDATE_BLOCKS
         out, seen = [], set()
         for bm, bn, bk in grid:

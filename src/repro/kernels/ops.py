@@ -64,13 +64,18 @@ from repro.kernels.ternary_gemm_bitplane import (K_PER_BYTE,
 __all__ = ["ternary_gemm", "ternary_gemm_plan", "GemmPlan", "KernelImpl",
            "register_kernel", "kernel_registry", "precompute_plans",
            "pack_weights", "pack_weights_tiled",
-           "serving_phase", "current_phase", "SKIP_OCCUPANCY_CUTOFF",
+           "serving_phase", "current_phase", "SERVING_PHASES",
+           "SKIP_OCCUPANCY_CUTOFF",
            "paged_decode_attention", "register_paged_attn",
            "paged_attention_registry"]
 
 # Serving-phase tag consumed at trace time: prefill GEMMs are M=B·L
-# GEMM-shaped, decode GEMMs are M=slots GEMV-shaped, and the two must not
-# share (and thrash) one autotune entry even when their bucketed M collides.
+# GEMM-shaped, decode GEMMs are M=slots GEMV-shaped, verify GEMMs
+# (speculative decoding, DESIGN.md §10) are M=slots·(k+1) small-GEMM
+# shaped — no two of them may share (and thrash) one autotune entry even
+# when their bucketed M collides.
+SERVING_PHASES = ("prefill", "decode", "verify")
+
 _SERVING_PHASE: contextvars.ContextVar[Optional[str]] = \
     contextvars.ContextVar("repro_serving_phase", default=None)
 
@@ -78,9 +83,9 @@ _SERVING_PHASE: contextvars.ContextVar[Optional[str]] = \
 @contextlib.contextmanager
 def serving_phase(phase: Optional[str]):
     """Tag ``ternary_gemm`` dispatches traced inside this scope as
-    ``"prefill"`` or ``"decode"`` so the autotuner keys them separately
-    (the serving engine wraps its prefill/decode jit calls in this)."""
-    assert phase in (None, "prefill", "decode"), phase
+    ``"prefill"``, ``"decode"`` or ``"verify"`` so the autotuner keys them
+    separately (the serving engine wraps its phase jit calls in this)."""
+    assert phase is None or phase in SERVING_PHASES, phase
     token = _SERVING_PHASE.set(phase)
     try:
         yield
@@ -627,7 +632,7 @@ def ternary_gemm_plan(
                     fuse_prelu=fuse_prelu, prelu_alpha=prelu_alpha)
 
 
-def precompute_plans(params, *, prefill_ms=(), decode_ms=(),
+def precompute_plans(params, *, prefill_ms=(), decode_ms=(), verify_ms=(),
                      select: Optional[Callable] = None, impl: str = "auto",
                      ) -> Dict[Tuple[int, ...], GemmPlan]:
     """Warm phase-keyed plans for ``TernaryWeight``s in a param tree.
@@ -648,7 +653,8 @@ def precompute_plans(params, *, prefill_ms=(), decode_ms=(),
           and (select is None or select(path, w))]
     plans: Dict[Tuple[int, ...], GemmPlan] = {}
     for i, (_, w) in enumerate(ws):
-        for phase, ms in (("prefill", prefill_ms), ("decode", decode_ms)):
+        for phase, ms in (("prefill", prefill_ms), ("decode", decode_ms),
+                          ("verify", verify_ms)):
             for m in ms:
                 plans[(i, m, phase)] = ternary_gemm_plan(w, m, impl=impl,
                                                          phase=phase)

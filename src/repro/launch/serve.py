@@ -19,6 +19,11 @@ Usage:
   ... --cache paged --page-size 16 --kv-dtype int8   # paged KV cache
                                       # (block tables + quantized pages +
                                       #  prefix reuse, DESIGN.md §9)
+  ... --spec layer_skip --spec-k 4    # self-speculative decoding: draft k
+                                      # tokens cheaply, verify all k+1 in
+                                      # one small-M GEMM forward, roll back
+                                      # rejects — token-exact (DESIGN.md
+                                      # §10; resparsify needs --packed)
 """
 from __future__ import annotations
 
@@ -185,6 +190,21 @@ def main(argv: Optional[Sequence[str]] = None):
                          "(default: inherit cfg.paged_attn_impl; auto = "
                          "pallas on TPU, dense-bit-identical jax gather "
                          "elsewhere)")
+    ap.add_argument("--spec", default="off",
+                    choices=("off", "resparsify", "layer_skip"),
+                    help="speculative decoding draft strategy (DESIGN.md "
+                         "§10): resparsify = re-ternarized packed weights "
+                         "at --draft-sparsity (needs --packed), layer_skip "
+                         "= a prefix of the stack + shared lm_head. "
+                         "Outputs stay token-exact vs --spec off")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="--spec: draft tokens proposed (and verified) per "
+                         "round; each slot emits 1..k+1 tokens per round")
+    ap.add_argument("--draft-sparsity", type=float, default=0.125,
+                    help="--spec resparsify: draft nnz fraction")
+    ap.add_argument("--draft-layers", type=int, default=0,
+                    help="--spec layer_skip: draft stack depth (0: half "
+                         "the layers, rounded to the stack period)")
     ap.add_argument("--packed", action="store_true",
                     help="quantize+pack ternarizable projections into the "
                          "TernaryWeight serving format before load (the "
@@ -202,7 +222,9 @@ def main(argv: Optional[Sequence[str]] = None):
                  if args.ternary_min_dim > 0 else {})
     cfg = get_config(args.arch, reduced=args.reduced, **overrides)
     gen_lens = [int(g) for g in args.gen_lens.split(",")]
-    max_len = args.max_len or args.prompt_len + max(gen_lens) + 1
+    spec_headroom = args.spec_k if args.spec != "off" else 0
+    max_len = args.max_len or (args.prompt_len + max(gen_lens) + 1
+                               + spec_headroom)
     prompts, gens, extras = build_workload(cfg, args.requests,
                                            args.prompt_len, gen_lens,
                                            seed=args.seed)
@@ -234,6 +256,12 @@ def main(argv: Optional[Sequence[str]] = None):
     else:
         from repro.serving import ContinuousScheduler
         eos = args.eos_id if args.eos_id >= 0 else None
+        spec = None
+        if args.spec != "off":
+            from repro.spec import SpecConfig
+            spec = SpecConfig(draft=args.spec, k=args.spec_k,
+                              draft_sparsity=args.draft_sparsity,
+                              draft_layers=args.draft_layers)
         engine = ContinuousScheduler(cfg, max_slots=args.slots,
                                      max_len=max_len, eos_id=eos,
                                      cache=args.cache,
@@ -241,7 +269,8 @@ def main(argv: Optional[Sequence[str]] = None):
                                      n_pages=args.pages,
                                      kv_dtype=args.kv_dtype or None,
                                      prefix_cache=not args.no_prefix_cache,
-                                     paged_attn=args.paged_attn)
+                                     paged_attn=args.paged_attn,
+                                     spec=spec)
         engine.load(params)
         _, metrics = run_continuous(engine, prompts, gens)
     print(json.dumps(metrics))

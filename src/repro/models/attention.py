@@ -246,9 +246,17 @@ def attn_apply(params, x: jnp.ndarray, cfg: ModelConfig, *,
 
     * train/prefill: cache=None (or a cache dict to fill at positions 0..S).
     * decode: cache given + cache_pos scalar; x is (B, 1, d).
+    * verify window (speculative decoding, DESIGN.md §10): x is (B, S>1, d)
+      with cache_pos scalar or (B,) — the S tokens sit at positions
+      cache_pos..cache_pos+S-1, their K/V are scattered before attending,
+      and causal masking within the window plus the committed prefix makes
+      each window token's logits equal to what sequential decode at its
+      position would produce. Non-rolling caches only (the caller —
+      ``LM.decode_step`` — unrolls rolling-SWA layouts per token instead).
     * paged decode: cache = {"k_pages", "v_pages"} + block_table (B, T) +
       cache_pos (B,) vector (DESIGN.md §9); prefill never sees a paged
       cache — the page pool scatters prefilled dense rows into pages.
+      Multi-token verify windows flatten to a (B·S) row batch.
     * cross-attention: kv_override = (k, v) precomputed from the encoder.
     """
     kv, hd = cfg.num_kv_heads, cfg.head_dim
@@ -276,7 +284,26 @@ def attn_apply(params, x: jnp.ndarray, cfg: ModelConfig, *,
     if cache is not None and kv_override is None:
         flat = cache["k"].ndim == 3
         cache_len = cache["k"].shape[2] if opt else cache["k"].shape[1]
-        if cache_pos is not None:  # decode: insert this step's K/V
+        if cache_pos is not None and k.shape[1] > 1:
+            # verify window (DESIGN.md §10): scatter all S tokens' K/V at
+            # positions cache_pos..cache_pos+S-1 before attending. Rolling
+            # SWA caches never reach here (write-then-attend would let a
+            # wrapped write clobber an entry an earlier window token still
+            # attends to — decode_step unrolls those per token).
+            assert not (cfg.sliding_window and cache_len <= cfg.sliding_window)
+            assert not opt, "verify windows need cache_layout='bshd'"
+            sq = k.shape[1]
+            base = cache_pos[:, None] if jnp.ndim(cache_pos) else cache_pos
+            slots2d = jnp.broadcast_to(base + jnp.arange(sq),
+                                       (k.shape[0], sq))
+            rows = jnp.arange(k.shape[0])[:, None]
+            k_c = cache["k"].at[rows, slots2d].set(
+                _store_view(k, cfg, flat).astype(cache["k"].dtype))
+            v_c = cache["v"].at[rows, slots2d].set(
+                _store_view(v, cfg, flat).astype(cache["v"].dtype))
+            new_cache = {"k": k_c, "v": v_c}
+            k, v = _cache_view(k_c, cfg), _cache_view(v_c, cfg)
+        elif cache_pos is not None:  # decode: insert this step's K/V
             if cfg.sliding_window and cache_len <= cfg.sliding_window:
                 slot = cache_pos % cache_len            # rolling SWA cache
             else:
@@ -345,7 +372,14 @@ def attn_apply(params, x: jnp.ndarray, cfg: ModelConfig, *,
                         cache["v"], vs.astype(cache["v"].dtype), zeros)
             new_cache = {"k": k_c, "v": v_c}
 
-    if cache_pos is not None:
+    if cache_pos is not None and q.shape[1] > 1:
+        # verify window: causal masking gives token j of the window exactly
+        # the prefix+window-causal view sequential decode at position
+        # cache_pos+j would see (its own K/V at that slot included; stale
+        # rows beyond the window are masked as "future" by causality)
+        o = naive_attention(q, k, v, causal=True, window=cfg.sliding_window,
+                            q_offset=cache_pos)
+    elif cache_pos is not None:
         # decode: 1-token query against the cache (plain attention)
         cache_len = (cache["k"].shape[2] if opt
                      else cache["k"].shape[1]) if cache is not None else 0
@@ -411,6 +445,12 @@ def _paged_decode(params, x, cfg: ModelConfig, q, k, v, cache,
     Every live row writes to a page it privately owns (COW in the page pool
     guarantees this); free slots' block tables are all-zero, so their
     garbage writes land in the reserved trash page 0 and are never read.
+
+    A multi-token verify window (S > 1, DESIGN.md §10) scatters all S
+    tokens first — the engine's ``ensure_append`` horizon made every page
+    in positions cache_pos..cache_pos+S-1 privately owned — then flattens
+    the window into a (B·S) row batch whose per-row ``lengths`` encode
+    causality within the window (token j sees valid tokens < pos+j+1).
     """
     from repro.paging.quant import Int8Pages, quantize_rows
 
@@ -418,26 +458,50 @@ def _paged_decode(params, x, cfg: ModelConfig, q, k, v, cache,
     quantized = isinstance(k_pages, Int8Pages)
     ps = (k_pages.codes if quantized else k_pages).shape[-3]
     pos = jnp.asarray(cache_pos)
-    rows = jnp.arange(k.shape[0])
-    pids = block_table[rows, pos // ps]           # (B,) page of this token
-    offs = pos % ps
-    k_tok, v_tok = k[:, 0], v[:, 0]               # (B, KV, hd)
-    if quantized:
-        kc, ks = quantize_rows(k_tok)
-        vc, vs = quantize_rows(v_tok)
-        k_pages = Int8Pages(k_pages.codes.at[pids, offs].set(kc),
-                            k_pages.scales.at[pids, offs].set(ks))
-        v_pages = Int8Pages(v_pages.codes.at[pids, offs].set(vc),
-                            v_pages.scales.at[pids, offs].set(vs))
-    else:
-        k_pages = k_pages.at[pids, offs].set(k_tok.astype(k_pages.dtype))
-        v_pages = v_pages.at[pids, offs].set(v_tok.astype(v_pages.dtype))
-    o = kops.paged_decode_attention(
-        q[:, 0], k_pages, v_pages, block_table, pos + 1,
-        window=cfg.sliding_window, impl=cfg.paged_attn_impl)
+    b, sq = k.shape[0], k.shape[1]
     h = cfg.num_heads + cfg.head_pad
+    if sq == 1:
+        rows = jnp.arange(k.shape[0])
+        pids = block_table[rows, pos // ps]       # (B,) page of this token
+        offs = pos % ps
+        k_tok, v_tok = k[:, 0], v[:, 0]           # (B, KV, hd)
+        if quantized:
+            kc, ks = quantize_rows(k_tok)
+            vc, vs = quantize_rows(v_tok)
+            k_pages = Int8Pages(k_pages.codes.at[pids, offs].set(kc),
+                                k_pages.scales.at[pids, offs].set(ks))
+            v_pages = Int8Pages(v_pages.codes.at[pids, offs].set(vc),
+                                v_pages.scales.at[pids, offs].set(vs))
+        else:
+            k_pages = k_pages.at[pids, offs].set(k_tok.astype(k_pages.dtype))
+            v_pages = v_pages.at[pids, offs].set(v_tok.astype(v_pages.dtype))
+        o = kops.paged_decode_attention(
+            q[:, 0], k_pages, v_pages, block_table, pos + 1,
+            window=cfg.sliding_window, impl=cfg.paged_attn_impl)
+        o_seq = o[:, None]                        # (B, 1, H, hd)
+    else:
+        base = pos[:, None] if pos.ndim else pos
+        pos2d = jnp.broadcast_to(base + jnp.arange(sq), (b, sq))
+        rows = jnp.arange(b)[:, None]
+        pids = block_table[rows, pos2d // ps]     # (B, S)
+        offs = pos2d % ps
+        if quantized:
+            kc, ks = quantize_rows(k)             # (B,S,KV,hd)/(B,S,KV)
+            vc, vs = quantize_rows(v)
+            k_pages = Int8Pages(k_pages.codes.at[pids, offs].set(kc),
+                                k_pages.scales.at[pids, offs].set(ks))
+            v_pages = Int8Pages(v_pages.codes.at[pids, offs].set(vc),
+                                v_pages.scales.at[pids, offs].set(vs))
+        else:
+            k_pages = k_pages.at[pids, offs].set(k.astype(k_pages.dtype))
+            v_pages = v_pages.at[pids, offs].set(v.astype(v_pages.dtype))
+        o = kops.paged_decode_attention(
+            q.reshape(b * sq, h, cfg.head_dim), k_pages, v_pages,
+            jnp.repeat(block_table, sq, axis=0), (pos2d + 1).reshape(-1),
+            window=cfg.sliding_window, impl=cfg.paged_attn_impl)
+        o_seq = o.reshape(b, sq, h, cfg.head_dim)
     y = linear_apply(params["o"],
-                     o[:, None].reshape(*x.shape[:-1], h * cfg.head_dim),
+                     o_seq.reshape(*x.shape[:-1], h * cfg.head_dim),
                      cfg)
     return y, {"k_pages": k_pages, "v_pages": v_pages}
 

@@ -402,8 +402,35 @@ class LM:
             cache["enc_out"] = enc_out
         return cache, logits
 
+    def _decode_window_unrolled(self, cache) -> bool:
+        """Whether a multi-token verify window must unroll per token.
+
+        The batched window path (scatter all S tokens' K/V, then attend
+        with causal-within-window masking) equals sequential decode only
+        when a token's cache write cannot clobber state an earlier window
+        token still reads: non-rolling attention caches in the bshd/flat
+        layouts, paged included. Rolling SWA caches (a wrapped write
+        overwrites the oldest live entry), the 'opt' delta-commit layout
+        and SSM recurrences instead unroll inside the same call — bitwise
+        equal to sequential decode by construction."""
+        cfg = self.cfg
+        if cfg.cache_layout == "opt":
+            return True
+        if any(kind != "attn" for kind, _ in self.block_kinds):
+            return True
+        if "block_table" in cache:        # paged pools reject SWA models
+            return False
+        if cfg.sliding_window:
+            cache_len = cache["layers"]["cache0"]["k"].shape[2]
+            return cache_len <= cfg.sliding_window      # rolling cache
+        return False
+
     def decode_step(self, params, cache, tokens):
-        """tokens: (B, 1) -> (logits (B,1,V), updated cache).
+        """tokens: (B, S) -> (logits (B,S,V), updated cache). S is 1 for
+        plain decode; S > 1 is a speculative-decoding *verify window*
+        (DESIGN.md §10): the S tokens sit at consecutive positions
+        pos..pos+S-1 and each position's logits equal what S sequential
+        single-token calls would produce.
 
         ``cache["pos"]`` may be a scalar (classic batched decode: all rows
         at the same position) or a (B,) vector (continuous batching: each
@@ -412,9 +439,20 @@ class LM:
         paged cache path (pages + block tables, DESIGN.md §9)."""
         cfg = self.cfg
         pos = cache["pos"]
+        sq = tokens.shape[1]
+        if sq > 1 and self._decode_window_unrolled(cache):
+            lgs, cur = [], cache
+            for j in range(sq):
+                lg, cur = self.decode_step(params, cur, tokens[:, j:j + 1])
+                lgs.append(lg)
+            return jnp.concatenate(lgs, axis=1), cur
         positions_src = pos[:, None] if jnp.ndim(pos) else pos
         x = layers.embed_apply(params["embed"], tokens, cfg)
-        positions = jnp.broadcast_to(positions_src, tokens.shape)
+        if sq == 1:
+            positions = jnp.broadcast_to(positions_src, tokens.shape)
+        else:
+            positions = jnp.broadcast_to(positions_src + jnp.arange(sq),
+                                         tokens.shape)
         x, new_caches, _ = self._run_stack(
             params, x, positions=positions, causal=True,
             caches=cache["layers"], cache_pos=pos,
@@ -452,7 +490,7 @@ class LM:
                     }
             else:
                 committed[key] = nc
-        new_cache = dict(cache, layers=committed, pos=pos + 1)
+        new_cache = dict(cache, layers=committed, pos=pos + sq)
         return logits, new_cache
 
 

@@ -273,6 +273,31 @@ class PagePool:
         self._note_usage()
         return True
 
+    def truncate(self, slot: int, n_tokens: int) -> int:
+        """Speculative-decoding rollback (DESIGN.md §10): drop the slot's
+        page references beyond what ``n_tokens`` committed tokens need and
+        return how many pages went back to the pool, O(dropped).
+
+        Only decode-grown tail pages can be dropped — ``n_tokens`` is never
+        below the prompt length, so prefix-shared (registered) prompt pages
+        stay in range — and a dropped page is either freshly allocated or
+        the private side of a COW, i.e. refcount 1 and unregistered:
+        ``_unref`` returns it to the free list immediately. Refcounts of
+        shared pages are untouched, so prefix sharing/COW invariants hold.
+        """
+        assert self._slot_live[slot], slot
+        keep = max(self.pages_needed(n_tokens), 1)
+        pages = self.slot_pages[slot]
+        if keep >= len(pages):
+            return 0
+        dropped = pages[keep:]
+        del pages[keep:]
+        for pid in dropped:
+            self._unref(pid)
+        self.table[slot, keep:keep + len(dropped)] = 0
+        self.table_dirty = True
+        return len(dropped)
+
     def release(self, slot: int) -> None:
         """Return a slot and its page references; registered prefix pages
         stay resident (pinned) for future shared-prefix admissions."""

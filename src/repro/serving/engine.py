@@ -38,6 +38,18 @@ OOM-safe admission (requests defer instead of crashing), copy-on-write
 prefix sharing, and preempt-and-replay (greedy decoding is deterministic,
 so a preempted request replayed from its original prompt reproduces its
 tokens exactly) when the pool runs dry mid-decode.
+
+Speculative decoding (DESIGN.md §10): ``spec=SpecConfig(...)`` replaces
+the one-token decode with a draft -> verify -> rollback round. A cheap
+draft model (``repro.spec.draft``) proposes ``k`` tokens per slot from its
+own dense KV cache; the target verifies the whole ``(slots, k+1)`` window
+in one forward traced under ``serving_phase("verify")`` (M = slots·(k+1)
+GEMM-shaped — the regime the sparse ternary kernels are built for) and
+accepts the longest exactly-matching prefix plus one bonus token. The
+window forward is bitwise-equal to sequential decode, so spec serving is
+token-exact vs the non-spec engine; rejected tokens roll back by length
+bookkeeping (dense) plus O(1) tail-page reclamation (paged). Each round
+emits 1..k+1 tokens per live slot.
 """
 from __future__ import annotations
 
@@ -56,12 +68,45 @@ from repro.serving.queue import Request, RequestQueue
 from repro.serving.slots import SlotPool
 
 
+class _RunningStat:
+    """Bounded replacement for the old unbounded per-step sample lists:
+    count/sum/peak accumulate in O(1) state — ``mean``/``peak`` are exact
+    over *every* pushed sample, unlike a sampling reservoir — plus a small
+    ring of the most recent samples for debugging long runs."""
+
+    __slots__ = ("n", "total", "peak", "ring", "_cap", "_i")
+
+    def __init__(self, cap: int = 1024):
+        self.n = 0
+        self.total = 0
+        self.peak = 0
+        self.ring: List[int] = []
+        self._cap = cap
+        self._i = 0
+
+    def push(self, v: int) -> None:
+        v = int(v)
+        self.n += 1
+        self.total += v
+        if v > self.peak:
+            self.peak = v
+        if len(self.ring) < self._cap:
+            self.ring.append(v)
+        else:
+            self.ring[self._i] = v
+            self._i = (self._i + 1) % self._cap
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.n if self.n else 0.0
+
+
 class ContinuousScheduler:
     def __init__(self, cfg: ModelConfig, max_slots: int, max_len: int,
                  eos_id: Optional[int] = None, *, cache: str = "dense",
                  page_size: int = 16, n_pages: int = 0,
                  kv_dtype: Optional[str] = None, prefix_cache: bool = True,
-                 paged_attn: Optional[str] = None):
+                 paged_attn: Optional[str] = None, spec=None):
         if cfg.is_encdec or cfg.family == "vlm":
             raise ValueError(
                 f"family {cfg.family!r} needs per-request encoder/frontend "
@@ -78,6 +123,28 @@ class ContinuousScheduler:
         self.max_slots = max_slots
         self.max_len = max_len
         self.eos_id = eos_id
+        if spec is not None:
+            if spec.k < 1:
+                raise ValueError(f"spec.k must be >= 1, got {spec.k}")
+            if max_len < spec.k + 2:
+                raise ValueError(f"max_len={max_len} leaves no room for a "
+                                 f"k={spec.k} verify window")
+            if any(kind != "attn" for kind, _ in self.model.block_kinds):
+                raise ValueError(
+                    "speculative decoding needs an attention-only stack: "
+                    "SSM recurrent state advanced past a rejected token "
+                    "cannot be rolled back by position bookkeeping")
+            if cfg.cache_layout == "opt":
+                raise ValueError("speculative decoding needs "
+                                 "cache_layout='bshd' (the 'opt' "
+                                 "delta-commit layout is one-token-only)")
+            if cfg.sliding_window:
+                raise ValueError(
+                    "speculative decoding does not support rolling "
+                    "sliding-window caches: a rejected window write "
+                    "overwrites the oldest live entry, which rollback "
+                    "cannot restore")
+        self.spec = spec
         self.params = None
         self.queue = RequestQueue()
         if cache == "paged":
@@ -93,8 +160,12 @@ class ContinuousScheduler:
         self._live: Dict[int, Request] = {}          # slot -> request
         self._pos = np.zeros(max_slots, np.int32)    # host mirror
         self._tok = np.zeros(max_slots, np.int32)    # host mirror
+        # spec: second-newest committed token per slot (the draft round's
+        # re-sync feed; see repro.spec.draft.make_draft_round)
+        self._prev_tok = np.zeros(max_slots, np.int32)
         self._dev_pos = jnp.zeros(max_slots, jnp.int32)
         self._dev_tok = jnp.zeros(max_slots, jnp.int32)
+        self._dev_prev = jnp.zeros(max_slots, jnp.int32)
         self._dirty = False           # host mirrors newer than device state
         self._finished: List[Request] = []
         self.total_drained = 0
@@ -102,8 +173,14 @@ class ContinuousScheduler:
         self.decode_steps = 0
         self.preemptions = 0
         self.deferrals = 0
-        self._depth_samples: List[int] = []
-        self._live_samples: List[int] = []
+        self.spec_rounds = 0
+        self.spec_slot_rounds = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
+        self.spec_emitted = 0
+        self.spec_page_reclaims = 0
+        self._depth_stat = _RunningStat()
+        self._live_stat = _RunningStat()
 
         def prefill(params, toks):
             cache_, logits = self.model.prefill(params, {"tokens": toks},
@@ -163,21 +240,56 @@ class ContinuousScheduler:
         # (M = prompt_len < 8) must hit a warm entry too
         prefill_ms = [1 << i for i in range((top - 1).bit_length() + 1)]
         from repro.models.layers import gemm_impl
+        is_packed_linear = (lambda path, w:
+                            getattr(path[-1], "key", None) == "w_packed")
         self.gemm_plans = kops.precompute_plans(
             params, prefill_ms=prefill_ms, decode_ms=(self.max_slots,),
+            # verify windows flatten to M = slots·(k+1) rows; their plans
+            # key under the "verify" phase so they never thrash the GEMV
+            # decode entries (DESIGN.md §10)
+            verify_ms=((self.max_slots * (self.spec.k + 1),)
+                       if self.spec else ()),
             # only packed linears dispatch through ternary_gemm; MoE expert
             # banks are materialized in moe_apply and need no GEMM plan
-            select=lambda path, w: getattr(path[-1], "key", None)
-            == "w_packed",
+            select=is_packed_linear,
             # warm exactly the impl linear_apply will dispatch ("ref"
             # off-TPU touches no autotune state)
             impl=gemm_impl(self.cfg))
+        if self.spec is not None:
+            from repro import spec as spec_lib
+            self.draft = spec_lib.build_draft(self.spec, self.model, params)
+            dlm = self.draft.model
+            self._draft_layers = dlm.init_cache(self.max_slots,
+                                                self.max_len)["layers"]
+            self._draft_insert = jax.jit(dlm.insert_cache,
+                                         donate_argnums=(0,))
+
+            def draft_prefill(dp, toks):
+                c, _ = dlm.prefill(dp, {"tokens": toks}, self.max_len)
+                return c["layers"]
+
+            self._draft_prefill = jax.jit(draft_prefill)
+            self._draft_round = spec_lib.make_draft_round(
+                self.draft, self.max_len, self.spec.k)
+            self._verify = spec_lib.make_verify_step(
+                self.model, self.max_len, self.spec.k,
+                paged=self.cache_mode == "paged")
+            # the draft's own packed GEMV decodes warm under "decode" too
+            self.gemm_plans.update(
+                (("draft",) + key, plan) for key, plan in
+                kops.precompute_plans(
+                    self.draft.params, decode_ms=(self.max_slots,),
+                    select=is_packed_linear,
+                    impl=gemm_impl(dlm.cfg)).items())
 
     def submit(self, prompt: np.ndarray, max_new: int) -> Request:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
-        assert prompt.size + max_new <= self.max_len, (
-            f"prompt {prompt.size} + gen {max_new} exceeds max_len "
-            f"{self.max_len}")
+        # spec mode reserves k positions of headroom: the last emitted
+        # token's verify window writes up to position prompt+gen-1+k
+        headroom = self.spec.k if self.spec is not None else 0
+        assert prompt.size + max_new + headroom <= self.max_len, (
+            f"prompt {prompt.size} + gen {max_new} + spec headroom "
+            f"{headroom} exceeds max_len {self.max_len}")
         return self.queue.submit(prompt, max_new, eos_id=self.eos_id)
 
     # ------------------------------------------------------------------
@@ -195,6 +307,14 @@ class ContinuousScheduler:
             self.pool.insert([a for _, _, a in group], req_layers)
         else:
             self.pool.insert([s for _, s, _ in group], req_layers)
+        if self.spec is not None:
+            # the draft keeps its own dense KV cache of the same stream
+            with kops.serving_phase("prefill"):
+                draft_layers = self._draft_prefill(self.draft.params,
+                                                   jnp.asarray(prompts))
+            self._draft_layers = self._draft_insert(
+                self._draft_layers, draft_layers,
+                jnp.asarray([s for _, s, _ in group]))
         toks = np.asarray(toks_dev)
         now = time.monotonic()
         for (req, slot, _), tok in zip(group, toks):
@@ -203,6 +323,7 @@ class ContinuousScheduler:
             req.first_token_t = now
             self._pos[slot] = req.prompt_len
             self._tok[slot] = tok
+            self._prev_tok[slot] = req.prompt[-1]
             self._live[slot] = req
             self._dirty = True
             if req.done:                 # max_new == 1 (or instant EOS)
@@ -256,6 +377,7 @@ class ContinuousScheduler:
         req.slot = None
         self._pos[slot] = 0
         self._tok[slot] = 0
+        self._prev_tok[slot] = 0
         self._dirty = True
         if self.cache_mode == "paged":
             self.pool.release(slot)
@@ -273,41 +395,57 @@ class ContinuousScheduler:
         self.pool.release(slot)
         self._pos[slot] = 0
         self._tok[slot] = 0
+        self._prev_tok[slot] = 0
         self._dirty = True
         req.slot = None
         req.tokens.clear()
         req.first_token_t = None
+        req.spec_proposed = 0         # replay re-counts draft stats
+        req.spec_accepted = 0
         self.queue.push_front(req)
         self.preemptions += 1
 
-    def _grow_paged(self) -> None:
-        """Before each paged decode step, make every live row's write
-        position appendable: allocate pages crossed into this step and COW
-        shared pages about to be written. When the pool is dry, preempt the
-        *youngest* live request and retry — the oldest request is never
-        preempted while others live, which guarantees drain progress."""
+    def _grow_paged(self, horizon: int = 1) -> None:
+        """Before each paged decode step, make every live row's next
+        ``horizon`` write positions appendable: allocate pages crossed into
+        this step and COW shared pages about to be written (spec mode
+        grows the whole k+1 verify window, so every speculative write
+        lands in a privately owned page). When the pool is dry, preempt
+        the *youngest* live request and retry — the oldest request is
+        never preempted while others live, which guarantees drain
+        progress."""
         for slot in list(self._live):
             if slot not in self._live:       # preempted by an earlier turn
                 continue
-            while not self.pool.ensure_append(slot, int(self._pos[slot])):
+            p = 0
+            while p < horizon:
+                if self.pool.ensure_append(slot, int(self._pos[slot]) + p):
+                    p += 1
+                    continue
                 victim = next(reversed(self._live))
                 self._preempt(victim)
                 if victim == slot:
                     break
 
     def step(self) -> None:
-        """One scheduler iteration: admit + prefill, decode, evict."""
-        self._depth_samples.append(self.queue.depth())
+        """One scheduler iteration: admit + prefill, decode (or the spec
+        draft -> verify -> rollback round), evict."""
+        self._depth_stat.push(self.queue.depth())
         self._admit()
         if self.cache_mode == "paged":
-            self._grow_paged()
+            self._grow_paged(1 + (self.spec.k if self.spec else 0))
         if not self._live:
             return
-        self._live_samples.append(len(self._live))
+        self._live_stat.push(len(self._live))
         if self._dirty:
             self._dev_pos = jnp.asarray(self._pos)
             self._dev_tok = jnp.asarray(self._tok)
+            if self.spec is not None:
+                self._dev_prev = jnp.asarray(self._prev_tok)
             self._dirty = False
+        if self.spec is not None:
+            self._step_spec()
+            return
         with kops.serving_phase("decode"):
             if self.cache_mode == "paged":
                 if self.pool.table_dirty:
@@ -331,6 +469,64 @@ class ContinuousScheduler:
             if req.done:
                 self._evict(slot)
 
+    def _step_spec(self) -> None:
+        """One speculative round (DESIGN.md §10): draft k tokens per slot
+        from the draft's own cache, verify the (slots, k+1) window in one
+        target forward, emit the accepted prefix + bonus token, roll the
+        target cache back past the rejected tail."""
+        from repro.spec import rollback as rb
+        k = self.spec.k
+        with kops.serving_phase("decode"):       # draft GEMMs are M=slots
+            self._draft_layers, drafts = self._draft_round(
+                self.draft.params, self._draft_layers, self._dev_pos,
+                self._dev_prev, self._dev_tok)
+        window = jnp.concatenate([self._dev_tok[:, None], drafts], axis=1)
+        with kops.serving_phase("verify"):
+            if self.cache_mode == "paged":
+                if self.pool.table_dirty:
+                    self._dev_table = jnp.asarray(self.pool.table)
+                    self.pool.table_dirty = False
+                self.pool.layers, greedy, n_acc, _ = self._verify(
+                    self.params, self.pool.layers, self._dev_table,
+                    self._dev_pos, window)
+            else:
+                self.pool.layers, greedy, n_acc, _ = self._verify(
+                    self.params, self.pool.layers, self._dev_pos, window)
+        self.decode_steps += 1
+        self.spec_rounds += 1
+        greedy = np.asarray(greedy)
+        n_acc = np.asarray(n_acc)
+        for slot in list(self._live):
+            req = self._live[slot]
+            na = int(n_acc[slot])
+            self.spec_slot_rounds += 1
+            self.spec_proposed += k
+            self.spec_accepted += na
+            req.spec_proposed += k
+            req.spec_accepted += na
+            old_tok = int(self._tok[slot])
+            emitted = 0
+            for j in range(na + 1):               # accepted drafts + bonus
+                req.tokens.append(int(greedy[slot, j]))
+                emitted += 1
+                if req.done:                      # budget / EOS mid-window
+                    break
+            self.spec_emitted += emitted
+            self._pos[slot] += emitted
+            self._tok[slot] = int(greedy[slot, emitted - 1])
+            self._prev_tok[slot] = (int(greedy[slot, emitted - 2])
+                                    if emitted >= 2 else old_tok)
+            self._dirty = True
+            if req.done:
+                self._evict(slot)                 # release() drops all pages
+            elif self.cache_mode == "paged":
+                self.spec_page_reclaims += rb.rollback_paged(
+                    self.pool, slot, int(self._pos[slot]))
+            else:
+                # dense rollback is length bookkeeping only — the _pos
+                # update above IS the rollback (see spec.rollback)
+                rb.rollback_dense(self.pool, slot, int(self._pos[slot]))
+
     # ------------------------------------------------------------------
     def run(self) -> Dict[str, Any]:
         """Drain the queue completely; return the metrics JSON dict."""
@@ -338,8 +534,11 @@ class ContinuousScheduler:
         t0 = time.monotonic()
         n0 = self.total_drained
         p0, d0 = self.prefill_steps, self.decode_steps
-        self._depth_samples = []
-        self._live_samples = []
+        s0 = (self.spec_rounds, self.spec_proposed, self.spec_accepted,
+              self.spec_emitted, self.spec_page_reclaims,
+              self.spec_slot_rounds)
+        self._depth_stat = _RunningStat()
+        self._live_stat = _RunningStat()
         budget = (self.queue.depth() + len(self._live)) * self.max_len + 1
         if self.cache_mode == "paged":
             # preempt-and-replay re-runs requests; each replay costs at most
@@ -357,8 +556,6 @@ class ContinuousScheduler:
         done = self._finished[n0:]
         gen = sum(len(r.tokens) for r in done)
         ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
-        depths = self._depth_samples or [0]
-        lives = self._live_samples or [0]
         cache_metrics: Dict[str, Any] = {
             "mode": self.cache_mode,
             "nbytes": int(self.pool.nbytes),
@@ -367,13 +564,41 @@ class ContinuousScheduler:
             cache_metrics.update(self.pool.stats())
             cache_metrics["preemptions"] = self.preemptions
             cache_metrics["deferrals"] = self.deferrals
+        spec_metrics = None
+        if self.spec is not None:
+            rounds = self.spec_rounds - s0[0]
+            proposed = self.spec_proposed - s0[1]
+            accepted = self.spec_accepted - s0[2]
+            emitted = self.spec_emitted - s0[3]
+            slot_rounds = self.spec_slot_rounds - s0[5]
+            spec_metrics = {
+                "draft": self.draft.name,
+                "k": self.spec.k,
+                "rounds": rounds,
+                "draft_tokens_proposed": proposed,
+                "draft_tokens_accepted": accepted,
+                "acceptance_rate": (round(accepted / proposed, 4)
+                                    if proposed else None),
+                # emitted tokens per (slot, round): 1 (nothing accepted)
+                # .. k+1 (whole window + bonus)
+                "mean_accepted_len": (round(emitted / slot_rounds, 3)
+                                      if slot_rounds else None),
+                "rollback_page_reclaims": self.spec_page_reclaims - s0[4],
+                "per_request": [
+                    {"rid": r.rid, "proposed": r.spec_proposed,
+                     "accepted": r.spec_accepted,
+                     "rate": (round(r.spec_accepted / r.spec_proposed, 4)
+                              if r.spec_proposed else None)}
+                    for r in done],
+            }
         return {
             "engine": "continuous",
             "max_slots": self.max_slots,
             "max_len": self.max_len,
             "cache": cache_metrics,
-            "concurrency": {"peak": int(np.max(lives)),
-                            "mean": round(float(np.mean(lives)), 3)},
+            "spec": spec_metrics,
+            "concurrency": {"peak": self._live_stat.peak,
+                            "mean": round(self._live_stat.mean, 3)},
             "planned_gemms": len(getattr(self, "gemm_plans", {})),
             "per_request": [r.metrics() for r in done],
             "submitted": len(done),
@@ -385,6 +610,6 @@ class ContinuousScheduler:
             "decode_steps": self.decode_steps - d0,
             "ttft_s": {"mean": float(np.mean(ttfts)) if ttfts else None,
                        "max": float(np.max(ttfts)) if ttfts else None},
-            "queue_depth": {"max": int(np.max(depths)),
-                            "mean": float(np.mean(depths))},
+            "queue_depth": {"max": self._depth_stat.peak,
+                            "mean": self._depth_stat.mean},
         }

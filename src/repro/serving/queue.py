@@ -29,6 +29,9 @@ class Request:
     submit_t: float = 0.0
     first_token_t: Optional[float] = None
     done_t: Optional[float] = None
+    # speculative decoding (DESIGN.md §10): per-request draft stats
+    spec_proposed: int = 0
+    spec_accepted: int = 0
 
     @property
     def prompt_len(self) -> int:

@@ -1,0 +1,27 @@
+"""Self-speculative decoding subsystem (DESIGN.md §10).
+
+Decode is bandwidth-bound GEMV; the paper's sparse ternary kernels peak on
+small-M GEMM. Speculative decoding converts one into the other: a cheap
+*draft* proposes ``k`` tokens per slot (``spec.draft`` — re-sparsified
+ternary weights, a depth-truncated prefix of the same stack, or an external
+model), the target verifies the whole ``(slots, k+1)`` window in a single
+forward (``spec.verify`` — bitwise-equal to sequential decode, so greedy
+longest-prefix acceptance keeps serving **token-exact by construction**),
+and ``spec.rollback`` restores cache invariants for the rejected tail
+(length bookkeeping on dense slot pools; O(1) page reclamation on the
+paged pool). The engine runs draft -> verify -> rollback inside the
+continuous-batching loop: ``ContinuousScheduler(cfg, ...,
+spec=SpecConfig(draft="resparsify", k=4))``.
+"""
+from repro.spec.draft import (Draft, DraftModel, SpecConfig, build_draft,
+                              external, layer_skip, make_draft_round,
+                              resparsify)
+from repro.spec.rollback import rollback_dense, rollback_paged
+from repro.spec.verify import longest_prefix_match, make_verify_step
+
+__all__ = [
+    "SpecConfig", "DraftModel", "Draft", "build_draft",
+    "resparsify", "layer_skip", "external",
+    "make_draft_round", "make_verify_step", "longest_prefix_match",
+    "rollback_dense", "rollback_paged",
+]

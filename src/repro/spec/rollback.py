@@ -1,0 +1,44 @@
+"""Cache rollback for rejected speculative tokens (DESIGN.md §10).
+
+The verify step writes K/V for the whole ``k+1`` window before acceptance
+is known; a round that accepts ``n_acc < k`` drafts leaves the rejected
+tokens' K/V at positions ``pos + n_acc + 1 .. pos + k``. Rollback restores
+the invariant that committed cache state is what sequential decode would
+have produced:
+
+* **dense slot pools** roll back by *length bookkeeping alone*: the
+  engine's per-slot position vector is the single source of valid length,
+  every attention mask derives from it (``k_pos <= q_pos`` / valid-length
+  masks), and the next round's window rewrites the rejected positions
+  before anything can attend to them. Nothing device-side to undo —
+  ``rollback_dense`` exists to make that invariant explicit (and to keep
+  the call-site symmetric with the paged path).
+
+* **paged pools** additionally own *pages*: a rejected window tail may
+  have grown the slot's block table into pages that now hold only garbage.
+  ``rollback_paged`` truncates the block table to the committed length via
+  ``PagePool.truncate`` — tail pages drop to refcount 0 and return to the
+  free list O(1). Refcount-correctness under prefix sharing/COW is
+  inherited from the pool: truncation only ever touches decode-grown tail
+  pages (committed length >= prompt length, so registered prompt pages are
+  never in the dropped range), and a page another slot still references is
+  impossible in the tail (the engine's ``ensure_append`` horizon made
+  every window page privately owned before the speculative writes).
+"""
+from __future__ import annotations
+
+__all__ = ["rollback_dense", "rollback_paged"]
+
+
+def rollback_dense(pool, slot: int, n_tokens: int) -> int:
+    """Dense rollback is pure bookkeeping (see module docstring): the
+    engine's position vector already reflects ``n_tokens``; no pages exist
+    to reclaim. Returns 0 for metric symmetry with ``rollback_paged``."""
+    del pool, slot, n_tokens
+    return 0
+
+
+def rollback_paged(pool, slot: int, n_tokens: int) -> int:
+    """Truncate ``slot``'s block table to ``n_tokens`` committed tokens and
+    return the number of tail pages reclaimed to the free list."""
+    return pool.truncate(slot, n_tokens)

@@ -13,7 +13,7 @@ import pytest
 GOLDEN = {
     "repro": {
         "configs", "core", "checkpoint", "data", "distributed", "kernels",
-        "launch", "models", "optim", "paging", "serving",
+        "launch", "models", "optim", "paging", "serving", "spec",
         "TernaryWeight", "Dense2Bit", "Tiled", "Bitplane", "Base3", "pack",
         "ternary_gemm", "ternary_gemm_plan",
     },
@@ -29,6 +29,7 @@ GOLDEN = {
     "repro.kernels": {
         "ternary_gemm", "ternary_gemm_plan", "GemmPlan",
         "register_kernel", "kernel_registry", "serving_phase",
+        "SERVING_PHASES",
         "pack_weights", "pack_weights_tiled",
         "ternary_gemm_pallas", "ternary_gemm_skip_pallas",
         "ternary_gemm_bitplane", "K_PER_WORD", "flash_attention_pallas",
@@ -43,6 +44,12 @@ GOLDEN = {
         "PagePool", "Admission", "PrefixCache", "Int8Pages",
         "page_keys", "tree_nbytes",
     },
+    "repro.spec": {
+        "SpecConfig", "DraftModel", "Draft", "build_draft",
+        "resparsify", "layer_skip", "external",
+        "make_draft_round", "make_verify_step", "longest_prefix_match",
+        "rollback_dense", "rollback_paged",
+    },
     "repro.checkpoint": {"save", "restore", "latest_step"},
 }
 
@@ -56,6 +63,9 @@ GOLDEN_KERNELS = {
     ("base3", "ref"),
 }
 GOLDEN_PAGED_ATTN = {"jax", "pallas"}
+# Autotune phase keys the serving engine traces under (prefill GEMM /
+# decode GEMV / speculative verify small-GEMM, DESIGN.md §10).
+GOLDEN_PHASES = ("prefill", "decode", "verify")
 
 
 @pytest.mark.parametrize("module", sorted(GOLDEN))
@@ -82,6 +92,8 @@ def test_format_and_kernel_registries_locked():
         "a registered kernel lowering disappeared")
     assert GOLDEN_PAGED_ATTN <= set(ops.paged_attention_registry()), (
         "a registered paged-attention lowering disappeared")
+    assert ops.SERVING_PHASES == GOLDEN_PHASES, (
+        "the serving-phase autotune keys drifted from the golden tuple")
 
 
 def test_legacy_shim_is_contained():

@@ -1,0 +1,358 @@
+"""Speculative-decoding subsystem tests (DESIGN.md §10).
+
+The exactness chain is pinned bottom-up: (1) a multi-token verify window
+through ``LM.decode_step`` is *bitwise* equal to the same tokens fed
+sequentially (dense and paged caches, GQA/window/layout variants), (2)
+greedy longest-prefix acceptance therefore emits a prefix of the
+sequential stream, so (3) the spec engine's outputs are token-exact vs the
+non-spec engine across k, cache modes, mixed-length batches and mid-decode
+preemption. Paged rollback is additionally pinned leak-free (refcounts +
+free list) under prefix sharing and COW.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import LM, layers as L
+from repro.serving import ContinuousScheduler
+from repro.spec import (SpecConfig, build_draft, layer_skip,
+                        longest_prefix_match, resparsify)
+
+
+def _cfg(**overrides):
+    overrides.setdefault("num_layers", 2)
+    return get_config("ternary-paper", reduced=True, **overrides)
+
+
+def _workload(cfg, n, prompt_len=12, seed=0, lens=(2, 9)):
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           size=(n, prompt_len)).astype(np.int32)
+    gens = [int(g) for g in rng.integers(lens[0], lens[1], size=n)]
+    return prompts, gens
+
+
+# ---------------------------------------------------------------------------
+# (1) multi-token verify windows are bitwise-equal to sequential decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("overrides", [
+    {},                                   # GQA (reduced: 4 heads, 2 kv)
+    {"num_kv_heads": 4},                  # MHA
+    {"sliding_window": 8},                # rolling SWA -> unrolled path
+    {"cache_layout": "opt"},              # delta-commit -> unrolled path
+    {"decode_cache_shard": "flat"},       # flat (B,S,kv*hd) cache storage
+], ids=["gqa", "mha", "window", "opt", "flat"])
+def test_verify_window_bitwise_dense(overrides):
+    cfg = _cfg(**overrides)
+    m = LM(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = (np.arange(24, dtype=np.int32).reshape(2, 12) * 7 + 3) \
+        % cfg.vocab_size
+    cache, logits = jax.jit(lambda p, b: m.prefill(p, b, 24))(
+        params, {"tokens": toks})
+    rng = np.random.default_rng(1)
+    win = np.concatenate(
+        [np.asarray(np.argmax(logits[:, -1:], -1), np.int32),
+         rng.integers(0, cfg.vocab_size, size=(2, 3)).astype(np.int32)],
+        axis=1)                                          # (B, 4) window
+    pos = np.full((2,), 12, np.int32)
+
+    step = jax.jit(m.decode_step)
+    c_seq = dict(cache, pos=jnp.asarray(pos))
+    lgs = []
+    for j in range(win.shape[1]):
+        lg, c_seq = step(params, c_seq, jnp.asarray(win[:, j:j + 1]))
+        lgs.append(lg)
+    lg_seq = jnp.concatenate(lgs, axis=1)
+
+    c_win = dict(cache, pos=jnp.asarray(pos))
+    lg_win, c_win = step(params, c_win, jnp.asarray(win))
+
+    np.testing.assert_array_equal(np.asarray(lg_seq), np.asarray(lg_win))
+    for a, b in zip(jax.tree_util.tree_leaves(c_seq["layers"]),
+                    jax.tree_util.tree_leaves(c_win["layers"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(np.asarray(c_win["pos"])[0]) == 12 + win.shape[1]
+
+
+@pytest.mark.parametrize("kv_dtype", [None, "int8"], ids=["bf16", "int8"])
+def test_verify_window_bitwise_paged(kv_dtype):
+    from repro.paging import PagePool
+    cfg = _cfg()
+    m = LM(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    ps, n_win = 4, 3
+    pool = PagePool(m, max_slots=2, max_len=24, page_size=ps,
+                    kv_dtype=kv_dtype)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, size=(2, 12)).astype(np.int32)
+    adms = [pool.admit(p) for p in prompts]
+    cache, logits = jax.jit(lambda p, b: m.prefill(p, b, 12))(
+        params, {"tokens": prompts})
+    pool.insert(adms, cache["layers"])
+    win = np.concatenate(
+        [np.asarray(np.argmax(logits[:, -1:], -1), np.int32),
+         rng.integers(0, cfg.vocab_size, size=(2, n_win - 1)
+                      ).astype(np.int32)], axis=1)
+    for slot in (0, 1):                      # pre-grow the window's pages
+        for p in range(n_win):
+            assert pool.ensure_append(slot, 12 + p)
+    table = jnp.asarray(pool.table)
+    pos = jnp.full((2,), 12, jnp.int32)
+    step = jax.jit(m.decode_step)
+
+    c = {"layers": pool.layers, "pos": pos, "block_table": table}
+    lgs = []
+    for j in range(n_win):
+        lg, c = step(params, c, jnp.asarray(win[:, j:j + 1]))
+        lgs.append(lg)
+    lg_seq = jnp.concatenate(lgs, axis=1)
+
+    c2 = {"layers": pool.layers, "pos": pos, "block_table": table}
+    lg_win, c2 = step(params, c2, jnp.asarray(win))
+
+    np.testing.assert_array_equal(np.asarray(lg_seq), np.asarray(lg_win))
+    for a, b in zip(jax.tree_util.tree_leaves(c["layers"]),
+                    jax.tree_util.tree_leaves(c2["layers"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# (2) acceptance + rollback primitives
+# ---------------------------------------------------------------------------
+
+def test_longest_prefix_match():
+    window = jnp.asarray([[5, 1, 2, 3],      # drafts d=[1,2,3]
+                          [5, 1, 9, 3],
+                          [5, 9, 9, 9],
+                          [5, 1, 2, 3]])
+    greedy = jnp.asarray([[1, 2, 3, 4],      # accepts all 3, bonus g3=4
+                          [1, 7, 8, 9],      # d2=9 != g1=7 -> n=1, bonus g1
+                          [7, 8, 9, 1],      # d1 mismatch -> n=0, bonus g0
+                          [1, 2, 9, 6]])     # d3=3 != g2=9 -> n=2, bonus g2
+    n_acc, bonus = jax.jit(longest_prefix_match)(window, greedy)
+    np.testing.assert_array_equal(np.asarray(n_acc), [3, 1, 0, 2])
+    np.testing.assert_array_equal(np.asarray(bonus), [4, 7, 7, 9])
+
+
+def test_paged_rollback_leak_free_under_sharing():
+    """Grow a slot through COW + fresh pages, truncate back: every dropped
+    page returns to the free list, shared/prefix pages keep their
+    refcounts, and full release restores the pool exactly."""
+    from repro.paging import PagePool
+    cfg = _cfg()
+    m = LM(cfg)
+    ps = 4
+    pool = PagePool(m, max_slots=3, max_len=32, page_size=ps, n_pages=24)
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab_size, size=10).astype(np.int32)
+    a = pool.admit(prefix)
+    b = pool.admit(prefix)                   # identical prompt: full +
+    assert b.n_shared == 3                   # partial-tail pages all shared
+    free0 = len(pool._free_pages)
+    used0 = pool.pages_used
+
+    # slot b's first append lands in the shared tail page -> COW, then a
+    # k=6 verify window grows fresh pages beyond it
+    for p in range(6):
+        assert pool.ensure_append(b.slot, 10 + p)
+    assert pool.cow_count == 1
+    grown = len(pool.slot_pages[b.slot])
+    consumed = free0 - len(pool._free_pages)     # COW copy + fresh tails
+    assert consumed == 1 + (grown - 3)
+    # roll back to 12 committed tokens: ceil(12/4)=3 pages kept
+    reclaimed = pool.truncate(b.slot, 12)
+    assert reclaimed == grown - 3
+    assert len(pool.slot_pages[b.slot]) == 3
+    assert len(pool._free_pages) == free0 - consumed + reclaimed
+    assert (pool.table[b.slot, 3:] == 0).all()
+    # rollback never frees a page another slot references
+    for pid in pool.slot_pages[a.slot]:
+        assert pool._refcount[pid] >= 1
+    # truncate to current length is a no-op
+    assert pool.truncate(b.slot, 12) == 0
+    pool.release(a.slot)
+    pool.release(b.slot)
+    # registered prefix pages stay pinned (reclaimable), nothing leaks:
+    # re-admitting the same prompt reuses them without allocation
+    c = pool.admit(prefix)
+    assert c.n_shared == 3
+    pool.release(c.slot)
+    assert pool.pages_used <= used0
+
+
+# ---------------------------------------------------------------------------
+# (3) engine: token-exact vs sequential, both cache modes, preemption
+# ---------------------------------------------------------------------------
+
+def _run_engine(cfg, params, prompts, gens, max_len, **kw):
+    eng = ContinuousScheduler(cfg, max_slots=2, max_len=max_len, **kw)
+    eng.load(params)
+    reqs = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+    metrics = eng.run()
+    return [np.asarray(r.tokens, np.int32) for r in reqs], metrics, eng
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_spec_engine_token_exact_dense(k):
+    cfg = _cfg(num_layers=4)
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    prompts, gens = _workload(cfg, 6, lens=(1, 10))
+    base, _, _ = _run_engine(cfg, params, prompts, gens, 40)
+    outs, m, _ = _run_engine(cfg, params, prompts, gens, 40,
+                             spec=SpecConfig(draft="layer_skip", k=k,
+                                             draft_layers=2))
+    for i, (a, b) in enumerate(zip(base, outs)):
+        np.testing.assert_array_equal(a, b, err_msg=f"request {i}, k={k}")
+    s = m["spec"]
+    assert s["rounds"] > 0 and s["draft_tokens_proposed"] % k == 0
+    assert s["draft_tokens_accepted"] <= s["draft_tokens_proposed"]
+    assert 1.0 <= s["mean_accepted_len"] <= k + 1
+    json.dumps(m)                            # spec block JSON-serializable
+
+
+@pytest.mark.parametrize("kv_dtype", [None, "int8"], ids=["bf16", "int8"])
+def test_spec_engine_token_exact_paged(kv_dtype):
+    cfg = _cfg(num_layers=2)
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    prompts, gens = _workload(cfg, 6, lens=(1, 10))
+    base, _, _ = _run_engine(cfg, params, prompts, gens, 40,
+                             cache="paged", page_size=4, kv_dtype=kv_dtype)
+    outs, m, _ = _run_engine(cfg, params, prompts, gens, 40,
+                             cache="paged", page_size=4, kv_dtype=kv_dtype,
+                             spec=SpecConfig(draft="layer_skip", k=2,
+                                             draft_layers=1))
+    for i, (a, b) in enumerate(zip(base, outs)):
+        np.testing.assert_array_equal(a, b, err_msg=f"request {i}")
+    assert m["spec"]["rollback_page_reclaims"] >= 0
+
+
+def test_spec_engine_token_exact_under_preemption():
+    """A page pool too small for both live requests forces mid-decode
+    preempt-and-replay; spec mode must stay token-exact through it."""
+    cfg = _cfg(num_layers=2)
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    prompts, gens = _workload(cfg, 4, prompt_len=8, lens=(8, 14))
+    kw = dict(cache="paged", page_size=4, n_pages=9, prefix_cache=False)
+    base, _, _ = _run_engine(cfg, params, prompts, gens, 28, **kw)
+    outs, ms, _ = _run_engine(cfg, params, prompts, gens, 28,
+                              spec=SpecConfig(draft="layer_skip", k=2,
+                                              draft_layers=1), **kw)
+    assert ms["cache"]["preemptions"] + ms["cache"]["deferrals"] > 0, \
+        "workload did not stress the pool; tighten n_pages"
+    for i, (a, b) in enumerate(zip(base, outs)):
+        np.testing.assert_array_equal(a, b, err_msg=f"request {i}")
+
+
+def test_spec_engine_rejects_unsupported():
+    with pytest.raises(ValueError, match="attention-only"):
+        ContinuousScheduler(get_config("mamba2-130m", reduced=True),
+                            max_slots=1, max_len=16,
+                            spec=SpecConfig(k=2))
+    with pytest.raises(ValueError, match="sliding-window"):
+        ContinuousScheduler(_cfg(sliding_window=8), max_slots=1, max_len=16,
+                            spec=SpecConfig(k=2))
+    with pytest.raises(ValueError, match="bshd"):
+        ContinuousScheduler(_cfg(cache_layout="opt"), max_slots=1,
+                            max_len=16, spec=SpecConfig(k=2))
+    eng = ContinuousScheduler(_cfg(), max_slots=1, max_len=16,
+                              spec=SpecConfig(k=4))
+    with pytest.raises(AssertionError):      # k headroom enforced
+        eng.submit(np.zeros(8, np.int32), 8)
+
+
+# ---------------------------------------------------------------------------
+# (4) drafts
+# ---------------------------------------------------------------------------
+
+def test_acceptance_monotone_in_draft_sparsity():
+    """As the resparsify draft's nnz fraction approaches the target's own
+    occupancy its proposals converge to the target's stream, so the
+    aggregate acceptance rate is (weakly) monotone in sparsity."""
+    cfg = _cfg(ternary_min_dim=64)
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    packed = L.pack_params(params, cfg)
+    pcfg = dataclasses.replace(cfg, quantization="ternary_packed")
+    prompts, gens = _workload(pcfg, 4, lens=(4, 8))
+    rates = []
+    for s in (0.1, 0.5, 1.0):
+        _, m, _ = _run_engine(pcfg, packed, prompts, gens, 32,
+                              spec=SpecConfig(draft="resparsify", k=2,
+                                              draft_sparsity=s))
+        rates.append(m["spec"]["acceptance_rate"])
+    assert rates == sorted(rates), rates
+    assert rates[-1] > 0.9, (
+        "a draft re-packed at the target's own support should accept "
+        f"nearly everything, got {rates[-1]}")
+
+
+def test_draft_builders():
+    cfg = _cfg(num_layers=4)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    d = layer_skip(model, params, 2)
+    assert d.model.cfg.num_layers == 2
+    # sliced stacks share storage with the target (a view, not a copy)
+    assert d.params["block0"]["mixer"]["q"]["w"].shape[0] == 2
+    assert d.params["embed"]["table"] is params["embed"]["table"]
+    with pytest.raises(ValueError):
+        layer_skip(model, params, 4)         # must be a strict prefix
+    with pytest.raises(ValueError, match="TernaryWeight"):
+        resparsify(model, params, 0.25)      # unpacked params
+    d2 = build_draft(SpecConfig(draft="layer_skip", k=2), model, params)
+    assert d2.model.cfg.num_layers == 2      # default: half the stack
+    with pytest.raises(ValueError, match="draft_cfg"):
+        build_draft(SpecConfig(draft="external", k=2), model, params)
+    with pytest.raises(ValueError, match="unknown draft"):
+        build_draft(SpecConfig(draft="nope", k=2), model, params)
+
+
+def test_resparsify_hits_requested_sparsity():
+    cfg = _cfg(ternary_min_dim=64)
+    model = LM(cfg)
+    packed = L.pack_params(model.init(jax.random.PRNGKey(0)), cfg)
+    d = resparsify(model, packed, 0.25)
+    from repro.core import weights
+    containers = [w for w in jax.tree_util.tree_leaves(
+        d.params, is_leaf=lambda v: isinstance(v, weights.TernaryWeight))
+        if isinstance(w, weights.TernaryWeight)]
+    assert containers
+    for w in containers:
+        assert w.occupancy() <= 0.27, (w.shape, w.occupancy())
+
+
+# ---------------------------------------------------------------------------
+# (5) engine bookkeeping satellites
+# ---------------------------------------------------------------------------
+
+def test_running_stat_bounded_and_exact():
+    from repro.serving.engine import _RunningStat
+    st = _RunningStat(cap=16)
+    vals = [int(v) for v in np.random.default_rng(0).integers(0, 99, 5000)]
+    for v in vals:
+        st.push(v)
+    assert len(st.ring) <= 16                # bounded, unlike the old list
+    assert st.peak == max(vals)              # exact over all samples
+    assert st.mean == pytest.approx(float(np.mean(vals)))
+    assert st.n == len(vals)
+
+
+def test_serve_cli_spec(capsys):
+    from repro.launch import serve
+    metrics = serve.main(["--arch", "ternary-paper", "--reduced",
+                          "--requests", "4", "--slots", "2",
+                          "--prompt-len", "8", "--gen-lens", "2,5",
+                          "--spec", "layer_skip", "--spec-k", "2"])
+    out = json.loads(capsys.readouterr().out.strip().splitlines()[-1])
+    assert out["submitted"] == out["drained"] == 4
+    assert out["spec"]["k"] == 2
+    assert out["spec"]["draft"].startswith("layer_skip")
+    assert metrics["spec"]["draft_tokens_proposed"] > 0
+    per = metrics["spec"]["per_request"]
+    assert len(per) == 4 and all(r["proposed"] >= 0 for r in per)
