@@ -1,0 +1,110 @@
+"""Chaos soak of the serving engine's fault tolerance (DESIGN.md §11).
+
+The same mixed-length paged workload runs twice: once fault-free (the
+reference), once under a seeded fault storm — NaN-corrupted logits, forced
+page-pool OOM bursts, slow steps — plus one doomed request carrying an
+already-expired deadline. The soak pins the failure-model contract:
+
+* **termination** — every submitted request reaches a terminal state
+  (``done``, or ``failed`` with a reason code); the doomed request fails
+  with reason ``"deadline"`` and nothing wedges.
+* **isolation + exactness** — every surviving request's tokens are exactly
+  the fault-free run's (quarantine replays are token-exact under greedy
+  decode; faults in one slot never perturb another slot's stream).
+* **no leaks** — after the drain the page pool is fully reclaimed (all
+  slots free, refcounts zero).
+* **bounded degradation** — chaos throughput / clean throughput is the
+  gated ``ratio=`` entry: retries and injected sleeps cost wall time, but
+  the engine must keep most of its throughput rather than collapsing.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import record
+from repro.configs import get_config
+from repro.launch.serve import build_workload, run_continuous
+from repro.serving import ContinuousScheduler, FaultConfig, ResilienceConfig
+
+
+def _engine(cfg, slots, max_len, page_size, n_pages, faults=None):
+    return ContinuousScheduler(
+        cfg, max_slots=slots, max_len=max_len, cache="paged",
+        page_size=page_size, n_pages=n_pages, paged_attn="jax",
+        faults=faults,
+        resilience=ResilienceConfig(max_retries=3))
+
+
+def chaos_soak(quick: bool = False):
+    cfg = get_config("ternary-paper", reduced=True, num_layers=2)
+    requests, slots = (12, 4) if quick else (24, 6)
+    prompt_len = 16
+    gen_lens = (4, 24) if quick else (8, 48)
+    page_size = 8
+    max_len = prompt_len + max(gen_lens) + 1
+    n_pages = slots * (-(-max_len // page_size)) + 8
+    prompts, gens, _ = build_workload(cfg, requests, prompt_len, gen_lens)
+
+    clean = _engine(cfg, slots, max_len, page_size, n_pages)
+    params = clean.model.init(jax.random.PRNGKey(0))
+    clean.load(params)
+    run_continuous(clean, prompts, gens)          # compile warmup
+    outs_clean, m_clean = run_continuous(clean, prompts, gens)
+
+    # seeded storm, rates only: the injector's rng stream is seeded and the
+    # warmup pass replays the identical workload, so the timed pass's fault
+    # schedule is fully deterministic — the quarantine/injection asserts
+    # below are repeatable, not probabilistic. (Step-pinned *_at lists
+    # can't be used here: the warmup pass would consume those steps.)
+    storm = FaultConfig(seed=7, nan_rate=0.05, oom_rate=0.05, oom_burst=2,
+                        slow_rate=0.02, slow_s=0.002)
+    chaos = _engine(cfg, slots, max_len, page_size, n_pages, faults=storm)
+    chaos.load(params)
+    run_continuous(chaos, prompts, gens)          # compile warmup
+    reqs = [chaos.submit(p, g) for p, g in zip(prompts, gens)]
+    doomed = chaos.submit(prompts[0], int(gens[0]), deadline_s=0.0)
+    m_chaos = chaos.run()
+
+    # termination: every request terminal, the doomed one by deadline
+    for r in reqs + [doomed]:
+        assert r.terminal, f"request {r.rid} not terminal: {r.state}"
+    assert doomed.state == "failed" and doomed.fail_reason == "deadline", (
+        doomed.state, doomed.fail_reason)
+
+    # isolation + exactness: survivors match the fault-free run token for
+    # token (failed requests are excluded — they have no output contract)
+    survivors = [r for r in reqs if r.state == "done"]
+    exact = all(list(r.tokens) == list(o)
+                for r, o in zip(reqs, outs_clean) if r.state == "done")
+    assert exact, "a surviving request diverged from the fault-free run"
+
+    # no leaks: the pool drained refcount-clean
+    assert chaos.pool.all_reclaimed, "page pool leaked after chaos drain"
+
+    fl = m_chaos["faults"]
+    assert sum(fl["injected"].values()) > 0, "storm injected nothing"
+    assert fl["quarantines"] >= 1, "nan_at schedule never quarantined"
+
+    ratio = m_chaos["tok_per_s"] / m_clean["tok_per_s"]
+    record("serving/chaos", m_chaos["wall_s"],
+           f"tok_per_s={m_chaos['tok_per_s']},"
+           f"injected={sum(fl['injected'].values())},"
+           f"quarantines={fl['quarantines']},retries={fl['retries']},"
+           f"failed={fl['failed_requests']},"
+           f"survivors={len(survivors)}/{requests}")
+    record("serving/clean_for_chaos", m_clean["wall_s"],
+           f"tok_per_s={m_clean['tok_per_s']}")
+    # the gated ratio is capped at 0.95: chaos wall time swings with how
+    # many retries the storm lands, and recording a lucky near-1.0 run
+    # would push the CI floor (baseline x 0.75) above what a normal run
+    # sustains. The floor asserts the engine keeps >= 40% throughput
+    # under the storm — degradation stays bounded, not graceful-in-name.
+    record("serving/chaos_survival", 0.0,
+           f"ratio={min(ratio, 0.95):.2f},measured={ratio:.2f},"
+           f"token_exact={exact}")
+    assert ratio >= 0.4, (
+        f"throughput collapsed under chaos: {m_chaos['tok_per_s']} vs "
+        f"{m_clean['tok_per_s']} tok/s (ratio {ratio:.2f})")
+
+
+ALL = [chaos_soak]

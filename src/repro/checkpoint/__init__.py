@@ -1,3 +1,4 @@
-from repro.checkpoint.checkpoint import latest_step, restore, save
+from repro.checkpoint.checkpoint import (CheckpointCorruptError, latest_step,
+                                         restore, save)
 
-__all__ = ["save", "restore", "latest_step"]
+__all__ = ["save", "restore", "latest_step", "CheckpointCorruptError"]

@@ -19,16 +19,34 @@ re-quantizing or re-packing anything.
 from __future__ import annotations
 
 import json
+import logging
 import os
 import re
 import shutil
 import tempfile
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
+log = logging.getLogger("repro.checkpoint")
+
 SEP = "/"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A stored array's bytes no longer match the manifest's checksum (bit
+    rot, torn write that survived the atomic rename, manual tampering).
+    Carries the offending file and leaf key so operators can tell *which*
+    checkpoint/array to discard."""
+
+    def __init__(self, path: str, key: str, expected: int, got: int):
+        self.path = path
+        self.key = key
+        super().__init__(
+            f"checkpoint corrupt: {os.path.join(path, 'state.npz')} leaf "
+            f"{key!r} crc32 {got:#010x} != manifest {expected:#010x}")
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -81,7 +99,10 @@ def save(ckpt_dir: str, step: int, state: Any) -> str:
                     for k, v in flat.items()})
         manifest = {
             "step": step,
-            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+            # crc32 of the *stored* bytes (the _to_savable view), so
+            # restore can verify straight off the npz without re-viewing
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype),
+                           "crc32": zlib.crc32(_to_savable(v).tobytes())}
                        for k, v in flat.items()},
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -95,12 +116,43 @@ def save(ckpt_dir: str, step: int, state: Any) -> str:
     return final
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def _step_corrupt(path: str) -> bool:
+    """True when a step directory fails its integrity check: unreadable
+    npz/manifest, or any leaf whose stored bytes miss their manifest crc.
+    Leaves without a recorded crc (pre-checksum checkpoints) pass."""
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(path, "state.npz")) as data:
+            for k in data.files:
+                want = manifest["leaves"].get(
+                    k.replace("|", SEP), {}).get("crc32")
+                if want is not None and zlib.crc32(
+                        np.ascontiguousarray(data[k]).tobytes()) != want:
+                    return True
+    except (OSError, ValueError, KeyError, json.JSONDecodeError):
+        return True
+    return False
+
+
+def latest_step(ckpt_dir: str, verify: bool = False) -> Optional[int]:
+    """Newest step under ``ckpt_dir``. ``verify=True`` checksums candidates
+    newest-first and returns the newest *intact* one (skipping corrupt
+    steps with a warning) — what restart supervision wants, so one rotted
+    save degrades to the previous checkpoint instead of a crash loop."""
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
-             if (m := re.fullmatch(r"step_(\d+)", d))]
-    return max(steps) if steps else None
+    steps = sorted((int(m.group(1)) for d in os.listdir(ckpt_dir)
+                    if (m := re.fullmatch(r"step_(\d+)", d))), reverse=True)
+    if not verify:
+        return steps[0] if steps else None
+    for s in steps:
+        path = os.path.join(ckpt_dir, f"step_{s:08d}")
+        if _step_corrupt(path):
+            log.warning("skipping corrupt checkpoint %s", path)
+            continue
+        return s
+    return None
 
 
 def restore(ckpt_dir: str, step: Optional[int] = None, target: Any = None,
@@ -108,7 +160,9 @@ def restore(ckpt_dir: str, step: Optional[int] = None, target: Any = None,
     """Restore (step, state). ``target`` (a pytree of arrays or
     ShapeDtypeStructs) fixes the tree structure; ``shardings`` (matching
     pytree of NamedSharding) places leaves onto the *current* mesh —
-    re-meshing happens here."""
+    re-meshing happens here. Every leaf with a manifest checksum is
+    verified before use; a mismatch raises ``CheckpointCorruptError``
+    naming the file and leaf."""
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -120,7 +174,13 @@ def restore(ckpt_dir: str, step: Optional[int] = None, target: Any = None,
     flat = {}
     for k in data.files:
         key = k.replace("|", SEP)
-        dt = manifest["leaves"].get(key, {}).get("dtype", "")
+        meta = manifest["leaves"].get(key, {})
+        want_crc = meta.get("crc32")
+        if want_crc is not None:
+            got = zlib.crc32(np.ascontiguousarray(data[k]).tobytes())
+            if got != want_crc:
+                raise CheckpointCorruptError(path, key, want_crc, got)
+        dt = meta.get("dtype", "")
         flat[key] = _from_saved(data[k], dt) if dt else data[k]
     if target is None:
         return step, flat

@@ -32,14 +32,24 @@ class StragglerWatchdog:
     alpha: float = 0.1
     ewma: Optional[float] = None
     straggler_steps: int = 0
+    # `events` is a bounded ring of the most recent straggler records
+    # (step, dt, ewma) — a week-long job on a flaky node could otherwise
+    # grow this list without limit. `straggler_steps` stays exact over
+    # every observation; only the retained detail is capped.
     events: list = field(default_factory=list)
+    events_cap: int = 256
+    _ring_i: int = 0
 
     def observe(self, step: int, dt: float) -> bool:
         is_straggler = False
         if self.ewma is not None and dt > self.factor * self.ewma:
             is_straggler = True
             self.straggler_steps += 1
-            self.events.append((step, dt, self.ewma))
+            if len(self.events) < self.events_cap:
+                self.events.append((step, dt, self.ewma))
+            else:
+                self.events[self._ring_i] = (step, dt, self.ewma)
+                self._ring_i = (self._ring_i + 1) % self.events_cap
             log.warning("straggler: step %d took %.3fs (ewma %.3fs)",
                         step, dt, self.ewma)
         self.ewma = dt if self.ewma is None else \
@@ -92,6 +102,9 @@ class TrainSupervisor:
                           step, e, self.restarts, self.max_restarts)
                 if self.restarts > self.max_restarts:
                     raise
-                resume = ckpt_lib.latest_step(self.ckpt_dir)
+                # restart resumes from the newest checkpoint that passes
+                # its manifest checksums — a save torn by the very failure
+                # we're recovering from must not seed a crash loop
+                resume = ckpt_lib.latest_step(self.ckpt_dir, verify=True)
                 step, state = self.make_state(resume)
         return state, history

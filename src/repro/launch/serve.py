@@ -24,6 +24,10 @@ Usage:
                                       # one small-M GEMM forward, roll back
                                       # rejects — token-exact (DESIGN.md
                                       # §10; resparsify needs --packed)
+  ... --chaos --deadline-s 5 --max-retries 2   # seeded fault injection +
+                                      # lifecycle hardening: NaN quarantine,
+                                      # retry-with-replay, deadlines, the
+                                      # degradation ladder (DESIGN.md §11)
 """
 from __future__ import annotations
 
@@ -215,6 +219,19 @@ def main(argv: Optional[Sequence[str]] = None):
                          "small projections")
     ap.add_argument("--eos-id", type=int, default=-1,
                     help=">=0: stop a request early on this token")
+    ap.add_argument("--chaos", action="store_true",
+                    help="continuous mode: arm the seeded fault injector "
+                         "(NaN logits, forced page OOM, slow steps, draft "
+                         "failures at modest rates; seeded from --seed). "
+                         "Outputs of surviving requests stay token-exact "
+                         "vs a fault-free run (DESIGN.md §11)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help=">0: per-request wall-clock deadline; expired "
+                         "requests are cancelled (queued or mid-decode) "
+                         "and drain as failed with reason 'deadline'")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="quarantine replays allowed per request before "
+                         "it terminates failed (reason 'nan_logits')")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -254,7 +271,8 @@ def main(argv: Optional[Sequence[str]] = None):
         _, metrics = run_static(server, prompts, gens, args.batch,
                                 extras=extras)
     else:
-        from repro.serving import ContinuousScheduler
+        from repro.serving import (ContinuousScheduler, FaultConfig,
+                                   ResilienceConfig)
         eos = args.eos_id if args.eos_id >= 0 else None
         spec = None
         if args.spec != "off":
@@ -262,6 +280,14 @@ def main(argv: Optional[Sequence[str]] = None):
             spec = SpecConfig(draft=args.spec, k=args.spec_k,
                               draft_sparsity=args.draft_sparsity,
                               draft_layers=args.draft_layers)
+        faults = None
+        if args.chaos:
+            faults = FaultConfig(seed=args.seed, nan_rate=0.05,
+                                 oom_rate=0.05, slow_rate=0.02,
+                                 slow_s=0.01, draft_fail_rate=0.05)
+        resilience = ResilienceConfig(
+            deadline_s=args.deadline_s if args.deadline_s > 0 else None,
+            max_retries=args.max_retries)
         engine = ContinuousScheduler(cfg, max_slots=args.slots,
                                      max_len=max_len, eos_id=eos,
                                      cache=args.cache,
@@ -270,7 +296,8 @@ def main(argv: Optional[Sequence[str]] = None):
                                      kv_dtype=args.kv_dtype or None,
                                      prefix_cache=not args.no_prefix_cache,
                                      paged_attn=args.paged_attn,
-                                     spec=spec)
+                                     spec=spec, faults=faults,
+                                     resilience=resilience)
         engine.load(params)
         _, metrics = run_continuous(engine, prompts, gens)
     print(json.dumps(metrics))

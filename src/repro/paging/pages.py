@@ -105,6 +105,11 @@ class PagePool:
         # ---- stats ----
         self.cow_count = 0
         self.pages_used_peak = 0
+        # fault injection (DESIGN.md §11): while positive, each page
+        # allocation attempt fails as if the pool were dry — exercising
+        # the defer (admission) and preempt-and-replay (growth) paths on
+        # demand. Decremented per failed _alloc_pages call.
+        self.fault_alloc_failures = 0
 
         def copy_page(layers, src, dst):
             out = {}
@@ -138,6 +143,20 @@ class PagePool:
     def pages_used(self) -> int:
         """Pages not on the free list (live refs + pinned prefix pages)."""
         return self.usable_pages - len(self._free_pages)
+
+    @property
+    def n_free_pages(self) -> int:
+        return len(self._free_pages)
+
+    @property
+    def all_reclaimed(self) -> bool:
+        """Drain invariant: every slot free and every live reference
+        dropped (pinned-but-cold prefix pages are *not* leaks — they hold
+        refcount 0 and are reclaimable on demand). The leak check chaos
+        tests assert after a soak."""
+        return (len(self._free_slots) == self.max_slots
+                and not self._slot_live.any()
+                and int(self._refcount.sum()) == 0)
 
     @property
     def nbytes(self) -> int:
@@ -174,7 +193,16 @@ class PagePool:
         self.prefix.unregister_page(pid)
         return pid
 
+    def inject_alloc_failures(self, n: int) -> None:
+        """Arm ``n`` forced allocation failures (chaos testing — see
+        ``serving.faults.FaultInjector``)."""
+        assert n >= 0, n
+        self.fault_alloc_failures += n
+
     def _alloc_pages(self, n: int) -> Optional[List[int]]:
+        if n > 0 and self.fault_alloc_failures > 0:   # injected OOM (§11)
+            self.fault_alloc_failures -= 1
+            return None
         out: List[int] = []
         while len(out) < n:
             if self._free_pages:

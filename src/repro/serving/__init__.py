@@ -9,9 +9,16 @@
 paged KV cache (``repro.paging.PagePool``: block tables, quantized pages,
 prefix reuse with copy-on-write — DESIGN.md §9); the dense mode remains
 the bit-exact A/B baseline.
+
+Fault tolerance (DESIGN.md §11): ``FaultConfig`` arms the seeded chaos
+injector (``FaultInjector``), ``ResilienceConfig`` sets the engine's
+response policy — deadlines, quarantine retries, and the graceful
+degradation ladder. Both default inert.
 """
 from repro.serving.engine import ContinuousScheduler
+from repro.serving.faults import FaultConfig, FaultInjector, ResilienceConfig
 from repro.serving.queue import Request, RequestQueue
 from repro.serving.slots import SlotPool
 
-__all__ = ["ContinuousScheduler", "Request", "RequestQueue", "SlotPool"]
+__all__ = ["ContinuousScheduler", "Request", "RequestQueue", "SlotPool",
+           "FaultConfig", "FaultInjector", "ResilienceConfig"]

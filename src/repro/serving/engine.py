@@ -50,10 +50,24 @@ window forward is bitwise-equal to sequential decode, so spec serving is
 token-exact vs the non-spec engine; rejected tokens roll back by length
 bookkeeping (dense) plus O(1) tail-page reclamation (paged). Each round
 emits 1..k+1 tokens per live slot.
+
+Fault tolerance (DESIGN.md §11): every decode/verify step runs a jit'd
+finite check over each slot's logits; a slot with non-finite logits is
+*quarantined* — its uncommitted token is dropped, its slot/pages released,
+and the request replays from its prompt (greedy determinism makes the
+retry token-exact) up to ``ResilienceConfig.max_retries`` attempts before
+terminating ``failed`` with a reason code. Per-request wall-clock
+deadlines cancel requests wherever they are (queued or mid-decode). A
+``FaultConfig`` arms the seeded chaos injector (NaN logits, forced page
+OOM, slow steps, draft failures); the degradation ladder auto-disables
+speculation below a rolling acceptance floor and pauses admission under
+page-pool pressure. All of it surfaces in ``run()`` under ``faults{...}``.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import logging
 import time
 from typing import Any, Dict, List, Optional
 
@@ -64,8 +78,12 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.kernels import ops as kops
 from repro.models import LM
+from repro.serving.faults import (FAIL_DEADLINE, FAIL_NUMERIC, FaultConfig,
+                                  FaultInjector, ResilienceConfig)
 from repro.serving.queue import Request, RequestQueue
 from repro.serving.slots import SlotPool
+
+log = logging.getLogger("repro.serving")
 
 
 class _RunningStat:
@@ -106,7 +124,9 @@ class ContinuousScheduler:
                  eos_id: Optional[int] = None, *, cache: str = "dense",
                  page_size: int = 16, n_pages: int = 0,
                  kv_dtype: Optional[str] = None, prefix_cache: bool = True,
-                 paged_attn: Optional[str] = None, spec=None):
+                 paged_attn: Optional[str] = None, spec=None,
+                 faults: Optional[FaultConfig] = None,
+                 resilience: Optional[ResilienceConfig] = None):
         if cfg.is_encdec or cfg.family == "vlm":
             raise ValueError(
                 f"family {cfg.family!r} needs per-request encoder/frontend "
@@ -182,6 +202,25 @@ class ContinuousScheduler:
         self._depth_stat = _RunningStat()
         self._live_stat = _RunningStat()
 
+        # ---- fault tolerance (DESIGN.md §11) ----
+        self.resilience = resilience or ResilienceConfig()
+        self.injector = FaultInjector(faults) if faults is not None else None
+        self._step_no = 0
+        self._any_deadline = self.resilience.deadline_s is not None
+        self.quarantines = 0
+        self.fault_retries = 0
+        self.failed_requests = 0
+        self.admission_pauses = 0
+        self.deadline_cancels = 0
+        self.spec_disabled = False
+        self.spec_disables = 0
+        self.draft_fallbacks = 0
+        self._accept_ring = collections.deque(
+            maxlen=max(self.resilience.spec_floor_window, 1))
+        # all-false NaN mask: the fault-free guard input (where() with an
+        # all-false mask is bitwise-neutral on the logits)
+        self._no_nan = jnp.zeros((max_slots,), jnp.bool_)
+
         def prefill(params, toks):
             cache_, logits = self.model.prefill(params, {"tokens": toks},
                                                 max_len)
@@ -196,7 +235,7 @@ class ContinuousScheduler:
             return cache_["layers"], jnp.argmax(logits[:, -1],
                                                 axis=-1).astype(jnp.int32)
 
-        def decode(params, layers, pos, toks):
+        def decode(params, layers, pos, toks, nan_mask):
             # free slots keep decoding garbage; clamp their write position
             # so it can never run past the cache (live rows are bounded by
             # the submit-time prompt+budget <= max_len assertion)
@@ -204,10 +243,15 @@ class ContinuousScheduler:
                       "pos": jnp.minimum(pos, max_len - 1)}
             logits, new_cache = self.model.decode_step(params, cache_,
                                                        toks[:, None])
-            nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
-            return new_cache["layers"], new_cache["pos"], nxt
+            # §11 numerical guard: fault injection corrupts masked rows
+            # *before* the finite check (all-false mask = bitwise no-op);
+            # a non-finite row quarantines its slot instead of committing
+            row = jnp.where(nan_mask[:, None], jnp.nan, logits[:, 0, :])
+            ok = jnp.all(jnp.isfinite(row), axis=-1)
+            nxt = jnp.argmax(row, axis=-1).astype(jnp.int32)
+            return new_cache["layers"], new_cache["pos"], nxt, ok
 
-        def decode_paged(params, layers, table, pos, toks):
+        def decode_paged(params, layers, table, pos, toks, nan_mask):
             # free slots' block tables are all-zero, so their clamped
             # garbage writes land in the pool's reserved trash page 0
             cache_ = {"layers": layers,
@@ -215,8 +259,10 @@ class ContinuousScheduler:
                       "block_table": table}
             logits, new_cache = self.model.decode_step(params, cache_,
                                                        toks[:, None])
-            nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
-            return new_cache["layers"], new_cache["pos"], nxt
+            row = jnp.where(nan_mask[:, None], jnp.nan, logits[:, 0, :])
+            ok = jnp.all(jnp.isfinite(row), axis=-1)
+            nxt = jnp.argmax(row, axis=-1).astype(jnp.int32)
+            return new_cache["layers"], new_cache["pos"], nxt, ok
 
         self._prefill = jax.jit(prefill if cache == "dense"
                                 else prefill_paged)
@@ -273,7 +319,7 @@ class ContinuousScheduler:
                 self.draft, self.max_len, self.spec.k)
             self._verify = spec_lib.make_verify_step(
                 self.model, self.max_len, self.spec.k,
-                paged=self.cache_mode == "paged")
+                paged=self.cache_mode == "paged", guard=True)
             # the draft's own packed GEMV decodes warm under "decode" too
             self.gemm_plans.update(
                 (("draft",) + key, plan) for key, plan in
@@ -282,7 +328,9 @@ class ContinuousScheduler:
                     select=is_packed_linear,
                     impl=gemm_impl(dlm.cfg)).items())
 
-    def submit(self, prompt: np.ndarray, max_new: int) -> Request:
+    def submit(self, prompt: np.ndarray, max_new: int, *,
+               deadline_s: Optional[float] = None,
+               max_retries: Optional[int] = None) -> Request:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         # spec mode reserves k positions of headroom: the last emitted
         # token's verify window writes up to position prompt+gen-1+k
@@ -290,7 +338,13 @@ class ContinuousScheduler:
         assert prompt.size + max_new + headroom <= self.max_len, (
             f"prompt {prompt.size} + gen {max_new} + spec headroom "
             f"{headroom} exceeds max_len {self.max_len}")
-        return self.queue.submit(prompt, max_new, eos_id=self.eos_id)
+        if deadline_s is None:
+            deadline_s = self.resilience.deadline_s
+        if deadline_s is not None:
+            self._any_deadline = True
+        return self.queue.submit(prompt, max_new, eos_id=self.eos_id,
+                                 deadline_s=deadline_s,
+                                 max_retries=max_retries)
 
     # ------------------------------------------------------------------
     def _prefill_group(self, group) -> None:
@@ -319,6 +373,7 @@ class ContinuousScheduler:
         now = time.monotonic()
         for (req, slot, _), tok in zip(group, toks):
             req.slot = slot
+            req.state = "live"
             req.tokens.append(int(tok))
             req.first_token_t = now
             self._pos[slot] = req.prompt_len
@@ -329,13 +384,34 @@ class ContinuousScheduler:
             if req.done:                 # max_new == 1 (or instant EOS)
                 self._evict(slot)
 
-    def _admit_paged(self) -> None:
+    def _head_ready(self, now: float) -> bool:
+        """Admission gate: queue non-empty and the head request past its
+        retry-backoff window. FIFO order is preserved — a backing-off head
+        stalls admission for this step rather than being skipped."""
+        if self.queue.empty():
+            return False
+        return self.queue.peek().not_before <= now
+
+    def _admission_paused(self) -> bool:
+        """Degradation ladder rung 2 (DESIGN.md §11): under page-pool
+        pressure, pause admission while live requests drain — shedding
+        load *before* the preempt-and-replay storm rather than during."""
+        frac = self.resilience.admission_pause_frac
+        if (not frac or self.cache_mode != "paged" or not self._live
+                or self.queue.empty()):
+            return False
+        if self.pool.n_free_pages / self.pool.usable_pages < frac:
+            self.admission_pauses += 1
+            return True
+        return False
+
+    def _admit_paged(self, now: float) -> None:
         """Paged admission: a request is admitted only when the page pool
         can cover its whole prompt (shared prefix pages + fresh pages,
         reclaiming cold prefix pages under pressure). A request the pool
         cannot place right now *defers* — admission stops for this step and
         retries after the next round of evictions frees pages."""
-        while self.queue and self.pool.n_free:
+        while self._head_ready(now) and self.pool.n_free:
             adm = self.pool.admit(self.queue.peek().prompt)
             if adm is None:
                 self.deferrals += 1
@@ -343,7 +419,7 @@ class ContinuousScheduler:
             group = [(self.queue.pop(), adm.slot, adm)]
             plen = group[0][0].prompt_len
             deferred = False
-            while (self.queue and self.pool.n_free
+            while (self._head_ready(now) and self.pool.n_free
                    and self.queue.peek().prompt_len == plen):
                 nxt = self.pool.admit(self.queue.peek().prompt)
                 if nxt is None:
@@ -356,24 +432,30 @@ class ContinuousScheduler:
                 return
 
     def _admit(self) -> None:
-        if self.cache_mode == "paged":
-            self._admit_paged()
+        now = time.monotonic()
+        if self._admission_paused():
             return
-        while self.queue and self.pool.n_free:
+        if self.cache_mode == "paged":
+            self._admit_paged(now)
+            return
+        while self._head_ready(now) and self.pool.n_free:
             # grouped admission: prefill a FIFO run of equal-length prompts
             # (up to the free-slot count) as one batch — one kernel dispatch
             # and one pool scatter instead of k
             group = [self.queue.pop()]
             plen = group[0].prompt_len
-            while (len(group) < self.pool.n_free and self.queue
+            while (len(group) < self.pool.n_free and self._head_ready(now)
                    and self.queue.peek().prompt_len == plen):
                 group.append(self.queue.pop())
             self._prefill_group(
                 [(req, self.pool.alloc(), None) for req in group])
 
-    def _evict(self, slot: int) -> None:
+    def _release_slot(self, slot: int) -> Request:
+        """Common tail of every live-slot exit: pop the request, return the
+        slot's cache (pages or dense row) to its pool, zero the host
+        mirrors. Shared by evict/preempt/quarantine/fail so slot
+        accounting cannot diverge between the happy and failure paths."""
         req = self._live.pop(slot)
-        req.done_t = time.monotonic()
         req.slot = None
         self._pos[slot] = 0
         self._tok[slot] = 0
@@ -383,27 +465,91 @@ class ContinuousScheduler:
             self.pool.release(slot)
         else:
             self.pool.free(slot)
+        return req
+
+    def _evict(self, slot: int) -> None:
+        req = self._release_slot(slot)
+        req.state = "done"
+        req.done_t = time.monotonic()
         self._finished.append(req)
         self.total_drained += 1
 
-    def _preempt(self, slot: int) -> None:
-        """Paged OOM recovery: release the slot's pages and replay the
-        request from scratch later. Greedy decode is deterministic, so the
-        replay regenerates the exact same tokens — preemption trades
-        wasted compute for memory, never correctness."""
-        req = self._live.pop(slot)
-        self.pool.release(slot)
-        self._pos[slot] = 0
-        self._tok[slot] = 0
-        self._prev_tok[slot] = 0
-        self._dirty = True
-        req.slot = None
+    def _replay(self, slot: int) -> Request:
+        """Reset a live request for a from-scratch replay (preemption or
+        quarantine retry). Greedy decode is deterministic, so the replay
+        regenerates the exact same tokens — replays trade wasted compute
+        for memory/robustness, never correctness."""
+        req = self._release_slot(slot)
         req.tokens.clear()
         req.first_token_t = None
         req.spec_proposed = 0         # replay re-counts draft stats
         req.spec_accepted = 0
-        self.queue.push_front(req)
+        return req
+
+    def _preempt(self, slot: int) -> None:
+        """Paged OOM recovery: release the slot's pages and replay the
+        request from scratch later; it re-enters at the queue *head* (the
+        oldest-never-preempted rule in ``_grow_paged`` guarantees drain
+        progress)."""
+        self.queue.push_front(self._replay(slot))
         self.preemptions += 1
+
+    def _fail_live(self, slot: int, reason: str) -> None:
+        """Terminal failure of an in-flight request: slot and pages are
+        reclaimed exactly as on eviction (refcount-clean), the request
+        drains with ``state="failed"`` + reason code instead of wedging
+        the pool."""
+        req = self._release_slot(slot)
+        self._fail(req, reason)
+
+    def _fail(self, req: Request, reason: str) -> None:
+        req.state = "failed"
+        req.fail_reason = reason
+        req.done_t = time.monotonic()
+        self._finished.append(req)
+        self.total_drained += 1
+        self.failed_requests += 1
+        log.warning("request %d failed: %s (attempts=%d, %d tokens in)",
+                    req.rid, reason, req.attempts, len(req.tokens))
+
+    def _quarantine(self, slot: int) -> None:
+        """Numerical-guard response (DESIGN.md §11): the slot produced
+        non-finite logits this step. Its uncommitted token is dropped and
+        the request retries from scratch (token-exact by greedy
+        determinism) with exponential backoff, up to its retry budget;
+        other slots are untouched — one poisoned row never kills the
+        batch."""
+        req = self._live[slot]
+        self.quarantines += 1
+        req.attempts += 1
+        retries = (req.max_retries if req.max_retries is not None
+                   else self.resilience.max_retries)
+        if req.attempts > retries:
+            self._fail_live(slot, FAIL_NUMERIC)
+            return
+        self.fault_retries += 1
+        backoff = self.resilience.retry_backoff_s
+        req.not_before = (time.monotonic()
+                          + backoff * (2 ** (req.attempts - 1))
+                          if backoff else 0.0)
+        self.queue.requeue(self._replay(slot))
+        log.warning("quarantined slot %d (request %d): non-finite logits; "
+                    "retry %d/%d", slot, req.rid, req.attempts, retries)
+
+    def _expire_deadlines(self) -> None:
+        """Cancel every request past its wall-clock deadline — queued
+        requests before they waste a prefill, live ones mid-decode (their
+        slot/pages are reclaimed refcount-clean)."""
+        if not self._any_deadline:
+            return
+        now = time.monotonic()
+        for req in self.queue.take_expired(now):
+            self._fail(req, FAIL_DEADLINE)
+            self.deadline_cancels += 1
+        for slot in list(self._live):
+            if self._live[slot].expired(now):
+                self._fail_live(slot, FAIL_DEADLINE)
+                self.deadline_cancels += 1
 
     def _grow_paged(self, horizon: int = 1) -> None:
         """Before each paged decode step, make every live row's next
@@ -427,13 +573,51 @@ class ContinuousScheduler:
                 if victim == slot:
                     break
 
+    def _plan_faults(self):
+        """Draw this step's chaos schedule and apply the engine-external
+        faults (sleep, armed page-OOM) immediately; NaN/draft faults are
+        returned for the decode path to apply."""
+        if self.injector is None:
+            return None
+        f = self.injector.plan(self._step_no)
+        if f.slow:
+            self.injector.count("slow_step")
+            time.sleep(self.injector.cfg.slow_s)
+        if f.oom and self.cache_mode == "paged":
+            self.injector.count("page_oom")
+            self.pool.inject_alloc_failures(self.injector.cfg.oom_burst)
+        return f
+
+    def _nan_mask(self, faults):
+        """Device mask of the slots whose logits this step's schedule
+        corrupts (all-false — a cached constant — when nothing fires)."""
+        if faults is None or not faults.nan or not self._live:
+            return self._no_nan
+        victim = self.injector.choose_slot(list(self._live))
+        mask = np.zeros(self.max_slots, bool)
+        mask[victim] = True
+        return jnp.asarray(mask)
+
     def step(self) -> None:
-        """One scheduler iteration: admit + prefill, decode (or the spec
-        draft -> verify -> rollback round), evict."""
+        """One scheduler iteration: inject scheduled faults, expire
+        deadlines, admit + prefill, decode (or the spec draft -> verify ->
+        rollback round) under the numerical guard, evict/quarantine."""
+        self._step_no += 1
+        faults = self._plan_faults()
+        self._expire_deadlines()
         self._depth_stat.push(self.queue.depth())
         self._admit()
+        # a draft fault (or the acceptance-floor ladder) downgrades this
+        # step to plain one-token decode; growth only needs horizon 1 then
+        spec_active = self.spec is not None and not self.spec_disabled
+        draft_down = (spec_active and faults is not None
+                      and faults.draft_fail)
+        if draft_down:
+            self.injector.count("draft_fail")
+            self.draft_fallbacks += 1
         if self.cache_mode == "paged":
-            self._grow_paged(1 + (self.spec.k if self.spec else 0))
+            self._grow_paged(1 + (self.spec.k
+                                  if spec_active and not draft_down else 0))
         if not self._live:
             return
         self._live_stat.push(len(self._live))
@@ -443,33 +627,43 @@ class ContinuousScheduler:
             if self.spec is not None:
                 self._dev_prev = jnp.asarray(self._prev_tok)
             self._dirty = False
-        if self.spec is not None:
-            self._step_spec()
+        if spec_active and not draft_down:
+            self._step_spec(faults)
             return
+        mask = self._nan_mask(faults)
         with kops.serving_phase("decode"):
             if self.cache_mode == "paged":
                 if self.pool.table_dirty:
                     self._dev_table = jnp.asarray(self.pool.table)
                     self.pool.table_dirty = False
-                self.pool.layers, self._dev_pos, self._dev_tok = \
+                self.pool.layers, self._dev_pos, self._dev_tok, ok_dev = \
                     self._decode_paged(self.params, self.pool.layers,
                                        self._dev_table, self._dev_pos,
-                                       self._dev_tok)
+                                       self._dev_tok, mask)
             else:
-                self.pool.layers, self._dev_pos, self._dev_tok = \
+                self.pool.layers, self._dev_pos, self._dev_tok, ok_dev = \
                     self._decode(self.params, self.pool.layers,
-                                 self._dev_pos, self._dev_tok)
+                                 self._dev_pos, self._dev_tok, mask)
         self.decode_steps += 1
         toks = np.asarray(self._dev_tok)
+        ok = np.asarray(ok_dev)
         for slot in list(self._live):
             req = self._live[slot]
+            if not ok[slot]:
+                self._quarantine(slot)
+                continue
+            if self.spec is not None:
+                # keep the draft-round re-sync feed consistent across
+                # plain-decode fallback rounds (spec.draft docstring)
+                self._prev_tok[slot] = self._tok[slot]
+                self._dirty = True
             req.tokens.append(int(toks[slot]))
             self._pos[slot] += 1
             self._tok[slot] = toks[slot]
             if req.done:
                 self._evict(slot)
 
-    def _step_spec(self) -> None:
+    def _step_spec(self, faults=None) -> None:
         """One speculative round (DESIGN.md §10): draft k tokens per slot
         from the draft's own cache, verify the (slots, k+1) window in one
         target forward, emit the accepted prefix + bonus token, roll the
@@ -481,24 +675,37 @@ class ContinuousScheduler:
                 self.draft.params, self._draft_layers, self._dev_pos,
                 self._dev_prev, self._dev_tok)
         window = jnp.concatenate([self._dev_tok[:, None], drafts], axis=1)
+        mask = self._nan_mask(faults)
         with kops.serving_phase("verify"):
             if self.cache_mode == "paged":
                 if self.pool.table_dirty:
                     self._dev_table = jnp.asarray(self.pool.table)
                     self.pool.table_dirty = False
-                self.pool.layers, greedy, n_acc, _ = self._verify(
+                self.pool.layers, greedy, n_acc, _, ok_dev = self._verify(
                     self.params, self.pool.layers, self._dev_table,
-                    self._dev_pos, window)
+                    self._dev_pos, window, mask)
             else:
-                self.pool.layers, greedy, n_acc, _ = self._verify(
-                    self.params, self.pool.layers, self._dev_pos, window)
+                self.pool.layers, greedy, n_acc, _, ok_dev = self._verify(
+                    self.params, self.pool.layers, self._dev_pos, window,
+                    mask)
         self.decode_steps += 1
         self.spec_rounds += 1
         greedy = np.asarray(greedy)
         n_acc = np.asarray(n_acc)
+        ok = np.asarray(ok_dev)
+        round_slots = 0
+        round_accepted = 0
         for slot in list(self._live):
             req = self._live[slot]
+            if not ok[slot]:
+                # corrupted window: commit nothing from it — quarantine
+                # replays the request from its prompt (token-exact under
+                # greedy decode), so the NaN never reaches the output
+                self._quarantine(slot)
+                continue
             na = int(n_acc[slot])
+            round_slots += 1
+            round_accepted += na
             self.spec_slot_rounds += 1
             self.spec_proposed += k
             self.spec_accepted += na
@@ -526,6 +733,23 @@ class ContinuousScheduler:
                 # dense rollback is length bookkeeping only — the _pos
                 # update above IS the rollback (see spec.rollback)
                 rb.rollback_dense(self.pool, slot, int(self._pos[slot]))
+        # degradation rung 1 (DESIGN.md §11): rolling acceptance floor.
+        # A draft that stops agreeing with the target makes every round
+        # cost a k+1-wide verify for ~1 emitted token — worse than plain
+        # decode — so the engine sheds speculation instead of limping.
+        floor = self.resilience.spec_accept_floor
+        if floor > 0.0 and round_slots:
+            self._accept_ring.append(round_accepted / (k * round_slots))
+            if (len(self._accept_ring) == self._accept_ring.maxlen
+                    and not self.spec_disabled):
+                mean = sum(self._accept_ring) / len(self._accept_ring)
+                if mean < floor:
+                    self.spec_disabled = True
+                    self.spec_disables += 1
+                    log.warning(
+                        "spec decoding disabled: rolling acceptance %.3f "
+                        "< floor %.3f over %d rounds", mean, floor,
+                        self._accept_ring.maxlen)
 
     # ------------------------------------------------------------------
     def run(self) -> Dict[str, Any]:
@@ -537,6 +761,15 @@ class ContinuousScheduler:
         s0 = (self.spec_rounds, self.spec_proposed, self.spec_accepted,
               self.spec_emitted, self.spec_page_reclaims,
               self.spec_slot_rounds)
+        f0 = {"quarantines": self.quarantines,
+              "retries": self.fault_retries,
+              "failed": self.failed_requests,
+              "pauses": self.admission_pauses,
+              "deadline_cancels": self.deadline_cancels,
+              "spec_disables": self.spec_disables,
+              "draft_fallbacks": self.draft_fallbacks,
+              "injected": (dict(self.injector.injected)
+                           if self.injector else {})}
         self._depth_stat = _RunningStat()
         self._live_stat = _RunningStat()
         budget = (self.queue.depth() + len(self._live)) * self.max_len + 1
@@ -545,10 +778,27 @@ class ContinuousScheduler:
             # max_len extra steps and the oldest-never-preempted rule bounds
             # the churn, but give the watchdog generous headroom
             budget *= 8
+        if self.injector is not None or self.resilience.max_retries > 0:
+            # quarantine replays restart requests from the prompt, so each
+            # of the max_retries attempts can cost another full generation
+            budget *= 2 + self.resilience.max_retries
+        idle = 0
         while self.queue or self._live:
             assert budget > 0, "scheduler failed to make progress"
-            budget -= 1
+            progress = (self.prefill_steps, self.decode_steps,
+                        self.total_drained)
             self.step()
+            if (self.prefill_steps, self.decode_steps,
+                    self.total_drained) == progress:
+                # idle tick — nothing live and the queue head is inside its
+                # retry-backoff window. Waiting costs no work, so it must
+                # not eat the progress budget; yield briefly instead.
+                idle += 1
+                assert idle < 1_000_000, "scheduler stuck on idle ticks"
+                time.sleep(5e-4)
+            else:
+                idle = 0
+                budget -= 1
         wall = time.monotonic() - t0
         assert self.total_drained == self.queue.submitted, (
             "drained-request count != submitted count",
@@ -584,6 +834,9 @@ class ContinuousScheduler:
                 "mean_accepted_len": (round(emitted / slot_rounds, 3)
                                       if slot_rounds else None),
                 "rollback_page_reclaims": self.spec_page_reclaims - s0[4],
+                "disabled": self.spec_disabled,
+                "draft_fallbacks": (self.draft_fallbacks
+                                    - f0["draft_fallbacks"]),
                 "per_request": [
                     {"rid": r.rid, "proposed": r.spec_proposed,
                      "accepted": r.spec_accepted,
@@ -612,4 +865,21 @@ class ContinuousScheduler:
                        "max": float(np.max(ttfts)) if ttfts else None},
             "queue_depth": {"max": self._depth_stat.peak,
                             "mean": self._depth_stat.mean},
+            "faults": {
+                "injected": {k: v - f0["injected"].get(k, 0)
+                             for k, v in (self.injector.injected.items()
+                                          if self.injector else ())},
+                "quarantines": self.quarantines - f0["quarantines"],
+                "retries": self.fault_retries - f0["retries"],
+                "failed_requests": self.failed_requests - f0["failed"],
+                "degradations": {
+                    "spec_disabled": self.spec_disabled,
+                    "spec_disables": (self.spec_disables
+                                      - f0["spec_disables"]),
+                    "admission_pauses": (self.admission_pauses
+                                         - f0["pauses"]),
+                    "deadline_cancellations": (self.deadline_cancels
+                                               - f0["deadline_cancels"]),
+                },
+            },
         }

@@ -1,0 +1,157 @@
+"""Serving-side fault tolerance (DESIGN.md §11).
+
+The continuous-batching engine's failure model, host-side. Two config
+objects and one injector:
+
+* ``FaultConfig`` + ``FaultInjector`` — a *deterministic, seeded* chaos
+  schedule. Each scheduler step the injector draws a fixed number of
+  uniforms from its own ``np.random.default_rng(seed)`` stream (the draw
+  count never depends on engine state, so the schedule is reproducible
+  run-to-run) and decides which faults fire: NaN-corrupted decode/verify
+  logits for one live slot, forced page-pool allocation failures, an
+  artificially slow step, or a draft-model failure. Explicit ``*_at`` step
+  lists give tests an exact schedule; rates give soak runs a storm.
+* ``ResilienceConfig`` — the engine's response policy: per-request
+  deadlines, bounded retry-with-backoff on quarantines, and the graceful
+  degradation ladder (auto-disable speculative decoding below a rolling
+  acceptance floor; pause admission under page-pool pressure before the
+  preemption storm). Every default is inert — an engine built without an
+  explicit config behaves exactly as before, and the always-on numerical
+  guard (a jit'd finite check on decode/verify logits) is bitwise-neutral
+  on clean logits.
+
+Failure semantics (the contract ``benchmarks/chaos_bench.py`` soaks):
+every submitted request reaches a terminal state (``done`` or ``failed``
+with a reason code), a quarantined/retried request replays to the *exact*
+tokens an undisturbed run produces (greedy decode is deterministic), and
+faults in one slot never perturb another slot's output.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["FaultConfig", "ResilienceConfig", "FaultInjector", "StepFaults",
+           "FAIL_DEADLINE", "FAIL_NUMERIC", "FAIL_CANCELLED"]
+
+# Terminal failure reason codes (``Request.fail_reason``).
+FAIL_DEADLINE = "deadline"            # wall-clock deadline exceeded
+FAIL_NUMERIC = "nan_logits"           # non-finite logits, retries exhausted
+FAIL_CANCELLED = "cancelled"          # explicit user cancellation
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Seeded chaos schedule for ``ContinuousScheduler(faults=...)``.
+
+    Rates are per-scheduler-step probabilities; ``*_at`` tuples name exact
+    step numbers (1-based, matching the engine's step counter) that fire
+    unconditionally — the deterministic handle tests use. A NaN fault
+    corrupts every logit of one seeded-randomly-chosen live slot inside
+    the decode/verify jit (upstream of the finite guard, so the guard is
+    exercised for real); an OOM fault makes the next ``oom_burst`` page
+    allocations fail (paged cache only — the engine's defer/preempt
+    machinery absorbs them); a slow fault sleeps ``slow_s`` (what pushes
+    requests past their deadlines); a draft fault fails the speculative
+    draft round, forcing a plain-decode fallback step."""
+
+    seed: int = 0
+    nan_rate: float = 0.0
+    oom_rate: float = 0.0
+    oom_burst: int = 2
+    slow_rate: float = 0.0
+    slow_s: float = 0.02
+    draft_fail_rate: float = 0.0
+    nan_at: Tuple[int, ...] = ()
+    oom_at: Tuple[int, ...] = ()
+    slow_at: Tuple[int, ...] = ()
+    draft_fail_at: Tuple[int, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """Lifecycle-hardening policy for ``ContinuousScheduler(resilience=...)``.
+
+    * ``deadline_s`` — default wall-clock budget per request measured from
+      submit (``None``: no deadline). A request past its deadline is
+      cancelled wherever it is (queued or mid-decode), its slot/pages are
+      released, and it terminates ``failed`` with reason ``"deadline"``.
+    * ``max_retries`` — quarantine replays allowed per request before it
+      terminates ``failed`` (reason ``"nan_logits"``). Retries re-enqueue
+      through the same replay machinery as paged preemption; greedy
+      determinism makes a successful retry token-exact.
+    * ``retry_backoff_s`` — base of the exponential re-admission backoff
+      (attempt ``n`` waits ``retry_backoff_s * 2**(n-1)``); 0 retries
+      immediately.
+    * ``spec_accept_floor`` / ``spec_floor_window`` — degradation ladder
+      rung 1: when the mean acceptance rate over the last ``window``
+      speculative rounds drops below the floor, speculative decoding is
+      disabled for the rest of the run (drafting a stream the draft cannot
+      predict costs more than plain decode). 0.0 never disables.
+    * ``admission_pause_frac`` — ladder rung 2 (paged cache): while the
+      free-page fraction is below this and requests are live, admission
+      pauses — live requests drain and release pages instead of new
+      admissions triggering a preempt/replay storm. 0.0 never pauses.
+    """
+
+    deadline_s: Optional[float] = None
+    max_retries: int = 2
+    retry_backoff_s: float = 0.0
+    spec_accept_floor: float = 0.0
+    spec_floor_window: int = 16
+    admission_pause_frac: float = 0.0
+
+
+@dataclasses.dataclass
+class StepFaults:
+    """One step's fired faults (``FaultInjector.plan``)."""
+
+    nan: bool = False
+    oom: bool = False
+    slow: bool = False
+    draft_fail: bool = False
+
+
+class FaultInjector:
+    """Deterministic seeded fault scheduler + injection counters.
+
+    ``plan(step)`` draws exactly four uniforms per call whatever fires, so
+    the schedule depends only on the seed and the step sequence. Victim
+    slots for NaN faults are drawn from the same stream at application
+    time (``choose_slot``). ``injected`` counts faults actually applied —
+    a NaN fault with no live slot, or an OOM fault on a dense cache,
+    fizzles and is not counted."""
+
+    def __init__(self, cfg: FaultConfig):
+        self.cfg = cfg
+        self._rng = np.random.default_rng(cfg.seed)
+        self.injected: Dict[str, int] = {
+            "nan_logits": 0, "page_oom": 0, "slow_step": 0, "draft_fail": 0}
+
+    def plan(self, step: int) -> StepFaults:
+        c = self.cfg
+        u = self._rng.random(4)
+        return StepFaults(
+            nan=step in c.nan_at or u[0] < c.nan_rate,
+            oom=step in c.oom_at or u[1] < c.oom_rate,
+            slow=step in c.slow_at or u[2] < c.slow_rate,
+            draft_fail=step in c.draft_fail_at or u[3] < c.draft_fail_rate)
+
+    def choose_slot(self, live_slots: List[int]) -> Optional[int]:
+        """Pick (and count) the NaN victim among the live slots, in slot
+        order so the choice is independent of dict iteration history."""
+        if not live_slots:
+            return None
+        victims = sorted(live_slots)
+        slot = victims[int(self._rng.integers(len(victims)))]
+        self.injected["nan_logits"] += 1
+        return slot
+
+    def count(self, kind: str) -> None:
+        self.injected[kind] += 1
+
+    @property
+    def total_injected(self) -> int:
+        return sum(self.injected.values())

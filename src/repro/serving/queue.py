@@ -2,9 +2,17 @@
 per user call (prompt, token budget, per-request timing/metrics) and a FIFO
 ``RequestQueue`` feeding the scheduler.
 
+Lifecycle (DESIGN.md §11): ``queued -> live -> done | failed``. A request
+re-enters ``queued`` on preemption (paged OOM) or quarantine retry (numeric
+fault); both replay the request from its original prompt, which greedy
+determinism makes token-exact. ``failed`` is terminal and carries a reason
+code (``serving.faults.FAIL_*``) so one bad request never wedges the pool —
+it drains like any other, just without a full token stream.
+
 Metrics captured per request (emitted by ``engine.ContinuousScheduler`` as
-JSON): time-to-first-token (queue wait + prefill), end-to-end latency, and
-decode throughput. All timestamps are ``time.monotonic`` floats.
+JSON): time-to-first-token (queue wait + prefill), end-to-end latency,
+decode throughput, terminal state + failure reason, and retry attempts.
+All timestamps are ``time.monotonic`` floats.
 """
 from __future__ import annotations
 
@@ -22,6 +30,14 @@ class Request:
     prompt: np.ndarray               # (prompt_len,) int32 token ids
     max_new: int                     # generation budget (tokens)
     eos_id: Optional[int] = None     # early-stop token (None: budget only)
+
+    # lifecycle hardening (DESIGN.md §11)
+    deadline_s: Optional[float] = None   # wall-clock budget from submit
+    max_retries: Optional[int] = None    # None: engine's ResilienceConfig
+    attempts: int = 0                    # quarantine replays so far
+    not_before: float = 0.0              # retry-backoff re-admission gate
+    state: str = "queued"                # queued | live | done | failed
+    fail_reason: Optional[str] = None    # faults.FAIL_* when state=="failed"
 
     # scheduler-owned state / metrics
     tokens: List[int] = dataclasses.field(default_factory=list)
@@ -45,6 +61,14 @@ class Request:
                     and self.tokens[-1] == self.eos_id)
 
     @property
+    def terminal(self) -> bool:
+        return self.state in ("done", "failed")
+
+    def expired(self, now: float) -> bool:
+        return (self.deadline_s is not None
+                and now - self.submit_t > self.deadline_s)
+
+    @property
     def ttft_s(self) -> Optional[float]:
         if self.first_token_t is None:
             return None
@@ -63,12 +87,18 @@ class Request:
             "gen_len": len(self.tokens),
             "ttft_s": self.ttft_s,
             "latency_s": self.latency_s,
+            "state": self.state,
+            "fail_reason": self.fail_reason,
+            "attempts": self.attempts,
         }
 
 
 class RequestQueue:
     """FIFO admission queue. ``submit`` stamps the enqueue time (so TTFT
-    includes queue wait); the scheduler ``pop``s at admission."""
+    includes queue wait); the scheduler ``pop``s at admission. Replays
+    (preemption) re-enter at the head; retries (quarantine) re-enter at the
+    tail so a repeatedly-faulting request cannot starve the queue behind
+    it."""
 
     def __init__(self):
         self._q: Deque[Request] = collections.deque()
@@ -76,27 +106,56 @@ class RequestQueue:
         self.submitted = 0
 
     def submit(self, prompt: np.ndarray, max_new: int,
-               eos_id: Optional[int] = None) -> Request:
+               eos_id: Optional[int] = None,
+               deadline_s: Optional[float] = None,
+               max_retries: Optional[int] = None) -> Request:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert prompt.size > 0, "empty prompt"
         assert max_new >= 1, max_new
         req = Request(rid=self._next_rid, prompt=prompt, max_new=max_new,
-                      eos_id=eos_id, submit_t=time.monotonic())
+                      eos_id=eos_id, deadline_s=deadline_s,
+                      max_retries=max_retries, submit_t=time.monotonic())
         self._next_rid += 1
         self.submitted += 1
         self._q.append(req)
         return req
 
     def pop(self) -> Request:
+        if not self._q:
+            raise IndexError(
+                "pop from an empty RequestQueue — admission must guard on "
+                ".empty() (or depth()) before popping")
         return self._q.popleft()
 
     def push_front(self, req: Request) -> None:
         """Re-queue a preempted request at the head (it keeps its original
         ``submit_t`` and rid; ``submitted`` is not re-counted)."""
+        req.state = "queued"
         self._q.appendleft(req)
+
+    def requeue(self, req: Request) -> None:
+        """Re-queue a quarantined request at the tail for its retry —
+        behind already-waiting work, so a faulty request cannot hold the
+        head across its backoff window."""
+        req.state = "queued"
+        self._q.append(req)
 
     def peek(self) -> Optional[Request]:
         return self._q[0] if self._q else None
+
+    def empty(self) -> bool:
+        return not self._q
+
+    def take_expired(self, now: float) -> List[Request]:
+        """Remove and return every queued request past its deadline (the
+        engine fails them without wasting a prefill). O(depth); the engine
+        only calls this when some request actually carries a deadline."""
+        expired = [r for r in self._q if r.expired(now)]
+        if expired:
+            dead = set(id(r) for r in expired)
+            self._q = collections.deque(
+                r for r in self._q if id(r) not in dead)
+        return expired
 
     def depth(self) -> int:
         return len(self._q)

@@ -42,6 +42,13 @@ class SlotPool:
         return self.max_slots - len(self._free)
 
     @property
+    def all_free(self) -> bool:
+        """Drain invariant: every slot back on the free list and none
+        marked live — the leak check chaos tests assert after a soak
+        (``benchmarks/chaos_bench.py``, ``tests/test_faults.py``)."""
+        return len(self._free) == self.max_slots and not self._live.any()
+
+    @property
     def nbytes(self) -> int:
         """Device bytes of the pool's cache tree (the serving-memory
         figure of merit reported in the engine metrics)."""

@@ -42,25 +42,49 @@ def longest_prefix_match(window: jnp.ndarray, greedy: jnp.ndarray):
     return n_acc, bonus
 
 
-def make_verify_step(model, max_len: int, k: int, *, paged: bool = False):
+def make_verify_step(model, max_len: int, k: int, *, paged: bool = False,
+                     guard: bool = False):
     """Build the jitted verify step for a target ``LM``.
 
     Dense: ``(params, layers, pos, window) ->
     (layers, greedy (B, k+1), n_acc (B,), bonus (B,))``; paged takes the
     device block table after ``layers``. The cache-position clamp keeps
     free slots' garbage window writes in range — live rows never clamp
-    (the engine reserves ``k`` positions of headroom at submit)."""
+    (the engine reserves ``k`` positions of headroom at submit).
 
-    def verify(params, layers, pos, window, table=None):
+    ``guard=True`` is the fault-hardened variant (DESIGN.md §11): the call
+    takes a trailing ``nan_mask (B,)`` bool (fault injection corrupts the
+    masked slots' window logits to NaN *before* the guard, so the guard is
+    exercised end to end; the all-false mask is a bitwise no-op) and
+    returns a trailing ``ok (B,)`` finite-check over each slot's whole
+    window — the engine quarantines ``~ok`` slots instead of committing
+    their garbage."""
+
+    def verify(params, layers, pos, window, table=None, nan_mask=None):
         cache = {"layers": layers, "pos": jnp.minimum(pos, max_len - 1 - k)}
         if table is not None:
             cache["block_table"] = table
         logits, new_cache = model.decode_step(params, cache, window)
+        if nan_mask is not None:
+            logits = jnp.where(nan_mask[:, None, None], jnp.nan, logits)
         greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         n_acc, bonus = longest_prefix_match(window, greedy)
-        return new_cache["layers"], greedy, n_acc, bonus
+        out = (new_cache["layers"], greedy, n_acc, bonus)
+        if nan_mask is not None:
+            ok = jnp.all(jnp.isfinite(logits), axis=(1, 2))
+            out = out + (ok,)
+        return out
 
-    if paged:
+    if guard:
+        if paged:
+            fn = jax.jit(lambda params, layers, table, pos, window, mask:
+                         verify(params, layers, pos, window, table, mask),
+                         donate_argnums=(1,))
+        else:
+            fn = jax.jit(lambda params, layers, pos, window, mask:
+                         verify(params, layers, pos, window, None, mask),
+                         donate_argnums=(1,))
+    elif paged:
         fn = jax.jit(lambda params, layers, table, pos, window:
                      verify(params, layers, pos, window, table),
                      donate_argnums=(1,))

@@ -39,6 +39,7 @@ GOLDEN = {
     },
     "repro.serving": {
         "ContinuousScheduler", "Request", "RequestQueue", "SlotPool",
+        "FaultConfig", "FaultInjector", "ResilienceConfig",
     },
     "repro.paging": {
         "PagePool", "Admission", "PrefixCache", "Int8Pages",
@@ -50,7 +51,8 @@ GOLDEN = {
         "make_draft_round", "make_verify_step", "longest_prefix_match",
         "rollback_dense", "rollback_paged",
     },
-    "repro.checkpoint": {"save", "restore", "latest_step"},
+    "repro.checkpoint": {"save", "restore", "latest_step",
+                         "CheckpointCorruptError"},
 }
 
 # Formats every deployment depends on being registered + dispatchable.

@@ -65,3 +65,74 @@ def test_overwrite_same_step(tmp_path):
     ckpt.save(str(tmp_path), 1, {"x": jnp.asarray(2.0)})
     _, st = ckpt.restore(str(tmp_path), target={"x": jnp.zeros(())})
     assert float(st["x"]) == 2.0
+
+
+def _corrupt_leaf(tmp_path, step, key, value):
+    """Rewrite one stored array behind the manifest's back (np.savez stores
+    uncompressed, so this is exactly silent on-disk corruption: shapes and
+    dtypes still match, only the bytes changed)."""
+    path = os.path.join(str(tmp_path), f"step_{step:08d}", "state.npz")
+    data = dict(np.load(path).items())
+    data[key] = value
+    np.savez(path, **data)
+
+
+def test_restore_detects_corruption(tmp_path):
+    """A flipped array fails restore with the file and leaf named."""
+    ckpt.save(str(tmp_path), 3, _state())
+    _corrupt_leaf(tmp_path, 3, "params|w",
+                  np.full((3, 4), 99.0, np.float32))
+    with pytest.raises(ckpt.CheckpointCorruptError) as ei:
+        ckpt.restore(str(tmp_path), target=jax.eval_shape(_state))
+    assert "state.npz" in str(ei.value) and "params/w" in str(ei.value)
+    assert ei.value.key == "params/w"
+
+
+def test_corruption_detected_on_nonfloat_and_bf16_leaves(tmp_path):
+    """Checksums cover the stored (viewed) bytes, so int and bfloat16
+    leaves are protected too."""
+    ckpt.save(str(tmp_path), 1, _state())
+    _corrupt_leaf(tmp_path, 1, "opt|step", np.asarray(8, np.int32))
+    with pytest.raises(ckpt.CheckpointCorruptError):
+        ckpt.restore(str(tmp_path), step=1)
+    ckpt.save(str(tmp_path), 2, _state())
+    _corrupt_leaf(tmp_path, 2, "params|b",
+                  np.zeros((4,), np.uint16))      # stored view of bf16
+    with pytest.raises(ckpt.CheckpointCorruptError):
+        ckpt.restore(str(tmp_path), step=2)
+
+
+def test_latest_step_verify_skips_corrupt(tmp_path):
+    """verify=True returns the newest *intact* step; plain latest_step
+    keeps its cheap no-IO behavior."""
+    for s in (5, 10, 20):
+        ckpt.save(str(tmp_path), s, _state())
+    _corrupt_leaf(tmp_path, 20, "params|w", np.zeros((3, 4), np.float32))
+    assert ckpt.latest_step(str(tmp_path)) == 20
+    assert ckpt.latest_step(str(tmp_path), verify=True) == 10
+    os.remove(os.path.join(str(tmp_path), "step_00000010", "manifest.json"))
+    assert ckpt.latest_step(str(tmp_path), verify=True) == 5
+
+
+def test_clean_checkpoints_verify(tmp_path):
+    ckpt.save(str(tmp_path), 4, _state())
+    assert ckpt.latest_step(str(tmp_path), verify=True) == 4
+    step, _ = ckpt.restore(str(tmp_path), target=jax.eval_shape(_state))
+    assert step == 4
+
+
+def test_pre_checksum_checkpoints_still_restore(tmp_path):
+    """Manifests without crc32 fields (older saves) restore and verify
+    without complaint — missing checksum means unverifiable, not corrupt."""
+    import json
+    ckpt.save(str(tmp_path), 2, {"x": jnp.asarray(3.0)})
+    man = os.path.join(str(tmp_path), "step_00000002", "manifest.json")
+    with open(man) as f:
+        m = json.load(f)
+    for leaf in m["leaves"].values():
+        leaf.pop("crc32", None)
+    with open(man, "w") as f:
+        json.dump(m, f)
+    assert ckpt.latest_step(str(tmp_path), verify=True) == 2
+    _, st = ckpt.restore(str(tmp_path), target={"x": jnp.zeros(())})
+    assert float(st["x"]) == 3.0

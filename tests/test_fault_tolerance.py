@@ -71,6 +71,20 @@ def test_straggler_watchdog():
     assert not w.observe(11, 1.0)
 
 
+def test_straggler_events_bounded():
+    """`events` is a ring capped at events_cap — a week of stragglers on a
+    flaky node must not grow host memory — while `straggler_steps` stays
+    exact and the ring holds the most recent records."""
+    w = StragglerWatchdog(factor=2.0, alpha=0.0, events_cap=8)
+    w.observe(0, 1.0)                  # seed the ewma (alpha=0: frozen)
+    for i in range(1, 101):
+        w.observe(i, 5.0)
+    assert w.straggler_steps == 100
+    assert len(w.events) == 8
+    kept = sorted(e[0] for e in w.events)
+    assert kept == list(range(93, 101))   # the 8 newest straggler steps
+
+
 def test_elastic_restore_smaller_world(tmp_path):
     """Checkpoints are logical: save from one 'world', restore into another
     (different sharding/device count is a device_put detail)."""

@@ -1,0 +1,215 @@
+"""Serving fault-tolerance tests (DESIGN.md §11): the numerical guard
+quarantines exactly the poisoned slot and retries token-exact, deadlines
+cancel requests refcount-clean wherever they are, retry budgets terminate
+rather than wedge, forced page-OOM storms drain completely, the degradation
+ladder sheds speculation, and the chaos CLI smoke-runs end to end."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch import serve
+from repro.serving import (ContinuousScheduler, FaultConfig, FaultInjector,
+                           RequestQueue, ResilienceConfig)
+from repro.serving.faults import FAIL_DEADLINE, FAIL_NUMERIC
+
+
+def _cfg(**overrides):
+    return get_config("ternary-paper", reduced=True, num_layers=2,
+                      **overrides)
+
+
+_PARAMS = {}
+
+
+def _engine(cfg, slots=3, max_len=32, **kw):
+    eng = ContinuousScheduler(cfg, max_slots=slots, max_len=max_len, **kw)
+    key = id(cfg)
+    if key not in _PARAMS:
+        _PARAMS[key] = eng.model.init(jax.random.PRNGKey(0))
+    eng.load(_PARAMS[key])
+    return eng
+
+
+def _workload(cfg, lens=(4, 4, 6, 5), seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+            for n in lens]
+
+
+def _reference(cfg, prompts, gen=8, **kw):
+    eng = _engine(cfg, **kw)
+    reqs = [eng.submit(p, gen) for p in prompts]
+    eng.run()
+    return [list(r.tokens) for r in reqs]
+
+
+def test_injector_schedule_deterministic():
+    """Same seed -> identical step schedule; *_at lists fire exactly."""
+    cfg = FaultConfig(seed=3, nan_rate=0.3, oom_rate=0.3, nan_at=(5,))
+    a = [FaultInjector(cfg).plan(s) for s in range(1, 20)]
+    b = [FaultInjector(cfg).plan(s) for s in range(1, 20)]
+    assert a == b
+    assert a[4].nan                    # step 5 pinned by nan_at
+    assert any(f.oom for f in a)       # rate fires somewhere in 19 draws
+
+
+def test_nan_quarantine_isolates_slot_and_retry_is_token_exact():
+    """A NaN-poisoned slot is quarantined and replayed; every request —
+    including the poisoned one after its retry — ends with exactly the
+    fault-free run's tokens, and untouched slots never notice."""
+    cfg = _cfg()
+    prompts = _workload(cfg)
+    ref = _reference(cfg, prompts)
+    eng = _engine(cfg, faults=FaultConfig(nan_at=(3, 5)),
+                  resilience=ResilienceConfig(max_retries=2))
+    reqs = [eng.submit(p, 8) for p in prompts]
+    m = eng.run()
+    assert m["faults"]["injected"]["nan_logits"] == 2
+    assert m["faults"]["quarantines"] == 2
+    assert m["faults"]["retries"] == 2
+    assert m["faults"]["failed_requests"] == 0
+    assert any(r.attempts > 0 for r in reqs)
+    for r, want in zip(reqs, ref):
+        assert r.state == "done" and list(r.tokens) == want, r.rid
+    assert eng.pool.n_free == eng.max_slots
+
+
+def test_guard_disabled_outputs_unchanged():
+    """No injector, default ResilienceConfig: the always-on guard must be
+    bitwise-neutral — outputs identical to each other run to run, zero
+    fault metrics."""
+    cfg = _cfg()
+    prompts = _workload(cfg)
+    a = _reference(cfg, prompts)
+    eng = _engine(cfg, resilience=ResilienceConfig())
+    reqs = [eng.submit(p, 8) for p in prompts]
+    m = eng.run()
+    assert [list(r.tokens) for r in reqs] == a
+    assert m["faults"]["quarantines"] == 0
+    assert m["faults"]["injected"] == {}
+
+
+def test_retries_exhausted_terminates_failed():
+    """max_retries=0: the first quarantine is terminal — state='failed',
+    reason nan_logits, slot freed, drained counts still reconcile."""
+    cfg = _cfg()
+    prompts = _workload(cfg)
+    eng = _engine(cfg, faults=FaultConfig(nan_at=tuple(range(2, 30))),
+                  resilience=ResilienceConfig(max_retries=0))
+    req = eng.submit(prompts[0], 4)
+    m = eng.run()
+    assert req.state == "failed" and req.fail_reason == FAIL_NUMERIC
+    assert req.slot is None and eng.pool.n_free == eng.max_slots
+    assert m["faults"]["failed_requests"] == 1
+    assert eng.total_drained == eng.queue.submitted
+    assert req.metrics()["fail_reason"] == FAIL_NUMERIC
+
+
+def test_deadline_cancels_queued_and_mid_decode():
+    """deadline_s=0 cancels while queued; a live request pushed past its
+    deadline by slow steps is cancelled mid-decode — in both cases the
+    slot/pages come back and the reason code is 'deadline'."""
+    cfg = _cfg()
+    prompts = _workload(cfg)
+    eng = _engine(cfg)
+    doomed = eng.submit(prompts[0], 8, deadline_s=0.0)
+    ok = eng.submit(prompts[1], 4)
+    m = eng.run()
+    assert doomed.state == "failed" and doomed.fail_reason == FAIL_DEADLINE
+    assert doomed.tokens == [] and doomed.slot is None
+    assert ok.state == "done" and len(ok.tokens) == 4
+    assert m["faults"]["degradations"]["deadline_cancellations"] == 1
+
+    # mid-decode: every step sleeps 50ms against a 600ms deadline — step 1's
+    # sweep (one sleep elapsed, ~0.55s of slack for scheduler noise) admits
+    # and prefills the request, but finishing needs >= 30 slow steps (1.5s),
+    # so a later sweep is guaranteed to cancel it live, first token emitted
+    slow = _engine(cfg, max_len=40,
+                   faults=FaultConfig(slow_at=tuple(range(1, 200)),
+                                      slow_s=0.05))
+    req = slow.submit(prompts[0], 30, deadline_s=0.6)
+    slow.run()
+    assert req.state == "failed" and req.fail_reason == FAIL_DEADLINE
+    assert req.first_token_t is not None      # it was live when cancelled
+    assert req.slot is None and slow.pool.n_free == slow.max_slots
+
+
+def test_paged_chaos_drains_token_exact_and_reclaims():
+    """NaN + forced-OOM storm on the paged engine: everything drains,
+    survivors are token-exact vs the fault-free run, and the page pool
+    comes back refcount-clean (no leaked pages/slots)."""
+    cfg = _cfg()
+    prompts = _workload(cfg)
+    kw = dict(cache="paged", page_size=4, n_pages=40, paged_attn="jax")
+    ref = _reference(cfg, prompts, **kw)
+    eng = _engine(cfg, faults=FaultConfig(nan_at=(3,), oom_at=(4, 6),
+                                          oom_burst=2), **kw)
+    reqs = [eng.submit(p, 8) for p in prompts]
+    m = eng.run()
+    assert m["faults"]["injected"]["page_oom"] == 2
+    for r, want in zip(reqs, ref):
+        assert r.state == "done" and list(r.tokens) == want, r.rid
+    assert eng.pool.all_reclaimed
+    assert eng.total_drained == eng.queue.submitted
+
+
+def test_spec_auto_disable_degradation():
+    """Ladder rung 1: with an unreachable acceptance floor the engine
+    disables speculation after the rolling window fills, finishes the
+    workload on plain decode, and stays token-exact."""
+    from repro.spec import SpecConfig
+    cfg = _cfg()
+    prompts = _workload(cfg)
+    spec = SpecConfig(k=2)
+    ref = _reference(cfg, prompts, spec=spec)
+    eng = _engine(cfg, spec=spec,
+                  resilience=ResilienceConfig(spec_accept_floor=1.1,
+                                              spec_floor_window=2))
+    reqs = [eng.submit(p, 8) for p in prompts]
+    m = eng.run()
+    deg = m["faults"]["degradations"]
+    assert deg["spec_disabled"] and deg["spec_disables"] == 1
+    assert m["spec"]["disabled"]
+    assert [list(r.tokens) for r in reqs] == ref
+
+
+def test_spec_draft_fault_falls_back_token_exact():
+    """A draft-model fault downgrades that round to plain decode; the
+    stream (including the draft re-sync bookkeeping) stays token-exact."""
+    from repro.spec import SpecConfig
+    cfg = _cfg()
+    prompts = _workload(cfg)
+    spec = SpecConfig(k=2)
+    ref = _reference(cfg, prompts, spec=spec, slots=2)
+    eng = _engine(cfg, slots=2, spec=spec,
+                  faults=FaultConfig(draft_fail_at=(2, 4), nan_at=(3,)))
+    reqs = [eng.submit(p, 8) for p in prompts]
+    m = eng.run()
+    assert m["spec"]["draft_fallbacks"] == 2
+    assert m["faults"]["injected"]["draft_fail"] == 2
+    assert [list(r.tokens) for r in reqs] == ref
+
+
+def test_queue_pop_empty_raises_descriptive():
+    q = RequestQueue()
+    with pytest.raises(IndexError, match="empty RequestQueue"):
+        q.pop()
+    assert q.empty() and q.depth() == 0
+
+
+def test_serve_cli_chaos_smoke(capsys):
+    """--chaos end to end: all requests terminal, faults block emitted."""
+    metrics = serve.main(["--arch", "ternary-paper", "--reduced",
+                          "--requests", "6", "--slots", "2",
+                          "--prompt-len", "8", "--gen-lens", "2,6",
+                          "--chaos", "--max-retries", "2"])
+    out = json.loads(capsys.readouterr().out.strip().splitlines()[-1])
+    assert out["submitted"] == out["drained"] == 6
+    assert "faults" in out and "injected" in out["faults"]
+    done = sum(r["state"] == "done" for r in out["per_request"])
+    failed = sum(r["state"] == "failed" for r in out["per_request"])
+    assert done + failed == 6
+    assert metrics["faults"]["failed_requests"] == failed
