@@ -211,5 +211,50 @@ def autotune_sweep(quick: bool = False):
     assert roundtrip and len(tuner.entries()) >= len(shapes) - 1
 
 
+def fused_mlp_block(quick: bool = False):
+    """Fused ternary MLP (GEMM->act->GEMM, hidden act resident in VMEM,
+    DESIGN.md §12) vs the unfused chain.
+
+    The gated number is the *modeled* fused speedup at the pinned MLP
+    shape (m=512, d=1024, ff=4096): unfused re-reads the (m, ff) hidden
+    activation through HBM twice, fused never spills it, so the ratio is
+    machine-independent (``FusedMlpPlan.roofline()``). Correctness is the
+    bitwise fused==chain check at a CI-sized shape in interpret mode —
+    the same contract tests/test_fused_mlp.py pins across formats/phases.
+    """
+    from repro.kernels import ops
+
+    # modeled speedup at the pinned bench shape (CI-gated >= 1.2x: the
+    # recorded ratio is capped at 1.6 and check_regression's 25% ratio
+    # tolerance puts the floor at 1.6 * 0.75 = 1.2)
+    m, d, ff = 512, 1024, 4096
+    rng = np.random.default_rng(0)
+    wi = weights.pack(formats.random_ternary(rng, d, ff, 0.25), "dense2bit")
+    wg = weights.pack(formats.random_ternary(rng, d, ff, 0.25), "dense2bit")
+    wo = weights.pack(formats.random_ternary(rng, ff, d, 0.25), "dense2bit")
+    plan = ops.fused_mlp_plan(wi, wo, wg, m=m, impl="pallas", phase=None)
+    rl = plan.roofline()
+    speedup = rl["fused_speedup"]
+    record(f"fused_mlp/pinned_m={m},d={d},ff={ff}", rl["model_time_s"],
+           f"ratio={min(speedup, 1.6):.2f},modeled={speedup:.2f},"
+           f"unfused_bytes={int(rl['unfused_bytes'])},"
+           f"fused_bytes={int(rl['bytes'])}")
+    assert speedup >= 1.2, f"modeled fused speedup {speedup:.2f} < 1.2"
+
+    # bitwise parity at a CI-sized shape (interpret mode)
+    mc, dc, ffc = (16, 256, 512) if quick else (32, 512, 1024)
+    wi = weights.pack(formats.random_ternary(rng, dc, ffc, 0.25), "dense2bit")
+    wg = weights.pack(formats.random_ternary(rng, dc, ffc, 0.25), "dense2bit")
+    wo = weights.pack(formats.random_ternary(rng, ffc, dc, 0.25), "dense2bit")
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((mc, dc)),
+                    jnp.float32)
+    y_fused = ops.fused_mlp(x, wi, wo, wg, impl="pallas")
+    y_chain = ops.fused_mlp(x, wi, wo, wg, impl="chain")
+    exact = bool(jnp.all(y_fused == y_chain))
+    record("fused_mlp/interpret_bit_exact", 0.0,
+           f"exact={exact},m={mc},d={dc},ff={ffc}")
+    assert exact
+
+
 ALL = [block_sweep, value_compression, end_to_end_layer, pallas_kernel_check,
-       flash_kernel_check, sparsity_skip, autotune_sweep]
+       flash_kernel_check, sparsity_skip, autotune_sweep, fused_mlp_block]

@@ -94,6 +94,10 @@ class ModelConfig:
                                   # pallas = autotuned Pallas ternary_gemm,
                                   # xla = dense-decode XLA reference,
                                   # auto = pallas on TPU backends else xla
+    fused_mlp: str = "auto"       # auto | off — fuse packed MLP blocks into
+                                  # one kernel (GEMM->act->GEMM, hidden act
+                                  # resident in VMEM) when the Pallas path
+                                  # is active; bitwise-equal to unfused
 
     # --- numerics / memory ---
     dtype: str = "bfloat16"

@@ -23,6 +23,19 @@ Keys bucket M to the next power of two and sparsity to the paper's grid
 hit the same entry. Consumers: ``ops.ternary_gemm`` (block args default to
 the tuned shape), the ternary linear in ``models/layers.py``,
 ``benchmarks/kernel_bench.py``, and ``scripts/hillclimb.py``.
+
+**Cross-op fusion keys** (DESIGN.md §12): the fused MLP lowering plans one
+shared ``block_m`` plus per-projection (block_n, block_k) pairs for both
+weights of the chain. Those live under ``fused:...`` keys — five-int
+entries (``FusedBlockConfig``) in the same cache file, keyed on *both*
+weights' shapes under the existing phase keys::
+
+    "fused:m128:k1024:f4096:n1024:s1.0x1.0:pprefill": [128, 128, 512,
+                                                       128, 512]
+
+A fused entry is composed from the two per-GEMM entries on miss, so the
+fused kernel's K/N tiling always agrees with what the unfused chain would
+have used — that agreement is what makes the fused output bitwise equal.
 """
 from __future__ import annotations
 
@@ -34,7 +47,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.kernels.ternary_gemm import K_PER_WORD
 
-__all__ = ["BlockConfig", "Autotuner", "get_tuner", "DEFAULT_CACHE_PATH"]
+__all__ = ["BlockConfig", "FusedBlockConfig", "Autotuner", "get_tuner",
+           "DEFAULT_CACHE_PATH"]
 
 CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 DEFAULT_CACHE_PATH = os.path.join("experiments", "autotune_cache.json")
@@ -83,6 +97,30 @@ class BlockConfig:
         return x + w + dec + acc + out
 
 
+@dataclasses.dataclass(frozen=True)
+class FusedBlockConfig:
+    """Block plan for one fused MLP pair: a shared M tile plus the up- and
+    down-projection's own (N, K) tiles. Serialized as a five-int cache
+    entry (the arity is what distinguishes it from ``BlockConfig`` on
+    load)."""
+
+    block_m: int
+    block_n1: int
+    block_k1: int
+    block_n2: int
+    block_k2: int
+
+    def as_list(self) -> List[int]:
+        return [self.block_m, self.block_n1, self.block_k1,
+                self.block_n2, self.block_k2]
+
+    def up(self) -> BlockConfig:
+        return BlockConfig(self.block_m, self.block_n1, self.block_k1)
+
+    def down(self) -> BlockConfig:
+        return BlockConfig(self.block_m, self.block_n2, self.block_k2)
+
+
 def _pow2_bucket(v: int) -> int:
     return 1 << max(0, int(v - 1).bit_length())
 
@@ -111,6 +149,20 @@ def cache_key(m: int, k: int, n: int, sparsity: float = 1.0,
     return key
 
 
+def fused_cache_key(m: int, k: int, ff: int, n: int,
+                    sparsity_up: float = 1.0, sparsity_down: float = 1.0,
+                    phase: Optional[str] = None) -> str:
+    """Key for a fused MLP pair: both weights' shapes (K->FF up, FF->N
+    down) and both occupancies are the problem identity, under the same
+    phase suffix the per-GEMM keys use."""
+    key = (f"fused:m{_pow2_bucket(m)}:k{k}:f{ff}:n{n}"
+           f":s{_sparsity_bucket(sparsity_up)}"
+           f"x{_sparsity_bucket(sparsity_down)}")
+    if phase is not None:
+        key += f":p{phase}"
+    return key
+
+
 class Autotuner:
     """Process-wide block-shape cache with JSON persistence."""
 
@@ -130,11 +182,20 @@ class Autotuner:
         try:
             with open(self._path) as f:
                 data = json.load(f)
-            for key, blk in data.get("entries", {}).items():
-                self._cache[key] = BlockConfig(*map(int, blk))
-        except (OSError, ValueError, TypeError):
-            # unreadable / corrupt / wrong-arity cache: degrade to re-tuning
-            self._cache.clear()
+        except (OSError, ValueError):
+            return            # unreadable / corrupt file: degrade to re-tune
+        for key, blk in data.get("entries", {}).items():
+            # arity decides the entry type: 3 ints = one GEMM, 5 = a fused
+            # pair. A malformed entry drops alone — it must not take the
+            # rest of the cache down with it.
+            try:
+                ints = [int(v) for v in blk]
+            except (ValueError, TypeError):
+                continue
+            if len(ints) == 3:
+                self._cache[key] = BlockConfig(*ints)
+            elif len(ints) == 5:
+                self._cache[key] = FusedBlockConfig(*ints)
 
     def save(self) -> None:
         entries = {key: cfg.as_list() for key, cfg in sorted(
@@ -222,7 +283,8 @@ class Autotuner:
         with self._lock:
             self._load()
             hit = self._cache.get(key)
-        if hit is not None and (fixed_n is None or hit.block_n == fixed_n) \
+        if isinstance(hit, BlockConfig) \
+                and (fixed_n is None or hit.block_n == fixed_n) \
                 and (fixed_k is None or hit.block_k == fixed_k):
             return hit
 
@@ -246,6 +308,50 @@ class Autotuner:
                 self.save()
             except OSError:
                 pass      # read-only FS: in-process cache still works
+        return best
+
+    def lookup_fused(self, m: int, k: int, ff: int, n: int,
+                     sparsity_up: float = 1.0, sparsity_down: float = 1.0,
+                     fixed_n1: Optional[int] = None,
+                     fixed_k1: Optional[int] = None,
+                     fixed_n2: Optional[int] = None,
+                     fixed_k2: Optional[int] = None,
+                     phase: Optional[str] = None) -> FusedBlockConfig:
+        """Block plan for a fused ``(K->FF) -> act -> (FF->N)`` MLP pair.
+
+        On a miss the entry is *composed* from the two per-GEMM ``lookup``
+        results (so fused and unfused chains always tile K/N identically —
+        the bitwise-equality contract) with the shared M tile taken as the
+        smaller of the two, then persisted under the fused key so later
+        plans are a single cache hit. ``fixed_n1``/``fixed_k1`` pin the
+        up-projection tiles when the pack layout dictates them (Tiled
+        weights)."""
+        key = fused_cache_key(m, k, ff, n, sparsity_up, sparsity_down,
+                              phase=phase)
+        with self._lock:
+            self._load()
+            hit = self._cache.get(key)
+        if isinstance(hit, FusedBlockConfig) \
+                and (fixed_n1 is None or hit.block_n1 == fixed_n1) \
+                and (fixed_k1 is None or hit.block_k1 == fixed_k1) \
+                and (fixed_n2 is None or hit.block_n2 == fixed_n2) \
+                and (fixed_k2 is None or hit.block_k2 == fixed_k2):
+            return hit
+        up = self.lookup(m, k, ff, sparsity=sparsity_up,
+                         impl="skip" if fixed_n1 is not None else "dense",
+                         fixed_n=fixed_n1, fixed_k=fixed_k1, phase=phase)
+        down = self.lookup(m, ff, n, sparsity=sparsity_down,
+                           impl="skip" if fixed_n2 is not None else "dense",
+                           fixed_n=fixed_n2, fixed_k=fixed_k2, phase=phase)
+        best = FusedBlockConfig(min(up.block_m, down.block_m),
+                                up.block_n, up.block_k,
+                                down.block_n, down.block_k)
+        with self._lock:
+            self._cache[key] = best
+            try:
+                self.save()
+            except OSError:
+                pass
         return best
 
     def entries(self) -> Dict[str, BlockConfig]:

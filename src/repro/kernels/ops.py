@@ -20,8 +20,9 @@ GEMM kernels.
 Registered impls:
 
 * ``dense2bit``: ``dense`` (Pallas dense-decode), ``ref``;
-* ``tiled``:     ``skip`` (scalar-prefetch tile skipping, DESIGN.md §3),
-                 ``dense`` fallback, ``ref``;
+* ``tiled``:     ``skip_db`` (double-buffered-DMA tile skipping,
+                 DESIGN.md §12), ``skip`` (scalar-prefetch tile skipping,
+                 DESIGN.md §3), ``dense`` fallback, ``ref``;
 * ``bitplane``:  ``bitplane``, ``bitplane_factorized`` (MXU
                  ``Y=(X@P)-(X@M)``, DESIGN.md §4), ``ref``;
 * ``base3``:     ``ref`` (LUT-gather decode — the paper's dropped format,
@@ -30,11 +31,18 @@ Registered impls:
 New formats/kernels plug in via ``weights.register_format`` +
 ``register_kernel`` without touching any call site.
 
-**Deprecation shim**: the pre-container operand union (raw ``(K/16, N)``
-uint32 code matrix, ``formats.TiledTernary``, ``(plus, minus)`` tuple) is
-still accepted — it is wrapped into the equivalent container with a
-``DeprecationWarning`` and produces bit-identical results. This shim is the
-only place the old union exists.
+A third registry fuses whole MLP blocks: ``fused_mlp(x, w_in, w_out,
+w_gate)`` runs ``GEMM -> bias -> activation -> GEMM`` as one kernel with
+the hidden activation resident in VMEM (``impl="pallas"``), falling back
+to the literal unfused chain (``impl="chain"``) for formats the fused
+kernel does not cover. Both are pinned bitwise-equal, so adoption in
+``models.layers.mlp_apply`` is a pure performance decision.
+
+**Removed shim**: the pre-container operand union (raw ``(K/16, N)``
+uint32 code matrix, ``formats.TiledTernary``, ``(plus, minus)`` tuple)
+went through its two deprecation cycles (PR 3 warned, this PR errors) —
+``ternary_gemm`` now raises ``TypeError`` pointing at ``weights.pack`` /
+``kernels.pack_weights*``.
 
 Every path defines a custom VJP (dY/dX = g @ T^T; packed weights are
 non-differentiable — training uses the QAT/STE latent-weight path in
@@ -46,7 +54,6 @@ import contextlib
 import contextvars
 import dataclasses
 import functools
-import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -56,13 +63,17 @@ import numpy as np
 from repro.core import formats, weights
 from repro.kernels import ref
 from repro.kernels import autotune as autotune_lib
+from repro.kernels.fused_mlp import ACTIVATIONS, fused_mlp_pallas
 from repro.kernels.ternary_gemm import (K_PER_WORD, ternary_gemm_pallas,
+                                        ternary_gemm_skip_db_pallas,
                                         ternary_gemm_skip_pallas)
 from repro.kernels.ternary_gemm_bitplane import (K_PER_BYTE,
                                                  ternary_gemm_bitplane)
 
 __all__ = ["ternary_gemm", "ternary_gemm_plan", "GemmPlan", "KernelImpl",
            "register_kernel", "kernel_registry", "precompute_plans",
+           "fused_mlp", "fused_mlp_plan", "FusedMlpPlan",
+           "register_fused", "fused_registry", "precompute_fused_plans",
            "pack_weights", "pack_weights_tiled",
            "serving_phase", "current_phase", "SERVING_PHASES",
            "SKIP_OCCUPANCY_CUTOFF",
@@ -135,12 +146,14 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
 # 2-bit-code family (dense + skipping share the packed format and the VJP)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10, 11, 12))
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(6, 7, 8, 9, 10, 11, 12, 13))
 def _gemm_2bit(x, w_packed, scale, bias, kt_idx, kt_cnt,
                n, block_m, block_n, block_k, fuse_prelu, prelu_alpha,
-               interpret):
-    """Forward: dense kernel when kt_idx is None, else the skipping kernel.
-    Returns the (m, n)-sliced logical output."""
+               interpret, db):
+    """Forward: dense kernel when kt_idx is None, else one of the skipping
+    kernels (``db`` selects the double-buffered-DMA variant). Returns the
+    (m, n)-sliced logical output."""
     m = x.shape[0]
     bm = min(block_m, max(8, 1 << (m - 1).bit_length()))
     sp = None if scale is None else _pad_to(scale.reshape(-1), 0, block_n)
@@ -158,7 +171,9 @@ def _gemm_2bit(x, w_packed, scale, bias, kt_idx, kt_cnt,
             fuse_prelu=fuse_prelu, prelu_alpha=prelu_alpha,
             interpret=interpret)
     else:
-        y = ternary_gemm_skip_pallas(
+        skip_kernel = (ternary_gemm_skip_db_pallas if db
+                       else ternary_gemm_skip_pallas)
+        y = skip_kernel(
             xp, w_packed, kt_idx, kt_cnt, sp, bp,
             block_m=bm, block_n=block_n, block_k=block_k,
             fuse_prelu=fuse_prelu, prelu_alpha=prelu_alpha,
@@ -173,7 +188,7 @@ def _gemm_2bit_fwd(x, w_packed, scale, bias, kt_idx, kt_cnt, *static):
                y if fuse_prelu else None)
 
 
-def _gemm_2bit_bwd(n, bm, bn, bk, fuse_prelu, prelu_alpha, interpret,
+def _gemm_2bit_bwd(n, bm, bn, bk, fuse_prelu, prelu_alpha, interpret, db,
                    res, g):
     x, w_packed, scale, bias, kt_idx, kt_cnt, y = res
     kk = x.shape[1]  # logical K is x's trailing dim (x is unpadded)
@@ -245,7 +260,22 @@ class GemmPlan:
     """Inspectable dispatch decision for one ternary GEMM.
 
     Produced by ``ternary_gemm_plan``; consumed by the registered lowering.
-    ``block_*`` are ``None`` for reference (non-Pallas) impls."""
+    ``block_*`` are ``None`` for reference (non-Pallas) impls.
+
+    Example (doctest-runnable)::
+
+        >>> import numpy as np
+        >>> from repro.core import weights
+        >>> from repro.kernels import ops
+        >>> w = weights.pack(np.sign(np.random.randn(512, 256)), "dense2bit")
+        >>> plan = ops.ternary_gemm_plan(w, m=128)
+        >>> (plan.format, plan.impl, plan.m, plan.k, plan.n)
+        ('dense2bit', 'dense', 128, 512, 256)
+        >>> sorted(plan.roofline())     # doctest: +NORMALIZE_WHITESPACE
+        ['achieved_flops', 'arithmetic_intensity', 'bound', 'bytes',
+         'ceiling_flops', 'flops', 'headroom', 'model_time_s',
+         'peak_flops']
+    """
 
     format: str
     impl: str
@@ -260,6 +290,54 @@ class GemmPlan:
     interpret: bool
     fuse_prelu: bool = False
     prelu_alpha: float = 0.25
+
+    def traffic(self) -> Dict[str, float]:
+        """Modeled FLOPs and HBM bytes for one pass, from the plan's block
+        shapes and the pack-time occupancy metadata. Skip-family impls
+        scale the K axis by the occupied-tile fraction — the same model
+        the autotuner scores with, so plan and tune never disagree."""
+        skipping = self.impl in ("skip", "skip_db")
+        occ = self.occupancy if skipping else 1.0
+        bm = self.block_m or min(128, max(8, 1 << (self.m - 1).bit_length()))
+        bn = self.block_n or 128
+        bk = self.block_k or 256
+        mp = -(-self.m // bm) * bm
+        npad = -(-self.n // bn) * bn
+        kp = -(-self.k // bk) * bk
+        m_tiles, n_tiles = mp // bm, npad // bn
+        k_steps = max(1, round((kp // bk) * occ))
+        flops = 2.0 * mp * npad * (k_steps * bk)
+        x_bytes = m_tiles * n_tiles * k_steps * bm * bk * 2
+        w_bytes = m_tiles * n_tiles * k_steps * (bk // K_PER_WORD) * bn * 4
+        out_bytes = mp * npad * 2
+        return {"flops": flops,
+                "bytes": float(x_bytes + w_bytes + out_bytes)}
+
+    def roofline(self) -> Dict[str, float]:
+        """Roofline position of this plan on the modeled machine
+        (``autotune.HBM_BW`` / ``autotune.PEAK_FLOPS``): achieved vs
+        ceiling FLOP/s, arithmetic intensity, and remaining headroom.
+        Emitted per registered kernel by ``benchmarks/roofline.py``."""
+        t = self.traffic()
+        ai = t["flops"] / max(t["bytes"], 1.0)
+        ceiling = min(autotune_lib.PEAK_FLOPS, ai * autotune_lib.HBM_BW)
+        # achieved = modeled time for this plan's tile traffic (the same
+        # score the tuner minimized, incl. grid + VMEM-pressure overheads)
+        cfg = autotune_lib.BlockConfig(
+            self.block_m or 128, self.block_n or 128, self.block_k or 256)
+        t_model = autotune_lib.Autotuner()._model_score(
+            cfg, self.m, self.k, self.n,
+            self.occupancy if self.impl in ("skip", "skip_db") else 1.0)
+        achieved = t["flops"] / max(t_model, 1e-12)
+        return {"flops": t["flops"], "bytes": t["bytes"],
+                "arithmetic_intensity": ai,
+                "ceiling_flops": ceiling,
+                "achieved_flops": achieved,
+                "peak_flops": autotune_lib.PEAK_FLOPS,
+                "model_time_s": t_model,
+                "headroom": max(0.0, 1.0 - achieved / max(ceiling, 1.0)),
+                "bound": ("memory" if ceiling < autotune_lib.PEAK_FLOPS
+                          else "compute")}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -287,7 +365,28 @@ def register_kernel(fmt: str, impl: str, *, priority: int = 0,
                     plan_blocks: Optional[Callable] = None):
     """Decorator registering a lowering for ``(format, impl)``. The single
     extension point for new kernels — dispatch, ``impl="auto"`` selection
-    and ``ternary_gemm_plan`` pick it up with no call-site changes."""
+    and ``ternary_gemm_plan`` pick it up with no call-site changes.
+
+    ``predicate(w, m, phase)`` gates ``impl="auto"`` (highest admissible
+    ``priority`` wins); ``plan_blocks(w, m, phase, bm, bn, bk)`` resolves
+    block shapes (``None`` entries usually consult the autotuner);
+    the decorated ``fn(plan, x, w, scale, bias)`` executes.
+
+    Example (doctest-runnable) — a reference lowering that only admits
+    GEMV-shaped dispatches::
+
+        >>> import numpy as np
+        >>> from repro.core import weights
+        >>> from repro.kernels import ops, ref
+        >>> @ops.register_kernel("dense2bit", "gemv_ref", priority=1,
+        ...                      predicate=lambda w, m, phase: m == 1)
+        ... def _lower_gemv(plan, x, w, scale, bias):
+        ...     return ref.packed2bit_matmul(x, w.packed, w.k)[:, :w.n]
+        >>> w = weights.pack(np.sign(np.random.randn(64, 32)), "dense2bit")
+        >>> ops.ternary_gemm_plan(w, m=1, impl="gemv_ref").impl
+        'gemv_ref'
+        >>> del ops._KERNELS[("dense2bit", "gemv_ref")]   # leave no trace
+    """
 
     def deco(fn):
         _KERNELS[(fmt, impl)] = KernelImpl(
@@ -321,19 +420,25 @@ def _blocks_dense(w, m, phase, bm, bn, bk):
     return bm, bn, bk
 
 
-def _blocks_skip(w, m, phase, bm, bn, bk):
-    # Pack-time tile shapes dictate the kernel's K/N blocks.
-    if bn is not None and bn != w.tile_n:
-        raise ValueError(f"impl='skip': block_n={bn} must equal the pack's "
-                         f"tile_n={w.tile_n}")
-    if bk is not None and bk != w.tile_k:
-        raise ValueError(f"impl='skip': block_k={bk} must equal the pack's "
-                         f"tile_k={w.tile_k}")
-    if bm is None:
-        bm = autotune_lib.get_tuner().lookup(
-            m, w.k, w.n, sparsity=w.occupancy(), impl="skip",
-            fixed_n=w.tile_n, fixed_k=w.tile_k, phase=phase).block_m
-    return bm, w.tile_n, w.tile_k
+def _blocks_skip_impl(impl):
+    def plan(w, m, phase, bm, bn, bk):
+        # Pack-time tile shapes dictate the kernel's K/N blocks.
+        if bn is not None and bn != w.tile_n:
+            raise ValueError(f"impl={impl!r}: block_n={bn} must equal the "
+                             f"pack's tile_n={w.tile_n}")
+        if bk is not None and bk != w.tile_k:
+            raise ValueError(f"impl={impl!r}: block_k={bk} must equal the "
+                             f"pack's tile_k={w.tile_k}")
+        if bm is None:
+            bm = autotune_lib.get_tuner().lookup(
+                m, w.k, w.n, sparsity=w.occupancy(), impl=impl,
+                fixed_n=w.tile_n, fixed_k=w.tile_k, phase=phase).block_m
+        return bm, w.tile_n, w.tile_k
+    return plan
+
+
+_blocks_skip = _blocks_skip_impl("skip")
+_blocks_skip_db = _blocks_skip_impl("skip_db")
 
 
 def _blocks_bitplane(impl):
@@ -370,7 +475,8 @@ def _lower_dense(plan, x, w, scale, bias):
     _require_2d(w, wp)
     return _gemm_2bit(x, wp[:, :w.n], scale, bias, None, None,
                       w.n, plan.block_m, plan.block_n, plan.block_k,
-                      plan.fuse_prelu, plan.prelu_alpha, plan.interpret)
+                      plan.fuse_prelu, plan.prelu_alpha, plan.interpret,
+                      False)
 
 
 @register_kernel("dense2bit", "ref", plan_blocks=_no_blocks)
@@ -384,6 +490,22 @@ def _lower_dense_ref(plan, x, w, scale, bias):
 
 # --- tiled lowerings --------------------------------------------------------
 
+@register_kernel("tiled", "skip_db", priority=12,
+                 predicate=lambda w, m, phase:
+                     w.occupancy() <= SKIP_OCCUPANCY_CUTOFF,
+                 plan_blocks=_blocks_skip_db)
+def _lower_skip_db(plan, x, w, scale, bias):
+    # Same occupied-tile walk as "skip", but the kernel stages each tile
+    # through explicit double-buffered make_async_copy pipelines so the
+    # next tile's DMA overlaps the current tile's MXU work (DESIGN.md §12).
+    # Bitwise identical to "skip"/"dense" (same ascending-K accumulation).
+    return _gemm_2bit(x, jnp.asarray(w.packed), scale, bias,
+                      jnp.asarray(w.kt_indices), jnp.asarray(w.kt_counts),
+                      w.n, plan.block_m, plan.block_n, plan.block_k,
+                      plan.fuse_prelu, plan.prelu_alpha, plan.interpret,
+                      True)
+
+
 @register_kernel("tiled", "skip", priority=10,
                  predicate=lambda w, m, phase:
                      w.occupancy() <= SKIP_OCCUPANCY_CUTOFF,
@@ -392,7 +514,8 @@ def _lower_skip(plan, x, w, scale, bias):
     return _gemm_2bit(x, jnp.asarray(w.packed), scale, bias,
                       jnp.asarray(w.kt_indices), jnp.asarray(w.kt_counts),
                       w.n, plan.block_m, plan.block_n, plan.block_k,
-                      plan.fuse_prelu, plan.prelu_alpha, plan.interpret)
+                      plan.fuse_prelu, plan.prelu_alpha, plan.interpret,
+                      False)
 
 
 @register_kernel("tiled", "dense", priority=5, plan_blocks=_blocks_dense)
@@ -401,7 +524,7 @@ def _lower_tiled_dense(plan, x, w, scale, bias):
     return _gemm_2bit(x, jnp.asarray(w.packed)[:, :w.n], scale, bias,
                       None, None, w.n, plan.block_m, plan.block_n,
                       plan.block_k, plan.fuse_prelu, plan.prelu_alpha,
-                      plan.interpret)
+                      plan.interpret, False)
 
 
 @register_kernel("tiled", "ref", plan_blocks=_no_blocks)
@@ -497,7 +620,18 @@ def register_paged_attn(impl: str, *, priority: int = 0,
 
 
 def paged_attention_registry() -> Dict[str, "PagedAttnImpl"]:
-    """Snapshot of the registered paged-attention impl table."""
+    """Snapshot of the registered paged-attention impl table.
+
+    Example (doctest-runnable) — the two stock lowerings are always
+    present, and each entry carries its selection metadata::
+
+        >>> from repro.kernels import ops
+        >>> table = ops.paged_attention_registry()
+        >>> sorted(table)
+        ['jax', 'pallas']
+        >>> table["jax"].priority <= table["pallas"].priority
+        True
+    """
     _ensure_paged_impls()
     return dict(_PAGED_ATTN)
 
@@ -538,39 +672,26 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, lengths, *,
 
 def _coerce_weight(w: Any, k: Optional[int],
                    xk: Optional[int]) -> weights.TernaryWeight:
-    """Deprecation shim: wrap the pre-container operand union into the
-    equivalent typed container (bit-identical lowering)."""
+    """Accept only typed containers. The PR-3-era raw-operand union (raw
+    packed word matrix / ``formats.TiledTernary`` / ``(plus, minus)``
+    tuple) finished its deprecation cycle — name the migration target in
+    the error instead of silently wrapping."""
     if isinstance(w, weights.TernaryWeight):
         return w
-    warnings.warn(
-        "passing a raw packed array / formats.TiledTernary / (plus, minus) "
-        "tuple to ternary_gemm is deprecated; pack into a "
-        "repro.core.weights.TernaryWeight (weights.pack / "
-        "kernels.pack_weights*) instead",
-        DeprecationWarning, stacklevel=3)
     if isinstance(w, formats.TiledTernary):
-        return weights.Tiled.from_tiled(w)
-    if isinstance(w, (tuple, list)):
-        if len(w) != 2:
-            raise TypeError(f"bitplane operand must be a (plus, minus) "
-                            f"pair, got length {len(w)}")
-        kk = k if k is not None else xk
-        if kk is None:
-            raise ValueError("cannot infer K for a bare bitplane pair; "
-                             "pass k= or use weights.Bitplane")
-        return weights.Bitplane.from_planes(w[0], w[1], k=kk)
-    if getattr(w, "ndim", 0) == 2:
-        kk = k if k is not None else xk
-        if kk is None:
-            # Don't guess from the padded word count: a plan built on the
-            # wrong K would misdescribe (and mis-warm the autotuner for)
-            # the dispatch ternary_gemm later executes.
-            raise ValueError("cannot infer K for a raw packed word matrix; "
-                             "pass k= or use weights.Dense2Bit")
-        return weights.Dense2Bit.from_packed(w, k=kk)
+        hint = "weights.Tiled.from_tiled(w) or re-pack via weights.pack"
+    elif isinstance(w, (tuple, list)) and len(w) == 2:
+        hint = "weights.Bitplane.from_planes(plus, minus, k=K)"
+    elif getattr(w, "ndim", 0) == 2:
+        hint = ("weights.Dense2Bit.from_packed(w, k=K) or "
+                "kernels.pack_weights(ternary)")
+    else:
+        hint = "repro.core.weights.pack(w, format)"
     raise TypeError(
-        f"unsupported ternary_gemm weight operand {type(w).__name__}; "
-        f"expected a repro.core.weights.TernaryWeight")
+        f"ternary_gemm no longer accepts raw weight operands "
+        f"(got {type(w).__name__}); the DeprecationWarning shim was "
+        f"removed after two release cycles. Pack into a typed container: "
+        f"{hint}.")
 
 
 def _validate_k(w: weights.TernaryWeight, xk: int, k: Optional[int]) -> None:
@@ -602,11 +723,27 @@ def ternary_gemm_plan(
 ) -> GemmPlan:
     """Plan (but do not run) a ternary GEMM: registry + autotuner -> an
     inspectable ``GemmPlan``. ``phase`` defaults to the ambient
-    ``serving_phase`` scope; ``k`` is only needed to plan a *deprecated*
-    raw operand, whose logical K the container union carried implicitly.
-    Planning uses only static container metadata, so it is trace-safe and
-    cheap to precompute (the serving engine warms phase-keyed plans for
-    every packed weight at build time)."""
+    ``serving_phase`` scope; ``k``, if given, is validated against the
+    container. Planning uses only static container metadata, so it is
+    trace-safe and cheap to precompute (the serving engine warms
+    phase-keyed plans for every packed weight at build time).
+
+    Example (doctest-runnable) — a sparse tiled pack below the occupancy
+    cutoff selects the double-buffered skipping kernel, and the same
+    weight plans independently per serving phase::
+
+        >>> import numpy as np
+        >>> from repro.core import weights
+        >>> from repro.kernels import ops
+        >>> t = np.sign(np.random.randn(512, 256))
+        >>> t[:256] = 0                       # half the K tiles are empty
+        >>> w = weights.pack(t, "tiled", tile_k=256, tile_n=128)
+        >>> plan = ops.ternary_gemm_plan(w, m=64)
+        >>> (plan.impl, plan.block_n, plan.block_k)
+        ('skip_db', 128, 256)
+        >>> ops.ternary_gemm_plan(w, m=8, phase="decode").phase
+        'decode'
+    """
     w = _coerce_weight(w, k, None)
     if phase == "__current__":
         phase = current_phase()
@@ -662,6 +799,407 @@ def precompute_plans(params, *, prefill_ms=(), decode_ms=(), verify_ms=(),
 
 
 # ---------------------------------------------------------------------------
+# Fused MLP registry (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+#
+# Third registry, same discipline: ``fused_mlp`` runs the whole
+# ``GEMM -> bias -> activation -> GEMM`` block through one registered
+# lowering. ``"pallas"`` is the fused kernel (hidden activation resident in
+# VMEM, weights streamed with double-buffered DMA); ``"chain"`` is the
+# literal unfused call chain and covers every format the fused kernel does
+# not. The two are pinned bitwise-equal (tests/test_fused_mlp.py), which
+# is what lets ``models.layers.mlp_apply`` adopt the fusion transparently.
+
+_FUSED_FORMATS = ("dense2bit", "tiled")
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedMlpPlan:
+    """Dispatch decision for one fused MLP block.
+
+    ``block_n1/block_k1`` tile the up/gate projection, ``block_n2/
+    block_k2`` the down projection; all are taken from the *chain's* own
+    ``GemmPlan``s (via the fused autotune key), so the fused kernel tiles
+    K identically to the unfused chain — the bitwise-equality contract."""
+
+    impl: str
+    format_up: str
+    format_down: str
+    m: int
+    k: int
+    ff: int
+    n: int
+    gated: bool
+    activation: str
+    block_m: Optional[int]
+    block_n1: Optional[int]
+    block_k1: Optional[int]
+    block_n2: Optional[int]
+    block_k2: Optional[int]
+    phase: Optional[str]
+    occupancy_up: float
+    occupancy_down: float
+    interpret: bool
+
+    def sub_plans(self) -> Tuple[GemmPlan, GemmPlan]:
+        """The two chained ``GemmPlan``s this fusion replaces (gate shares
+        the up plan) — the roofline baseline."""
+        mk = dict(phase=self.phase, interpret=self.interpret)
+        up = GemmPlan(format=self.format_up, impl="dense", m=self.m,
+                      k=self.k, n=self.ff, block_m=self.block_m,
+                      block_n=self.block_n1, block_k=self.block_k1,
+                      occupancy=self.occupancy_up, **mk)
+        down = GemmPlan(format=self.format_down, impl="dense", m=self.m,
+                        k=self.ff, n=self.n, block_m=self.block_m,
+                        block_n=self.block_n2, block_k=self.block_k2,
+                        occupancy=self.occupancy_down, **mk)
+        return up, down
+
+    def roofline(self) -> Dict[str, float]:
+        """Fused vs unfused roofline: the chain's HBM traffic (both GEMMs,
+        plus the hidden activation's write + per-N-tile re-reads), the
+        fused kernel's (x and each weight once per M tile, h never leaves
+        VMEM), and the modeled speedup ratio the CI bench gates on."""
+        up, down = self.sub_plans()
+        n_up = 2 if self.gated else 1
+        unfused_bytes = n_up * up.traffic()["bytes"] \
+            + down.traffic()["bytes"]
+        bm = self.block_m or 128
+        mp = -(-self.m // bm) * bm
+        m_tiles = mp // bm
+        k1p = -(-self.k // (self.block_k1 or 256)) * (self.block_k1 or 256)
+        ff1 = -(-self.ff // (self.block_n1 or 128)) * (self.block_n1 or 128)
+        k2p = -(-self.ff // (self.block_k2 or 256)) * (self.block_k2 or 256)
+        n2p = -(-self.n // (self.block_n2 or 128)) * (self.block_n2 or 128)
+        w_up = (k1p // K_PER_WORD) * ff1 * 4
+        w_down = (k2p // K_PER_WORD) * n2p * 4
+        fused_bytes = float(
+            mp * k1p * 2                      # x: once per M tile
+            + m_tiles * (n_up * w_up + w_down)  # weights streamed per tile
+            + mp * n2p * 2)                   # final output write
+        nf1 = ff1 // (self.block_n1 or 128)
+        nf2 = n2p // (self.block_n2 or 128)
+        t_fused = (fused_bytes / autotune_lib.HBM_BW
+                   + m_tiles * (nf1 + nf2) * 1e-6)
+        tuner = autotune_lib.Autotuner()
+        t_unfused = n_up * tuner._model_score(
+            autotune_lib.BlockConfig(bm, self.block_n1 or 128,
+                                     self.block_k1 or 256),
+            self.m, self.k, self.ff, 1.0) \
+            + tuner._model_score(
+                autotune_lib.BlockConfig(bm, self.block_n2 or 128,
+                                         self.block_k2 or 256),
+                self.m, self.ff, self.n, 1.0)
+        flops = 2.0 * self.m * self.ff * (n_up * self.k + self.n)
+        ai = flops / max(fused_bytes, 1.0)
+        ceiling = min(autotune_lib.PEAK_FLOPS, ai * autotune_lib.HBM_BW)
+        achieved = flops / max(t_fused, 1e-12)
+        return {"flops": flops,
+                "bytes": fused_bytes,
+                "unfused_bytes": float(unfused_bytes),
+                "arithmetic_intensity": ai,
+                "ceiling_flops": ceiling,
+                "achieved_flops": achieved,
+                "peak_flops": autotune_lib.PEAK_FLOPS,
+                "model_time_s": t_fused,
+                "unfused_model_time_s": t_unfused,
+                "fused_speedup": t_unfused / max(t_fused, 1e-12),
+                "headroom": max(0.0, 1.0 - achieved / max(ceiling, 1.0)),
+                "bound": ("memory" if ceiling < autotune_lib.PEAK_FLOPS
+                          else "compute")}
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedImpl:
+    """One registered fused-MLP lowering."""
+
+    impl: str
+    priority: int
+    predicate: Callable[..., bool]
+    fn: Callable
+
+
+_FUSED: Dict[str, FusedImpl] = {}
+
+
+def register_fused(impl: str, *, priority: int = 0,
+                   predicate: Optional[Callable] = None):
+    """Decorator registering a fused-MLP lowering under ``impl``.
+    ``predicate(w_in, w_out, w_gate, m, phase)`` gates ``impl="auto"``
+    selection (highest admissible priority wins)."""
+
+    def deco(fn):
+        _FUSED[impl] = FusedImpl(
+            impl=impl, priority=priority,
+            predicate=predicate or (lambda *a: True), fn=fn)
+        return fn
+
+    return deco
+
+
+def fused_registry() -> Dict[str, FusedImpl]:
+    """Snapshot of the registered fused-MLP impl table."""
+    return dict(_FUSED)
+
+
+def _chain_sub_plans(w_in, w_out, m, phase, interpret):
+    """The GemmPlans the unfused chain would dispatch — the fused kernel
+    must tile K/N exactly like these to stay bitwise-equal."""
+    up = ternary_gemm_plan(w_in, m, phase=phase, interpret=interpret)
+    down = ternary_gemm_plan(w_out, m, phase=phase, interpret=interpret)
+    return up, down
+
+
+def _fusable(w_in, w_out, w_gate, m, phase) -> bool:
+    for w in (w_in, w_out) + (() if w_gate is None else (w_gate,)):
+        if w.format_name not in _FUSED_FORMATS:
+            return False
+        if getattr(jnp.asarray(w.packed), "ndim", 2) != 2:
+            return False
+    if w_gate is not None:
+        # the gate rides the up projection's strips: same shape required,
+        # and its own chain plan must resolve the same K/N tiles
+        if (w_gate.k, w_gate.n) != (w_in.k, w_in.n):
+            return False
+        up = ternary_gemm_plan(w_in, m, phase=phase)
+        gate = ternary_gemm_plan(w_gate, m, phase=phase)
+        if (up.block_n, up.block_k) != (gate.block_n, gate.block_k):
+            return False
+    return True
+
+
+def fused_mlp_plan(w_in: Any, w_out: Any, w_gate: Any = None, *,
+                   m: int, impl: str = "auto", activation: str = "silu",
+                   phase: Optional[str] = "__current__",
+                   interpret: Optional[bool] = None) -> FusedMlpPlan:
+    """Plan (but do not run) a fused MLP block; the fused analogue of
+    ``ternary_gemm_plan``. Blocks resolve through the autotuner's fused
+    key (``autotune.fused_cache_key``) pinned to the chain sub-plans'
+    tiles, so fused and unfused tiling always agree."""
+    w_in = _coerce_weight(w_in, None, None)
+    w_out = _coerce_weight(w_out, None, None)
+    if w_gate is not None:
+        w_gate = _coerce_weight(w_gate, None, None)
+    if w_out.k != w_in.n:
+        raise ValueError(
+            f"fused_mlp: down projection expects K={w_in.n} (the up "
+            f"projection's N) but encodes K={w_out.k}")
+    if w_gate is not None and (w_gate.k, w_gate.n) != (w_in.k, w_in.n):
+        raise ValueError(
+            f"fused_mlp: gate shape {(w_gate.k, w_gate.n)} must match the "
+            f"up projection's {(w_in.k, w_in.n)}")
+    assert activation in ACTIVATIONS, activation
+    if phase == "__current__":
+        phase = current_phase()
+    interpret = _auto_interpret() if interpret is None else interpret
+
+    if impl == "auto":
+        cands = sorted(_FUSED.values(), key=lambda fi: -fi.priority)
+        if not cands:
+            raise ValueError("no fused-MLP lowerings registered")
+        chosen = next((fi for fi in cands
+                       if fi.predicate(w_in, w_out, w_gate, m, phase)),
+                      cands[-1])
+    else:
+        chosen = _FUSED.get(impl)
+        if chosen is None:
+            raise ValueError(f"no fused-MLP impl {impl!r} registered; "
+                             f"available: {sorted(_FUSED)}")
+
+    bm = bn1 = bk1 = bn2 = bk2 = None
+    if chosen.impl == "pallas":
+        up, down = _chain_sub_plans(w_in, w_out, m, phase, interpret)
+        cfg = autotune_lib.get_tuner().lookup_fused(
+            m, w_in.k, w_in.n, w_out.n,
+            sparsity_up=w_in.occupancy(), sparsity_down=w_out.occupancy(),
+            fixed_n1=up.block_n, fixed_k1=up.block_k,
+            fixed_n2=down.block_n, fixed_k2=down.block_k, phase=phase)
+        bm, bn1, bk1 = cfg.block_m, cfg.block_n1, cfg.block_k1
+        bn2, bk2 = cfg.block_n2, cfg.block_k2
+    return FusedMlpPlan(
+        impl=chosen.impl, format_up=w_in.format_name,
+        format_down=w_out.format_name, m=m, k=w_in.k, ff=w_in.n,
+        n=w_out.n, gated=w_gate is not None, activation=activation,
+        block_m=bm, block_n1=bn1, block_k1=bk1, block_n2=bn2,
+        block_k2=bk2, phase=phase, occupancy_up=w_in.occupancy(),
+        occupancy_down=w_out.occupancy(), interpret=interpret)
+
+
+def _apply_act(name: str, y: jnp.ndarray) -> jnp.ndarray:
+    if name == "silu":
+        return jax.nn.silu(y)
+    if name == "relu":
+        return jax.nn.relu(y)
+    return y
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(10, 11, 12, 13, 14, 15, 16, 17, 18))
+def _fused_2bit(x, wi_p, wo_p, wg_p, si, bi, sg, bg, so, bo,
+                n, ff, bm, bn1, bk1, bn2, bk2, activation, interpret):
+    return fused_mlp_pallas(
+        x, wi_p, wo_p, wg_p, scale_i=si, bias_i=bi, scale_g=sg, bias_g=bg,
+        scale_o=so, bias_o=bo, n=n, ff=ff, block_m=bm, block_n1=bn1,
+        block_k1=bk1, block_n2=bn2, block_k2=bk2, activation=activation,
+        interpret=interpret)
+
+
+def _fused_2bit_fwd(x, wi_p, wo_p, wg_p, si, bi, sg, bg, so, bo, *static):
+    y = _fused_2bit(x, wi_p, wo_p, wg_p, si, bi, sg, bg, so, bo, *static)
+    return y, (x, wi_p, wo_p, wg_p, si, bi, sg, bg, so, bo)
+
+
+def _fused_2bit_bwd(n, ff, bm, bn1, bk1, bn2, bk2, activation, interpret,
+                    res, g):
+    # Differentiate a reference chain over the decoded weights: packed
+    # operands are non-differentiable (same contract as _gemm_2bit_bwd),
+    # everything else routes through jax.vjp of the float chain.
+    x, wi_p, wo_p, wg_p, si, bi, sg, bg, so, bo = res
+    k = x.shape[1]
+    ti = formats.decode_2bit(wi_p, k, dtype=x.dtype)[:, :ff]
+    to = formats.decode_2bit(wo_p, ff, dtype=x.dtype)[:, :n]
+    tg = (None if wg_p is None
+          else formats.decode_2bit(wg_p, k, dtype=x.dtype)[:, :ff])
+
+    def epi(y, s, b):
+        if s is not None:
+            y = y * s.reshape(1, -1).astype(y.dtype)
+        if b is not None:
+            y = y + b.reshape(1, -1).astype(y.dtype)
+        return y
+
+    def chain(d):
+        yi = epi(jnp.dot(d["x"], ti, preferred_element_type=jnp.float32),
+                 d.get("si"), d.get("bi"))
+        if tg is not None:
+            yg = epi(jnp.dot(d["x"], tg,
+                             preferred_element_type=jnp.float32),
+                     d.get("sg"), d.get("bg"))
+            h = _apply_act(activation, yg) * yi
+        else:
+            h = _apply_act(activation, yi)
+        h = h.astype(x.dtype)
+        return epi(jnp.dot(h, to, preferred_element_type=jnp.float32),
+                   d.get("so"), d.get("bo")).astype(x.dtype)
+
+    diff = {"x": x}
+    for name, v in (("si", si), ("bi", bi), ("sg", sg), ("bg", bg),
+                    ("so", so), ("bo", bo)):
+        if v is not None:
+            diff[name] = v
+    _, vjp = jax.vjp(chain, diff)
+    (gd,) = vjp(g)
+    return (gd["x"], jnp.zeros_like(wi_p), jnp.zeros_like(wo_p),
+            None if wg_p is None else jnp.zeros_like(wg_p),
+            gd.get("si"), gd.get("bi"), gd.get("sg"), gd.get("bg"),
+            gd.get("so"), gd.get("bo"))
+
+
+_fused_2bit.defvjp(_fused_2bit_fwd, _fused_2bit_bwd)
+
+
+@register_fused("pallas", priority=10, predicate=_fusable)
+def _lower_fused_pallas(plan, x, w_in, w_out, w_gate):
+    wi = jnp.asarray(w_in.packed)[:, :w_in.n]
+    wo = jnp.asarray(w_out.packed)[:, :w_out.n]
+    wg = None if w_gate is None else jnp.asarray(w_gate.packed)[:, :w_gate.n]
+    return _fused_2bit(
+        x, wi, wo, wg, w_in.scale, w_in.bias,
+        None if w_gate is None else w_gate.scale,
+        None if w_gate is None else w_gate.bias,
+        w_out.scale, w_out.bias,
+        plan.n, plan.ff, plan.block_m, plan.block_n1, plan.block_k1,
+        plan.block_n2, plan.block_k2, plan.activation, plan.interpret)
+
+
+@register_fused("chain", priority=0)
+def _lower_fused_chain(plan, x, w_in, w_out, w_gate):
+    # The literal unfused chain: the bitwise-equality oracle for the fused
+    # kernel, and the fallback for formats it does not cover (bitplane,
+    # base3, stacked leaves). Each GEMM dispatches through the normal
+    # registry, so this is exactly what mlp_apply did before fusion.
+    yi = ternary_gemm(x, w_in, interpret=plan.interpret)
+    if w_gate is not None:
+        yg = ternary_gemm(x, w_gate, interpret=plan.interpret)
+        h = _apply_act(plan.activation, yg) * yi
+    else:
+        h = _apply_act(plan.activation, yi)
+    return ternary_gemm(h, w_out, interpret=plan.interpret)
+
+
+def fused_mlp(x: jnp.ndarray, w_in: Any, w_out: Any, w_gate: Any = None,
+              *, activation: str = "silu", impl: str = "auto",
+              interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Fused ternary MLP block: ``act(x @ Wg) * (x @ Wi) @ Wo`` (gate
+    optional; ``act(x @ Wi) @ Wo`` without it), scale/bias taken from each
+    container's own metadata.
+
+    ``impl="pallas"`` keeps the hidden activation in VMEM for the whole
+    block; ``impl="chain"`` is the unfused call chain; ``"auto"`` picks
+    the best admissible lowering — both produce bitwise-identical outputs,
+    so the choice is purely a bandwidth decision (see
+    ``FusedMlpPlan.roofline``)."""
+    if x.ndim != 2:
+        raise ValueError(f"fused_mlp expects 2-D x, got {x.shape}; "
+                         f"reshape leading dims into M first")
+    plan = fused_mlp_plan(w_in, w_out, w_gate, m=x.shape[0], impl=impl,
+                          activation=activation, interpret=interpret)
+    w_in = _coerce_weight(w_in, None, None)
+    w_out = _coerce_weight(w_out, None, None)
+    if w_gate is not None:
+        w_gate = _coerce_weight(w_gate, None, None)
+    if x.shape[1] != w_in.k:
+        raise ValueError(f"x has K={x.shape[1]} but the up projection "
+                         f"encodes K={w_in.k}")
+    return _FUSED[plan.impl].fn(plan, x, w_in, w_out, w_gate)
+
+
+def precompute_fused_plans(params, *, prefill_ms=(), decode_ms=(),
+                           verify_ms=(), impl: str = "auto",
+                           ) -> Dict[Tuple[int, ...], FusedMlpPlan]:
+    """Warm phase-keyed *fused* plans for MLP-shaped subtrees: any dict
+    with packed ``"in"``/``"out"`` (and optionally ``"gate"``) linears.
+    The fused analogue of ``precompute_plans`` — the serving engine calls
+    both at build time so no hot-loop dispatch pays a first-call tune.
+
+    Scan-stacked containers ((L, K/16, N) leaves) plan through their
+    layer-0 slice: inside the scan each step sees the 2-D per-layer view,
+    and that — not the stacked tree — is what dispatch keys on."""
+    found = []
+
+    def _container(node):
+        if isinstance(node, dict):
+            w = node.get("w_packed")
+            if isinstance(w, weights.TernaryWeight):
+                words = getattr(w, "packed", getattr(w, "plus", None))
+                if words is not None and words.ndim == 3:
+                    return jax.tree_util.tree_map(lambda a: a[0], w)
+                return w
+        return None
+
+    def walk(node):
+        if isinstance(node, dict):
+            wi, wo = _container(node.get("in")), _container(node.get("out"))
+            if wi is not None and wo is not None and wo.k == wi.n:
+                found.append((wi, wo, _container(node.get("gate"))))
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(params)
+    plans: Dict[Tuple[int, ...], FusedMlpPlan] = {}
+    for i, (wi, wo, wg) in enumerate(found):
+        for phase, ms in (("prefill", prefill_ms), ("decode", decode_ms),
+                          ("verify", verify_ms)):
+            for m in ms:
+                plans[(i, m, phase)] = fused_mlp_plan(
+                    wi, wo, wg, m=m, impl=impl, phase=phase)
+    return plans
+
+
+# ---------------------------------------------------------------------------
 # The public op
 # ---------------------------------------------------------------------------
 
@@ -681,12 +1219,12 @@ def ternary_gemm(
 ) -> jnp.ndarray:
     """Y = X @ decode(w) * scale + bias (+PReLU). Any (M, K, N).
 
-    ``w`` is a ``repro.core.weights.TernaryWeight``; ``scale``/``bias``
-    default to the container's own metadata. ``impl`` selects a registered
+    ``w`` is a ``repro.core.weights.TernaryWeight`` (raw operands raise
+    ``TypeError`` — pack via ``weights.pack``); ``scale``/``bias`` default
+    to the container's own metadata. ``impl`` selects a registered
     lowering explicitly ("auto" plans by format/occupancy/phase — see
     module docstring); ``block_*`` left ``None`` consult the autotuner.
-    ``k`` is redundant with the container (validated) and kept for the
-    deprecated raw-operand union.
+    ``k`` is redundant with the container and validated against it.
     """
     w = _coerce_weight(w, k, x.shape[1])
     _validate_k(w, x.shape[1], k)

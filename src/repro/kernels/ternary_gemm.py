@@ -33,11 +33,13 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 WORD_BITS = 32
 K_PER_WORD = WORD_BITS // 2  # 16 ternary weights per uint32 word
+NIBBLES_PER_WORD = WORD_BITS // 4   # 8 nibbles = 8 codeword *pairs* / word
 
 # jax renamed TPUCompilerParams -> CompilerParams across versions; if a jax
 # exposes neither, fail at import (AttributeError naming pltpu), not at the
@@ -45,11 +47,40 @@ K_PER_WORD = WORD_BITS // 2  # 16 ternary weights per uint32 word
 CompilerParams = (getattr(pltpu, "CompilerParams", None)
                   or pltpu.TPUCompilerParams)
 
-__all__ = ["ternary_gemm_pallas", "ternary_gemm_skip_pallas", "K_PER_WORD"]
+__all__ = ["ternary_gemm_pallas", "ternary_gemm_skip_pallas",
+           "ternary_gemm_skip_db_pallas", "K_PER_WORD", "DECODE_MODES"]
+
+# Decode strategies for the 2-bit code words (DESIGN.md §12):
+#   "lut"   -- 16-entry lookup tables indexed by 4-bit nibble: one shift +
+#              two table reads decode a *pair* of codewords (8 shifts/word
+#              instead of 16 — the Litespark ternary-LUT trick).
+#   "shift" -- per-codeword shift/mask arithmetic (the original path, kept
+#              as the LUT oracle and the fallback for backends where a
+#              small-table gather lowers poorly).
+# Both produce identical int8 values, so kernel outputs are bitwise equal.
+DECODE_MODES = ("lut", "shift")
+
+# nibble -> decoded value of its low / high 2-bit codeword.
+# code c: 0 -> 0, 1 -> +1, 2 -> -1, 3 -> 0 (same map as (c&1) - ((c>>1)&1)).
+_CODE_VAL = np.array([0, 1, -1, 0], np.int8)
+NIBBLE_LUT_LO = np.asarray(_CODE_VAL[np.arange(16) & 3])      # (16,) int8
+NIBBLE_LUT_HI = np.asarray(_CODE_VAL[np.arange(16) >> 2])     # (16,) int8
 
 
-def _decode_tile(words: jnp.ndarray, out_dtype) -> jnp.ndarray:
-    """(bk/16, bn) uint32 -> (bk, bn) ±1/0 tile, pure VPU ops."""
+def _nibble_luts():
+    """The two 16-entry nibble tables, built *inside* the kernel trace.
+
+    Pallas rejects kernels that capture array constants, so the tables are
+    materialised from an iota each call — the compiler folds the 16-lane
+    arithmetic to the same constant vectors as ``NIBBLE_LUT_LO/HI``."""
+    idx = jax.lax.iota(jnp.int32, 16)
+    lut_lo = ((idx & 1) - ((idx >> 1) & 1)).astype(jnp.int8)
+    lut_hi = (((idx >> 2) & 1) - ((idx >> 3) & 1)).astype(jnp.int8)
+    return lut_lo, lut_hi
+
+
+def _decode_tile_shift(words: jnp.ndarray, out_dtype) -> jnp.ndarray:
+    """(bk/16, bn) uint32 -> (bk, bn) ±1/0 tile, pure VPU shift/mask ops."""
     q, bn = words.shape
     shifts = 2 * jax.lax.broadcasted_iota(jnp.uint32, (1, K_PER_WORD, 1), 1)
     c = (words[:, None, :] >> shifts) & 3
@@ -57,15 +88,43 @@ def _decode_tile(words: jnp.ndarray, out_dtype) -> jnp.ndarray:
     return vals.reshape(q * K_PER_WORD, bn).astype(out_dtype)
 
 
+def _decode_tile_lut(words: jnp.ndarray, out_dtype) -> jnp.ndarray:
+    """(bk/16, bn) uint32 -> (bk, bn) ±1/0 tile via 16-entry nibble LUTs.
+
+    Each 4-bit nibble holds two adjacent 2-bit codewords; two table reads
+    decode both at once. Value-identical to ``_decode_tile_shift`` (same
+    int8 outputs), so downstream matmuls are bitwise equal."""
+    q, bn = words.shape
+    shifts = 4 * jax.lax.broadcasted_iota(jnp.uint32, (1, NIBBLES_PER_WORD, 1),
+                                          1)
+    nib = ((words[:, None, :] >> shifts) & 0xF).astype(jnp.int32)
+    lut_lo, lut_hi = _nibble_luts()
+    lo = jnp.take(lut_lo, nib)            # codeword 2i   (q, 8, bn)
+    hi = jnp.take(lut_hi, nib)            # codeword 2i+1 (q, 8, bn)
+    pair = jnp.stack([lo, hi], axis=2)    # (q, 8, 2, bn): K-order restored
+    return pair.reshape(q * K_PER_WORD, bn).astype(out_dtype)
+
+
+def _decode_tile(words: jnp.ndarray, out_dtype,
+                 mode: str = "lut") -> jnp.ndarray:
+    """(bk/16, bn) uint32 -> (bk, bn) ±1/0 tile. ``mode`` in DECODE_MODES;
+    both modes are value-identical (pinned in tests/test_fused_mlp.py)."""
+    if mode == "lut":
+        return _decode_tile_lut(words, out_dtype)
+    assert mode == "shift", mode
+    return _decode_tile_shift(words, out_dtype)
+
+
 def _kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
-            nk: int, fuse_prelu: bool, prelu_alpha: float):
+            nk: int, fuse_prelu: bool, prelu_alpha: float,
+            decode: str = "lut"):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    t = _decode_tile(w_ref[...], x_ref.dtype)
+    t = _decode_tile(w_ref[...], x_ref.dtype, decode)
     acc_ref[...] += jnp.dot(x_ref[...], t,
                             preferred_element_type=jnp.float32)
 
@@ -84,7 +143,7 @@ def _kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
 @functools.partial(
     jax.jit,
     static_argnames=("block_m", "block_n", "block_k", "fuse_prelu",
-                     "prelu_alpha", "interpret"),
+                     "prelu_alpha", "interpret", "decode"),
 )
 def ternary_gemm_pallas(
     x: jnp.ndarray,                    # (M, K)  f32/bf16, K % block_k == 0
@@ -98,6 +157,7 @@ def ternary_gemm_pallas(
     fuse_prelu: bool = False,
     prelu_alpha: float = 0.25,
     interpret: bool = False,
+    decode: str = "lut",
 ) -> jnp.ndarray:
     """Y = X @ decode(w_packed) * scale + bias (+ PReLU). Shapes must be
     pre-padded to block multiples -- `ops.ternary_gemm` handles padding."""
@@ -131,7 +191,8 @@ def ternary_gemm_pallas(
             b_ref = refs[idx]; idx += 1
         o_ref, acc_ref = refs[idx], refs[idx + 1]
         _kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref,
-                nk=nk, fuse_prelu=fuse_prelu, prelu_alpha=prelu_alpha)
+                nk=nk, fuse_prelu=fuse_prelu, prelu_alpha=prelu_alpha,
+                decode=decode)
 
     return pl.pallas_call(
         kernel,
@@ -153,7 +214,7 @@ def ternary_gemm_pallas(
 
 def _skip_kernel(idx_ref, cnt_ref, x_ref, w_ref, scale_ref, bias_ref, o_ref,
                  acc_ref, *, max_occ: int, fuse_prelu: bool,
-                 prelu_alpha: float):
+                 prelu_alpha: float, decode: str = "lut"):
     j = pl.program_id(1)
     s = pl.program_id(2)
 
@@ -166,7 +227,7 @@ def _skip_kernel(idx_ref, cnt_ref, x_ref, w_ref, scale_ref, bias_ref, o_ref,
     # over occupied tiles in ascending K order.
     @pl.when(s < cnt_ref[j])
     def _body():
-        t = _decode_tile(w_ref[...], x_ref.dtype)
+        t = _decode_tile(w_ref[...], x_ref.dtype, decode)
         acc_ref[...] += jnp.dot(x_ref[...], t,
                                 preferred_element_type=jnp.float32)
 
@@ -185,7 +246,7 @@ def _skip_kernel(idx_ref, cnt_ref, x_ref, w_ref, scale_ref, bias_ref, o_ref,
 @functools.partial(
     jax.jit,
     static_argnames=("block_m", "block_n", "block_k", "fuse_prelu",
-                     "prelu_alpha", "interpret"),
+                     "prelu_alpha", "interpret", "decode"),
 )
 def ternary_gemm_skip_pallas(
     x: jnp.ndarray,                    # (M, K) f32/bf16, pre-padded
@@ -201,6 +262,7 @@ def ternary_gemm_skip_pallas(
     fuse_prelu: bool = False,
     prelu_alpha: float = 0.25,
     interpret: bool = False,
+    decode: str = "lut",
 ) -> jnp.ndarray:
     """Tile-skipping ternary GEMM (DESIGN.md §3).
 
@@ -250,7 +312,7 @@ def ternary_gemm_skip_pallas(
         o_ref, acc_ref = refs[pos], refs[pos + 1]
         _skip_kernel(idx_ref, cnt_ref, x_ref, w_ref, s_ref, b_ref, o_ref,
                      acc_ref, max_occ=max_occ, fuse_prelu=fuse_prelu,
-                     prelu_alpha=prelu_alpha)
+                     prelu_alpha=prelu_alpha, decode=decode)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -266,6 +328,177 @@ def ternary_gemm_skip_pallas(
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(kt_indices, kt_counts, *operands)
+
+
+# ---------------------------------------------------------------------------
+# Double-buffered DMA variant: overlap the next occupied tile's HBM->VMEM
+# copy with the current tile's MXU work
+# ---------------------------------------------------------------------------
+
+def _skip_db_kernel(idx_ref, cnt_ref, x_hbm, w_hbm, scale_ref, bias_ref,
+                    o_ref, xs, ws, sem, acc_ref, *, block_m: int,
+                    block_n: int, block_k: int, fuse_prelu: bool,
+                    prelu_alpha: float, decode: str):
+    """Grid is (M-tiles, N-tiles); the occupied-K-tile walk happens *inside*
+    the kernel as an explicit two-slot ``make_async_copy`` pipeline: while
+    tile ``s`` is decoded and matmul'd out of slot ``s % 2``, tile ``s + 1``
+    is already in flight into the other slot. x and the packed words stay in
+    HBM (``memory_space=ANY``); the kernel only ever touches the VMEM
+    staging slots."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    bkw = block_k // K_PER_WORD
+    cnt = cnt_ref[j]
+
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def tile_dma(slot, s):
+        """Async copies for occupied tile ``s`` into staging ``slot``:
+        the (bm, bk) X window and the (bk/16, bn) packed-word tile."""
+        kt = idx_ref[j, s]
+        x_dma = pltpu.make_async_copy(
+            x_hbm.at[pl.ds(i * block_m, block_m),
+                     pl.ds(kt * block_k, block_k)],
+            xs.at[slot], sem.at[slot, 0])
+        w_dma = pltpu.make_async_copy(
+            w_hbm.at[pl.ds(kt * bkw, bkw), pl.ds(j * block_n, block_n)],
+            ws.at[slot], sem.at[slot, 1])
+        return x_dma, w_dma
+
+    def start(slot, s):
+        for dma in tile_dma(slot, s):
+            dma.start()
+
+    def wait(slot, s):
+        for dma in tile_dma(slot, s):
+            dma.wait()
+
+    @pl.when(cnt > 0)
+    def _pipeline():
+        start(0, 0)                              # warm-up: first tile
+
+        def body(s, _):
+            cur = jax.lax.rem(s, 2)
+
+            @pl.when(s + 1 < cnt)
+            def _prefetch():                     # overlap: next tile's DMA
+                start(jax.lax.rem(s + 1, 2), s + 1)
+
+            wait(cur, s)
+            t = _decode_tile(ws[cur], xs.dtype, decode)
+            acc_ref[...] += jnp.dot(xs[cur], t,
+                                    preferred_element_type=jnp.float32)
+            return 0
+
+        jax.lax.fori_loop(0, cnt, body, 0)
+
+    y = acc_ref[...]
+    if scale_ref is not None:
+        y = y * scale_ref[...].astype(jnp.float32)
+    if bias_ref is not None:
+        y = y + bias_ref[...].astype(jnp.float32)
+    if fuse_prelu:
+        y = jnp.where(y >= 0, y, prelu_alpha * y)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "fuse_prelu",
+                     "prelu_alpha", "interpret", "decode"),
+)
+def ternary_gemm_skip_db_pallas(
+    x: jnp.ndarray,                    # (M, K) f32/bf16, pre-padded
+    w_packed: jnp.ndarray,             # (K / 16, N) uint32 2-bit codes
+    kt_indices: jnp.ndarray,           # (N/block_n, max_occ) int32
+    kt_counts: jnp.ndarray,            # (N/block_n,) int32
+    scale: Optional[jnp.ndarray] = None,
+    bias: Optional[jnp.ndarray] = None,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 256,
+    fuse_prelu: bool = False,
+    prelu_alpha: float = 0.25,
+    interpret: bool = False,
+    decode: str = "lut",
+) -> jnp.ndarray:
+    """Tile-skipping ternary GEMM with an explicit double-buffered DMA
+    pipeline (DESIGN.md §12).
+
+    Same operands and semantics as ``ternary_gemm_skip_pallas`` — the
+    occupied-tile metadata rides in as scalar prefetch — but instead of the
+    implicit per-grid-step BlockSpec pipeline, the grid is only
+    (M/bm, N/bn) and each kernel invocation walks its occupied K-tiles with
+    two VMEM staging slots: tile ``s+1``'s HBM->VMEM ``make_async_copy``
+    issues *before* tile ``s``'s decode + matmul, so DMA overlaps MXU work
+    within a single output tile. Accumulation visits occupied tiles in the
+    same ascending-K order as the skip kernel, so results are bitwise
+    identical to both the skip and dense kernels.
+    """
+    m, k = x.shape
+    kw, n = w_packed.shape
+    assert kw * K_PER_WORD == k, (kw, k)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, \
+        (m, n, k, block_m, block_n, block_k)
+    nn = n // block_n
+    assert kt_indices.shape[0] == nn and kt_counts.shape == (nn,), \
+        (kt_indices.shape, kt_counts.shape, nn)
+    bkw = block_k // K_PER_WORD
+
+    # x / packed words stay in HBM; only scale/bias (tiny) are block-fed.
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+    ]
+    operands = [x, w_packed]
+    if scale is not None:
+        in_specs.append(pl.BlockSpec((1, block_n),
+                                     lambda i, j, idx, cnt: (0, j)))
+        operands.append(scale.reshape(1, n))
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, block_n),
+                                     lambda i, j, idx, cnt: (0, j)))
+        operands.append(bias.reshape(1, n))
+
+    def kernel(idx_ref, cnt_ref, *refs):
+        x_hbm, w_hbm = refs[0], refs[1]
+        pos = 2
+        s_ref = b_ref = None
+        if scale is not None:
+            s_ref = refs[pos]; pos += 1
+        if bias is not None:
+            b_ref = refs[pos]; pos += 1
+        o_ref = refs[pos]
+        xs, ws, sem, acc_ref = refs[pos + 1:pos + 5]
+        _skip_db_kernel(idx_ref, cnt_ref, x_hbm, w_hbm, s_ref, b_ref, o_ref,
+                        xs, ws, sem, acc_ref, block_m=block_m,
+                        block_n=block_n, block_k=block_k,
+                        fuse_prelu=fuse_prelu, prelu_alpha=prelu_alpha,
+                        decode=decode)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(m // block_m, nn),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, block_n),
+                               lambda i, j, idx, cnt: (i, j)),
+        scratch_shapes=[
+            pltpu.VMEM((2, block_m, block_k), x.dtype),    # X staging slots
+            pltpu.VMEM((2, bkw, block_n), jnp.uint32),     # word staging
+            pltpu.SemaphoreType.DMA((2, 2)),               # (slot, x|w)
+            pltpu.VMEM((block_m, block_n), jnp.float32),   # accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,
     )(kt_indices, kt_counts, *operands)

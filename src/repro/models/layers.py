@@ -238,7 +238,30 @@ def mlp_init(key, cfg: ModelConfig, d_ff: int):
             {"in": s_in, "gate": s_gate, "out": s_out})
 
 
+def _fused_mlp_weights(params, cfg: ModelConfig):
+    """The (w_in, w_out, w_gate) containers when this MLP can dispatch the
+    fused lowering: every projection packed (bias inside the container),
+    the Pallas path active, and fusion not configured off."""
+    if getattr(cfg, "fused_mlp", "auto") == "off" or not _use_pallas_gemm(cfg):
+        return None
+    ws = []
+    for name in ("in", "out", "gate"):
+        p = params.get(name, {})
+        wc = p.get("w_packed") if isinstance(p, dict) else None
+        if not isinstance(wc, weights.TernaryWeight) or "b" in p:
+            return None
+        ws.append(wc)
+    return tuple(ws)
+
+
 def mlp_apply(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    fused = _fused_mlp_weights(params, cfg)
+    if fused is not None:
+        w_in, w_out, w_gate = fused
+        from repro.kernels import ops as kops
+        lead = x.shape[:-1]
+        y = kops.fused_mlp(x.reshape(-1, x.shape[-1]), w_in, w_out, w_gate)
+        return y.reshape(*lead, -1)
     h = jax.nn.silu(linear_apply(params["gate"], x, cfg)) \
         * linear_apply(params["in"], x, cfg)
     return linear_apply(params["out"], h, cfg)

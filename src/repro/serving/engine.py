@@ -301,6 +301,17 @@ class ContinuousScheduler:
             # warm exactly the impl linear_apply will dispatch ("ref"
             # off-TPU touches no autotune state)
             impl=gemm_impl(self.cfg))
+        # fused-MLP plans warm alongside (mlp_apply dispatches the fused
+        # lowering for fully-packed MLP blocks when the Pallas path is on —
+        # the fused autotune keys must be resolved before the hot loop too)
+        if getattr(self.cfg, "fused_mlp", "auto") != "off" \
+                and gemm_impl(self.cfg) != "ref":
+            self.fused_plans = kops.precompute_fused_plans(
+                params, prefill_ms=prefill_ms, decode_ms=(self.max_slots,),
+                verify_ms=((self.max_slots * (self.spec.k + 1),)
+                           if self.spec else ()))
+        else:
+            self.fused_plans = {}
         if self.spec is not None:
             from repro import spec as spec_lib
             self.draft = spec_lib.build_draft(self.spec, self.model, params)

@@ -30,12 +30,16 @@ GOLDEN = {
         "ternary_gemm", "ternary_gemm_plan", "GemmPlan",
         "register_kernel", "kernel_registry", "serving_phase",
         "SERVING_PHASES",
+        "fused_mlp", "fused_mlp_plan", "FusedMlpPlan",
+        "register_fused", "fused_registry", "precompute_fused_plans",
+        "fused_mlp_pallas",
         "pack_weights", "pack_weights_tiled",
         "ternary_gemm_pallas", "ternary_gemm_skip_pallas",
+        "ternary_gemm_skip_db_pallas", "DECODE_MODES",
         "ternary_gemm_bitplane", "K_PER_WORD", "flash_attention_pallas",
         "paged_decode_attention", "register_paged_attn",
         "paged_attention_registry",
-        "Autotuner", "BlockConfig", "get_tuner",
+        "Autotuner", "BlockConfig", "FusedBlockConfig", "get_tuner",
     },
     "repro.serving": {
         "ContinuousScheduler", "Request", "RequestQueue", "SlotPool",
@@ -59,7 +63,8 @@ GOLDEN = {
 GOLDEN_FORMATS = {"dense2bit", "tiled", "bitplane", "base3"}
 GOLDEN_KERNELS = {
     ("dense2bit", "dense"), ("dense2bit", "ref"),
-    ("tiled", "skip"), ("tiled", "dense"), ("tiled", "ref"),
+    ("tiled", "skip"), ("tiled", "skip_db"), ("tiled", "dense"),
+    ("tiled", "ref"),
     ("bitplane", "bitplane"), ("bitplane", "bitplane_factorized"),
     ("bitplane", "ref"),
     ("base3", "ref"),
@@ -99,8 +104,9 @@ def test_format_and_kernel_registries_locked():
 
 
 def test_legacy_shim_is_contained():
-    """The old weight-operand union must survive only as ops' deprecation
-    shim — no public module re-exports it."""
+    """The old weight-operand union is gone — raw operands raise TypeError
+    in ops (see test_weights_api), and no public module re-exports the
+    legacy config type."""
     import repro.kernels as K
     assert not hasattr(K, "TernaryGemmConfig")
     assert not hasattr(importlib.import_module("repro.kernels.ops"),

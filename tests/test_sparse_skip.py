@@ -127,7 +127,9 @@ def test_skip_kernel_grad():
 
 def test_planner_auto_picks_skip_for_sparse():
     _, _, tt = _tile_setup(4, 128, 64, 0.0625)
-    assert ops.ternary_gemm_plan(tt, 4).impl == "skip"
+    # the double-buffered variant outranks plain skip under auto dispatch
+    assert ops.ternary_gemm_plan(tt, 4).impl == "skip_db"
+    assert ops.ternary_gemm_plan(tt, 4, impl="skip").impl == "skip"
     dense_w = formats.random_ternary(np.random.default_rng(0), 64, 32, 0.5)
     tt_dense = weights.pack(dense_w, "tiled", tile_k=16, tile_n=16)
     # unstructured 1/2-sparse weights occupy every tile -> dense fallback

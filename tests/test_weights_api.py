@@ -109,7 +109,7 @@ def test_gemm_plan_inspectable():
     w = formats.random_tile_ternary(rng, 96, 48, 32, 16, 0.0625)
     wc = weights.pack(w, "tiled", tile_k=32, tile_n=16)
     plan = ops.ternary_gemm_plan(wc, 8)
-    assert plan.format == "tiled" and plan.impl == "skip"
+    assert plan.format == "tiled" and plan.impl == "skip_db"
     assert (plan.k, plan.n) == (96, 48)
     assert plan.block_n == wc.tile_n and plan.block_k == wc.tile_k
     assert 0.0 < plan.occupancy <= 1.0
@@ -122,7 +122,8 @@ def test_gemm_plan_inspectable():
 def test_registry_contents_and_unknown_impl():
     reg = ops.kernel_registry()
     for key in [("dense2bit", "dense"), ("dense2bit", "ref"),
-                ("tiled", "skip"), ("tiled", "dense"), ("tiled", "ref"),
+                ("tiled", "skip"), ("tiled", "skip_db"), ("tiled", "dense"),
+                ("tiled", "ref"),
                 ("bitplane", "bitplane"), ("bitplane", "bitplane_factorized"),
                 ("bitplane", "ref"), ("base3", "ref")]:
         assert key in reg, key
@@ -157,32 +158,34 @@ def test_k_validation_unified(fmt):
 
 
 # ---------------------------------------------------------------------------
-# Deprecation shim: old union == new API, bit-exact
+# Removed shim: legacy raw operands are a hard error with a migration hint
 # ---------------------------------------------------------------------------
 
-def test_shim_equivalence_bit_exact():
+def test_legacy_operands_raise_with_migration_hint():
+    """The PR-3 DeprecationWarning shim is gone: passing the old operand
+    union (raw packed words / TiledTernary / bitplane tuples) raises a
+    TypeError naming the ``weights`` constructor to migrate to."""
     rng = np.random.default_rng(7)
     k, n = 128, 64
     w = formats.random_tile_ternary(rng, k, n, 32, 16, 0.125)
     x = jnp.asarray(rng.standard_normal((8, k)), jnp.float32)
 
     legacy = {
-        "dense2bit": (jnp.asarray(formats.pack_2bit(w)), {"k": k}),
+        "dense2bit": (jnp.asarray(formats.pack_2bit(w)), {"k": k},
+                      r"Dense2Bit\.from_packed"),
         "tiled": (formats.TiledTernary.from_dense(w, tile_k=32, tile_n=16),
-                  {}),
+                  {}, r"Tiled\.from_tiled"),
         "bitplane": (tuple(jnp.asarray(a)
-                           for a in formats.pack_bitplanes(w)), {"k": k}),
+                           for a in formats.pack_bitplanes(w)), {"k": k},
+                     r"Bitplane\.from_planes"),
     }
-    modern = {
-        "dense2bit": weights.pack(w, "dense2bit"),
-        "tiled": weights.pack(w, "tiled", tile_k=32, tile_n=16),
-        "bitplane": weights.pack(w, "bitplane"),
-    }
-    for fmt, (old_operand, kw) in legacy.items():
-        with pytest.warns(DeprecationWarning):
-            y_old = ops.ternary_gemm(x, old_operand, **kw)
-        y_new = ops.ternary_gemm(x, modern[fmt])
-        assert np.array_equal(np.asarray(y_old), np.asarray(y_new)), fmt
+    for fmt, (old_operand, kw, hint) in legacy.items():
+        with pytest.raises(TypeError, match=hint):
+            ops.ternary_gemm(x, old_operand, **kw)
+        # the container path still works and stays the single entry point
+        y = ops.ternary_gemm(x, weights.pack(w, fmt) if fmt != "tiled"
+                             else weights.pack(w, fmt, tile_k=32, tile_n=16))
+        assert y.shape == (8, n), fmt
 
 
 # ---------------------------------------------------------------------------
