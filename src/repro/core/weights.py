@@ -59,6 +59,7 @@ __all__ = [
     "register_format",
     "pack",
     "ternarize_stacked",
+    "validate_spec_twin",
 ]
 
 # name -> container class; the single place new layouts register.
@@ -187,6 +188,19 @@ class TernaryWeight:
             return 1.0
         return self.nnz / max(self.k * self.n, 1)
 
+    def shard_constraints(self) -> Dict[str, Tuple[int, int]]:
+        """Tensor-parallel shard-boundary constraints of the *physical*
+        encoding: ``{"k": (extent, multiple), "n": (extent, multiple)}``.
+
+        ``extent`` is the physical size of that logical axis as stored
+        (tile-padded for ``Tiled``) and ``multiple`` the value count one
+        indivisible pack unit covers (a 2-bit uint32 word spans 16 K
+        values, a bitplane byte 8, a base-3 byte 5, a skip tile
+        ``tile_k``/``tile_n``). A mesh shard boundary that does not land
+        on ``multiple`` would split a pack word/tile across devices —
+        ``validate_spec_twin`` rejects such specs at placement time."""
+        return {"k": (self.k, 1), "n": (self.n, 1)}
+
     # --- conversions ------------------------------------------------------
     def materialize(self, dtype=jnp.float32, with_scale: bool = False):
         """Decode to the dense {-1,0,+1} matrix (stacked leading dims of the
@@ -271,6 +285,9 @@ class Dense2Bit(TernaryWeight):
         t = _decode_stacked(self.packed, formats.decode_2bit, self.k, dtype)
         return self._apply_scale(t[..., :self.n], with_scale, dtype)
 
+    def shard_constraints(self) -> Dict[str, Tuple[int, int]]:
+        return {"k": (self.k, 16), "n": (self.n, 1)}
+
 
 # ---------------------------------------------------------------------------
 # Tiled — 2-bit codes + per-tile occupancy metadata (skip kernel format)
@@ -340,6 +357,13 @@ class Tiled(TernaryWeight):
         t = formats.decode_2bit(jnp.asarray(self.packed), kp, dtype)
         return self._apply_scale(t[:self.k, :self.n], with_scale, dtype)
 
+    def shard_constraints(self) -> Dict[str, Tuple[int, int]]:
+        # the occupancy metadata (kt_indices/kt_counts) is per (K-tile,
+        # N-tile): shard boundaries must land on whole tiles of the
+        # *padded* grid, not just on pack words
+        return {"k": (self.n_ktiles * self.tile_k, self.tile_k),
+                "n": (self.n_ntiles * self.tile_n, self.tile_n)}
+
 
 # ---------------------------------------------------------------------------
 # Bitplane — plus/minus uint8 masks (structural sign encoding)
@@ -383,6 +407,9 @@ class Bitplane(TernaryWeight):
                                      dtype=dtype)
         return self._apply_scale(t[..., :self.n], with_scale, dtype)
 
+    def shard_constraints(self) -> Dict[str, Tuple[int, int]]:
+        return {"k": (self.k, 8), "n": (self.n, 1)}
+
 
 # ---------------------------------------------------------------------------
 # Base3 — 5 trits / byte (paper's value compression; ref kernel only)
@@ -410,6 +437,9 @@ class Base3(TernaryWeight):
         t = formats.decode_base3(jnp.asarray(self.packed), self.k,
                                  dtype=dtype)
         return self._apply_scale(t[..., :self.n], with_scale, dtype)
+
+    def shard_constraints(self) -> Dict[str, Tuple[int, int]]:
+        return {"k": (self.k, 5), "n": (self.n, 1)}
 
 
 # ---------------------------------------------------------------------------
@@ -456,3 +486,94 @@ def pack(w, format: str = "dense2bit", *, scale=None, bias=None,
     else:
         t = w
     return FORMATS[format].from_dense(t, scale=scale, bias=bias, **opts)
+
+
+# ---------------------------------------------------------------------------
+# Spec-twin validation — pack-boundary enforcement for tensor parallelism
+# ---------------------------------------------------------------------------
+
+def _mesh_axis_sizes(mesh) -> Dict[str, int]:
+    """Accept a ``jax.sharding.Mesh`` (or anything with ``.shape``
+    mapping axis name -> size) or a plain ``{name: size}`` dict."""
+    shape = getattr(mesh, "shape", mesh)
+    return dict(shape)
+
+
+def _resolve_split(ax, sizes: Dict[str, int], used: set, fsdp: bool):
+    """Mirror ``distributed.sharding.resolve_spec``'s axis-name resolution
+    (logical "fsdp"/"expert" names, tuples, literal mesh names, the
+    no-reuse rule) *without* its silent replicate-on-indivisible fallback —
+    return (split size, resolved axis names)."""
+    if ax is None:
+        return 1, ()
+    if ax == "fsdp":
+        axes = (tuple(a for a in ("pod", "data") if a in sizes)
+                if fsdp else ())
+    elif ax == "expert":
+        axes = ("model",) if "model" in sizes else ()
+    elif isinstance(ax, (tuple, list)):
+        axes = tuple(a for a in ax if a in sizes)
+    else:
+        axes = (ax,) if ax in sizes else ()
+    axes = tuple(a for a in axes if a not in used)
+    size = 1
+    for a in axes:
+        size *= sizes[a]
+    used.update(axes)
+    return size, axes
+
+
+def validate_spec_twin(wc: TernaryWeight, twin, mesh, *,
+                       fsdp: bool = False) -> None:
+    """Reject a PartitionSpec spec twin whose shard boundaries would split
+    a pack word or skip tile across devices.
+
+    ``twin`` is the container's sharding-spec twin (the same dataclass with
+    PartitionSpec leaves, as built by ``models.layers.linear_init``);
+    ``mesh`` supplies the axis sizes. The physical encodings are
+    indivisible below their pack unit — 16 values per 2-bit uint32 word,
+    8 per bitplane byte, 5 per base-3 byte, a whole ``tile_k x tile_n``
+    tile for the skip format — so a K (or N, for tiled) shard boundary off
+    that multiple has no representable per-device layout. Today such specs
+    would be silently replicated at resolve time; serving placement calls
+    this first so they fail loudly with the offending axis and the nearest
+    legal boundary instead.
+
+    Raises ``ValueError``; returns ``None`` when the twin is legal.
+    """
+    spec = None
+    for name in ("packed", "plus"):
+        cand = getattr(twin, name, None)
+        if cand is not None and not isinstance(cand, TernaryWeight):
+            spec = cand
+            break
+    if spec is None:                      # nothing sharded -> nothing to do
+        return
+    sizes = _mesh_axis_sizes(mesh)
+    cons = wc.shard_constraints()
+    # align the spec to the primary leaf's trailing (K-pack, N) axes —
+    # scan-stacked twins carry leading None entries (transformer._stack_specs)
+    entries = tuple(spec)
+    if len(entries) < 2:
+        entries = (None,) * (2 - len(entries)) + entries
+    used: set = set()
+    splits = []
+    for ax in entries[:-2]:               # leading stack dims burn axes too
+        _resolve_split(ax, sizes, used, fsdp)
+    for ax in entries[-2:]:
+        splits.append(_resolve_split(ax, sizes, used, fsdp))
+    for (tp, axes), dim in zip(splits, ("k", "n")):
+        if tp <= 1:
+            continue
+        extent, multiple = cons[dim]
+        if extent % (tp * multiple) == 0:
+            continue
+        per_shard = extent / tp
+        legal = max(multiple, int(round(per_shard / multiple)) * multiple)
+        raise ValueError(
+            f"{wc.format_name} spec twin: sharding {dim.upper()} over mesh "
+            f"axis {axes if len(axes) > 1 else axes[0]!r} ({tp}-way) puts "
+            f"shard boundaries every {per_shard:g} of {extent} values — "
+            f"off the {multiple}-value pack multiple of {wc!r}. Per-shard "
+            f"{dim.upper()} must be a multiple of {multiple} that divides "
+            f"{extent}; nearest legal boundary is {legal}.")

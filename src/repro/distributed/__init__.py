@@ -1,3 +1,4 @@
-from repro.distributed import compression, fault_tolerance, sharding
+from repro.distributed import (compression, fault_tolerance, router,
+                               sharding, tp)
 
-__all__ = ["sharding", "compression", "fault_tolerance"]
+__all__ = ["sharding", "compression", "fault_tolerance", "tp", "router"]

@@ -273,8 +273,14 @@ class GemmPlan:
         ('dense2bit', 'dense', 128, 512, 256)
         >>> sorted(plan.roofline())     # doctest: +NORMALIZE_WHITESPACE
         ['achieved_flops', 'arithmetic_intensity', 'bound', 'bytes',
-         'ceiling_flops', 'flops', 'headroom', 'model_time_s',
-         'peak_flops']
+         'ceiling_flops', 'collective', 'collective_bytes', 'flops',
+         'headroom', 'model_time_s', 'peak_flops', 'tp']
+
+    Under tensor parallelism (``ternary_gemm_plan(..., partition=, tp=)``)
+    ``m``/``k``/``n`` are the *per-shard* problem — ``partition="k"`` row
+    splits K and carries an explicit ``collective="psum"`` (the all-reduce
+    over partial products); ``partition="n"`` column splits N with no
+    collective (the next row-split layer consumes the sharded activation).
     """
 
     format: str
@@ -290,6 +296,9 @@ class GemmPlan:
     interpret: bool
     fuse_prelu: bool = False
     prelu_alpha: float = 0.25
+    partition: Optional[str] = None      # None | "k" | "n"
+    collective: Optional[str] = None     # None | "psum"
+    tp: int = 1
 
     def traffic(self) -> Dict[str, float]:
         """Modeled FLOPs and HBM bytes for one pass, from the plan's block
@@ -310,8 +319,13 @@ class GemmPlan:
         x_bytes = m_tiles * n_tiles * k_steps * bm * bk * 2
         w_bytes = m_tiles * n_tiles * k_steps * (bk // K_PER_WORD) * bn * 4
         out_bytes = mp * npad * 2
+        # ring all-reduce over the K-split partial products: each shard
+        # sends/receives 2*(tp-1)/tp of the (m, n) f32 partial output
+        coll = (2.0 * (self.tp - 1) / self.tp * self.m * self.n * 4
+                if self.collective == "psum" and self.tp > 1 else 0.0)
         return {"flops": flops,
-                "bytes": float(x_bytes + w_bytes + out_bytes)}
+                "bytes": float(x_bytes + w_bytes + out_bytes),
+                "collective_bytes": coll}
 
     def roofline(self) -> Dict[str, float]:
         """Roofline position of this plan on the modeled machine
@@ -337,7 +351,10 @@ class GemmPlan:
                 "model_time_s": t_model,
                 "headroom": max(0.0, 1.0 - achieved / max(ceiling, 1.0)),
                 "bound": ("memory" if ceiling < autotune_lib.PEAK_FLOPS
-                          else "compute")}
+                          else "compute"),
+                "collective": self.collective,
+                "collective_bytes": t["collective_bytes"],
+                "tp": self.tp}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -720,6 +737,8 @@ def ternary_gemm_plan(
     fuse_prelu: bool = False,
     prelu_alpha: float = 0.25,
     interpret: Optional[bool] = None,
+    partition: Optional[str] = None,
+    tp: int = 1,
 ) -> GemmPlan:
     """Plan (but do not run) a ternary GEMM: registry + autotuner -> an
     inspectable ``GemmPlan``. ``phase`` defaults to the ambient
@@ -727,6 +746,13 @@ def ternary_gemm_plan(
     container. Planning uses only static container metadata, so it is
     trace-safe and cheap to precompute (the serving engine warms
     phase-keyed plans for every packed weight at build time).
+
+    ``partition``/``tp`` plan one *shard* of a tensor-parallel GEMM
+    (DESIGN.md §13): ``"k"`` row splits K ``tp`` ways and records the
+    ``psum`` collective the partial products need; ``"n"`` column splits N
+    with no collective. Shard boundaries must land on the container's pack
+    multiples (``TernaryWeight.shard_constraints``) — the same rule
+    ``weights.validate_spec_twin`` enforces on the spec twins.
 
     Example (doctest-runnable) — a sparse tiled pack below the occupancy
     cutoff selects the double-buffered skipping kernel, and the same
@@ -748,6 +774,23 @@ def ternary_gemm_plan(
     if phase == "__current__":
         phase = current_phase()
     interpret = _auto_interpret() if interpret is None else interpret
+    if partition not in (None, "k", "n"):
+        raise ValueError(f"partition must be 'k', 'n' or None, "
+                         f"got {partition!r}")
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if tp == 1:
+        partition = None
+    if partition is not None:
+        extent, multiple = w.shard_constraints()[partition]
+        if extent % (tp * multiple) != 0:
+            raise ValueError(
+                f"{w.format_name} GEMM: {partition.upper()}-partitioning "
+                f"{tp}-way puts shard boundaries every {extent / tp:g} of "
+                f"{extent} values — off the {multiple}-value pack multiple; "
+                f"repack or choose tp dividing {extent // multiple}")
+    k_shard = w.k // tp if partition == "k" else w.k
+    n_shard = w.n // tp if partition == "n" else w.n
     fmt = w.format_name
     if impl == "auto":
         cands = sorted((ki for ki in _KERNELS.values() if ki.format == fmt),
@@ -763,14 +806,23 @@ def ternary_gemm_plan(
             raise ValueError(f"no impl {impl!r} registered for format "
                              f"{fmt!r}; available: {avail}")
     bm, bn, bk = chosen.plan_blocks(w, m, phase, block_m, block_n, block_k)
-    return GemmPlan(format=fmt, impl=chosen.impl, m=m, k=w.k, n=w.n,
+    if partition is not None:
+        # per-shard tiles: clamp the global autotune blocks to the shard's
+        # axis extent so the plan's tiling matches what one device runs
+        bk = min(bk, k_shard) if bk else bk
+        bn = min(bn, n_shard) if bn else bn
+    return GemmPlan(format=fmt, impl=chosen.impl, m=m, k=k_shard, n=n_shard,
                     block_m=bm, block_n=bn, block_k=bk, phase=phase,
                     occupancy=w.occupancy(), interpret=interpret,
-                    fuse_prelu=fuse_prelu, prelu_alpha=prelu_alpha)
+                    fuse_prelu=fuse_prelu, prelu_alpha=prelu_alpha,
+                    partition=partition,
+                    collective="psum" if partition == "k" else None,
+                    tp=tp)
 
 
 def precompute_plans(params, *, prefill_ms=(), decode_ms=(), verify_ms=(),
                      select: Optional[Callable] = None, impl: str = "auto",
+                     shard: Optional[Callable] = None,
                      ) -> Dict[Tuple[int, ...], GemmPlan]:
     """Warm phase-keyed plans for ``TernaryWeight``s in a param tree.
 
@@ -782,19 +834,23 @@ def precompute_plans(params, *, prefill_ms=(), decode_ms=(), verify_ms=(),
     ``ternary_gemm`` (packed linears), not containers a model materializes
     instead (MoE expert banks) — and ``impl`` should be the impl the apply
     path will dispatch (planning ``"ref"`` touches no autotune state).
-    Returns the plans keyed by (leaf index, m, phase) for introspection."""
+    ``shard(path, w) -> (partition, tp)`` makes plans collective-aware
+    under TP serving (``distributed.tp.gemm_shard_fn`` derives it from the
+    placed arrays' shardings). Returns the plans keyed by
+    (leaf index, m, phase) for introspection."""
     flat = jax.tree_util.tree_flatten_with_path(
         params, is_leaf=lambda v: isinstance(v, weights.TernaryWeight))[0]
     ws = [(path, w) for path, w in flat
           if isinstance(w, weights.TernaryWeight)
           and (select is None or select(path, w))]
     plans: Dict[Tuple[int, ...], GemmPlan] = {}
-    for i, (_, w) in enumerate(ws):
+    for i, (path, w) in enumerate(ws):
+        part, ntp = shard(path, w) if shard is not None else (None, 1)
         for phase, ms in (("prefill", prefill_ms), ("decode", decode_ms),
                           ("verify", verify_ms)):
             for m in ms:
-                plans[(i, m, phase)] = ternary_gemm_plan(w, m, impl=impl,
-                                                         phase=phase)
+                plans[(i, m, phase)] = ternary_gemm_plan(
+                    w, m, impl=impl, phase=phase, partition=part, tp=ntp)
     return plans
 
 
@@ -820,7 +876,12 @@ class FusedMlpPlan:
     ``block_n1/block_k1`` tile the up/gate projection, ``block_n2/
     block_k2`` the down projection; all are taken from the *chain's* own
     ``GemmPlan``s (via the fused autotune key), so the fused kernel tiles
-    K identically to the unfused chain — the bitwise-equality contract."""
+    K identically to the unfused chain — the bitwise-equality contract.
+
+    Under TP (``fused_mlp_plan(..., tp=)``) ``ff`` is the *per-shard*
+    hidden width: up/gate column split the hidden dim, down row splits it
+    back, and the single trailing ``psum`` (``collective``) reduces the
+    partial outputs — the Megatron MLP layout (DESIGN.md §13)."""
 
     impl: str
     format_up: str
@@ -840,19 +901,25 @@ class FusedMlpPlan:
     occupancy_up: float
     occupancy_down: float
     interpret: bool
+    collective: Optional[str] = None     # None | "psum"
+    tp: int = 1
 
     def sub_plans(self) -> Tuple[GemmPlan, GemmPlan]:
         """The two chained ``GemmPlan``s this fusion replaces (gate shares
         the up plan) — the roofline baseline."""
-        mk = dict(phase=self.phase, interpret=self.interpret)
+        mk = dict(phase=self.phase, interpret=self.interpret, tp=self.tp)
+        sharded = self.tp > 1
         up = GemmPlan(format=self.format_up, impl="dense", m=self.m,
                       k=self.k, n=self.ff, block_m=self.block_m,
                       block_n=self.block_n1, block_k=self.block_k1,
-                      occupancy=self.occupancy_up, **mk)
+                      occupancy=self.occupancy_up,
+                      partition="n" if sharded else None, **mk)
         down = GemmPlan(format=self.format_down, impl="dense", m=self.m,
                         k=self.ff, n=self.n, block_m=self.block_m,
                         block_n=self.block_n2, block_k=self.block_k2,
-                        occupancy=self.occupancy_down, **mk)
+                        occupancy=self.occupancy_down,
+                        partition="k" if sharded else None,
+                        collective=self.collective, **mk)
         return up, down
 
     def roofline(self) -> Dict[str, float]:
@@ -894,9 +961,14 @@ class FusedMlpPlan:
         ai = flops / max(fused_bytes, 1.0)
         ceiling = min(autotune_lib.PEAK_FLOPS, ai * autotune_lib.HBM_BW)
         achieved = flops / max(t_fused, 1e-12)
+        coll = (2.0 * (self.tp - 1) / self.tp * self.m * self.n * 4
+                if self.collective == "psum" and self.tp > 1 else 0.0)
         return {"flops": flops,
                 "bytes": fused_bytes,
                 "unfused_bytes": float(unfused_bytes),
+                "collective": self.collective,
+                "collective_bytes": coll,
+                "tp": self.tp,
                 "arithmetic_intensity": ai,
                 "ceiling_flops": ceiling,
                 "achieved_flops": achieved,
@@ -942,14 +1014,6 @@ def fused_registry() -> Dict[str, FusedImpl]:
     return dict(_FUSED)
 
 
-def _chain_sub_plans(w_in, w_out, m, phase, interpret):
-    """The GemmPlans the unfused chain would dispatch — the fused kernel
-    must tile K/N exactly like these to stay bitwise-equal."""
-    up = ternary_gemm_plan(w_in, m, phase=phase, interpret=interpret)
-    down = ternary_gemm_plan(w_out, m, phase=phase, interpret=interpret)
-    return up, down
-
-
 def _fusable(w_in, w_out, w_gate, m, phase) -> bool:
     for w in (w_in, w_out) + (() if w_gate is None else (w_gate,)):
         if w.format_name not in _FUSED_FORMATS:
@@ -971,11 +1035,14 @@ def _fusable(w_in, w_out, w_gate, m, phase) -> bool:
 def fused_mlp_plan(w_in: Any, w_out: Any, w_gate: Any = None, *,
                    m: int, impl: str = "auto", activation: str = "silu",
                    phase: Optional[str] = "__current__",
-                   interpret: Optional[bool] = None) -> FusedMlpPlan:
+                   interpret: Optional[bool] = None,
+                   tp: int = 1) -> FusedMlpPlan:
     """Plan (but do not run) a fused MLP block; the fused analogue of
     ``ternary_gemm_plan``. Blocks resolve through the autotuner's fused
     key (``autotune.fused_cache_key``) pinned to the chain sub-plans'
-    tiles, so fused and unfused tiling always agree."""
+    tiles, so fused and unfused tiling always agree. ``tp > 1`` plans one
+    Megatron-MLP shard: the hidden dim is column split on the way up, row
+    split on the way down, with an explicit trailing ``psum``."""
     w_in = _coerce_weight(w_in, None, None)
     w_out = _coerce_weight(w_out, None, None)
     if w_gate is not None:
@@ -989,6 +1056,17 @@ def fused_mlp_plan(w_in: Any, w_out: Any, w_gate: Any = None, *,
             f"fused_mlp: gate shape {(w_gate.k, w_gate.n)} must match the "
             f"up projection's {(w_in.k, w_in.n)}")
     assert activation in ACTIVATIONS, activation
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if tp > 1:
+        for which, wgt, dim in (("up N", w_in, "n"), ("down K", w_out, "k")):
+            extent, multiple = wgt.shard_constraints()[dim]
+            if extent % (tp * multiple) != 0:
+                raise ValueError(
+                    f"fused_mlp: {tp}-way TP splits the {which} axis every "
+                    f"{extent / tp:g} of {extent} values — off the "
+                    f"{multiple}-value pack multiple of {wgt.format_name}")
+    ff_shard = w_in.n // tp
     if phase == "__current__":
         phase = current_phase()
     interpret = _auto_interpret() if interpret is None else interpret
@@ -1008,9 +1086,12 @@ def fused_mlp_plan(w_in: Any, w_out: Any, w_gate: Any = None, *,
 
     bm = bn1 = bk1 = bn2 = bk2 = None
     if chosen.impl == "pallas":
-        up, down = _chain_sub_plans(w_in, w_out, m, phase, interpret)
+        up = ternary_gemm_plan(w_in, m, phase=phase, interpret=interpret,
+                               partition="n" if tp > 1 else None, tp=tp)
+        down = ternary_gemm_plan(w_out, m, phase=phase, interpret=interpret,
+                                 partition="k" if tp > 1 else None, tp=tp)
         cfg = autotune_lib.get_tuner().lookup_fused(
-            m, w_in.k, w_in.n, w_out.n,
+            m, w_in.k, ff_shard, w_out.n,
             sparsity_up=w_in.occupancy(), sparsity_down=w_out.occupancy(),
             fixed_n1=up.block_n, fixed_k1=up.block_k,
             fixed_n2=down.block_n, fixed_k2=down.block_k, phase=phase)
@@ -1018,11 +1099,12 @@ def fused_mlp_plan(w_in: Any, w_out: Any, w_gate: Any = None, *,
         bn2, bk2 = cfg.block_n2, cfg.block_k2
     return FusedMlpPlan(
         impl=chosen.impl, format_up=w_in.format_name,
-        format_down=w_out.format_name, m=m, k=w_in.k, ff=w_in.n,
+        format_down=w_out.format_name, m=m, k=w_in.k, ff=ff_shard,
         n=w_out.n, gated=w_gate is not None, activation=activation,
         block_m=bm, block_n1=bn1, block_k1=bk1, block_n2=bn2,
         block_k2=bk2, phase=phase, occupancy_up=w_in.occupancy(),
-        occupancy_down=w_out.occupancy(), interpret=interpret)
+        occupancy_down=w_out.occupancy(), interpret=interpret,
+        collective="psum" if tp > 1 else None, tp=tp)
 
 
 def _apply_act(name: str, y: jnp.ndarray) -> jnp.ndarray:
@@ -1155,7 +1237,7 @@ def fused_mlp(x: jnp.ndarray, w_in: Any, w_out: Any, w_gate: Any = None,
 
 
 def precompute_fused_plans(params, *, prefill_ms=(), decode_ms=(),
-                           verify_ms=(), impl: str = "auto",
+                           verify_ms=(), impl: str = "auto", tp: int = 1,
                            ) -> Dict[Tuple[int, ...], FusedMlpPlan]:
     """Warm phase-keyed *fused* plans for MLP-shaped subtrees: any dict
     with packed ``"in"``/``"out"`` (and optionally ``"gate"``) linears.
@@ -1195,7 +1277,7 @@ def precompute_fused_plans(params, *, prefill_ms=(), decode_ms=(),
                           ("verify", verify_ms)):
             for m in ms:
                 plans[(i, m, phase)] = fused_mlp_plan(
-                    wi, wo, wg, m=m, impl=impl, phase=phase)
+                    wi, wo, wg, m=m, impl=impl, phase=phase, tp=tp)
     return plans
 
 

@@ -28,6 +28,12 @@ Usage:
                                       # lifecycle hardening: NaN quarantine,
                                       # retry-with-replay, deadlines, the
                                       # degradation ladder (DESIGN.md §11)
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  ... --mesh 2,4                      # dp x tp mesh serving: 2 engine
+                                      # replicas, each tensor-parallel over
+                                      # 4 devices, behind the prefix-
+                                      # affinity router (DESIGN.md §13);
+                                      # token-exact vs single device
 """
 from __future__ import annotations
 
@@ -217,6 +223,13 @@ def main(argv: Optional[Sequence[str]] = None):
                     help=">0: override cfg.ternary_min_dim — reduced smoke "
                          "configs need ~64 for --packed to convert their "
                          "small projections")
+    ap.add_argument("--mesh", default="",
+                    help="continuous mode: 'dp,tp' (or bare 'tp') — dp "
+                         "engine replicas, each TP-sharded over tp devices "
+                         "of a ('model',) mesh, behind the prefix-affinity "
+                         "Router (DESIGN.md §13). Needs dp*tp devices; on "
+                         "CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--eos-id", type=int, default=-1,
                     help=">=0: stop a request early on this token")
     ap.add_argument("--chaos", action="store_true",
@@ -266,6 +279,9 @@ def main(argv: Optional[Sequence[str]] = None):
                   f"dense model", file=sys.stderr)
 
     if args.static:
+        if args.mesh:
+            raise SystemExit("--mesh is a continuous-engine feature; "
+                             "drop --static")
         server = BatchedServer(cfg, max_len)
         server.load(params)
         _, metrics = run_static(server, prompts, gens, args.batch,
@@ -288,18 +304,27 @@ def main(argv: Optional[Sequence[str]] = None):
         resilience = ResilienceConfig(
             deadline_s=args.deadline_s if args.deadline_s > 0 else None,
             max_retries=args.max_retries)
-        engine = ContinuousScheduler(cfg, max_slots=args.slots,
-                                     max_len=max_len, eos_id=eos,
-                                     cache=args.cache,
-                                     page_size=args.page_size,
-                                     n_pages=args.pages,
-                                     kv_dtype=args.kv_dtype or None,
-                                     prefix_cache=not args.no_prefix_cache,
-                                     paged_attn=args.paged_attn,
-                                     spec=spec, faults=faults,
-                                     resilience=resilience)
-        engine.load(params)
-        _, metrics = run_continuous(engine, prompts, gens)
+
+        def build_engine(mesh=None):
+            eng = ContinuousScheduler(
+                cfg, max_slots=args.slots, max_len=max_len, eos_id=eos,
+                cache=args.cache, page_size=args.page_size,
+                n_pages=args.pages, kv_dtype=args.kv_dtype or None,
+                prefix_cache=not args.no_prefix_cache,
+                paged_attn=args.paged_attn, spec=spec, faults=faults,
+                resilience=resilience, mesh=mesh)
+            eng.load(params)
+            return eng
+
+        if args.mesh:
+            from repro.distributed import router as router_lib
+            from repro.distributed import tp as tp_lib
+            dp, tp = tp_lib.parse_mesh(args.mesh)
+            meshes = tp_lib.replica_meshes(dp, tp)
+            front = router_lib.Router([build_engine(m) for m in meshes])
+        else:
+            front = build_engine()
+        _, metrics = run_continuous(front, prompts, gens)
     print(json.dumps(metrics))
     return metrics
 

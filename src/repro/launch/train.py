@@ -123,6 +123,11 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--data-parallel", type=int, default=1)
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="sync gradients as ternary codes + scales with "
+                         "error feedback (TernGrad-style shard_map DP "
+                         "trainer; needs --data-parallel > 1 and "
+                         "--model-parallel 1)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--set", action="append", default=[])
@@ -141,8 +146,28 @@ def main(argv=None):
     if args.data_parallel * args.model_parallel > 1:
         mesh = make_local_mesh(args.data_parallel, args.model_parallel)
 
-    model, data, jitted, init_state, _ = build(
-        cfg, args.batch, args.seq, mesh, args.lr, args.steps)
+    if args.compress_grads:
+        # the pure-DP shard_map trainer: replicated params/opt/error state,
+        # batch split on the data axis, ternary codes on the wire
+        if mesh is None or "data" not in mesh.axis_names \
+                or args.model_parallel > 1:
+            raise SystemExit("--compress-grads needs a pure data-parallel "
+                             "mesh: --data-parallel > 1 --model-parallel 1")
+        from repro.distributed import compression
+        model = LM(cfg)
+        data = SyntheticLM(cfg, args.batch, args.seq)
+        lr_fn = warmup_cosine(args.lr, min(100, args.steps // 10 + 1),
+                              args.steps)
+        cstep, c_opt_init = make_compressed_dp_step(model, cfg, mesh, lr_fn)
+        jitted = jax.jit(cstep, donate_argnums=(0, 1, 2))
+
+        def init_state(key):
+            params = model.init(key)
+            return {"params": params, "opt": c_opt_init(params),
+                    "err": compression.init_error_state(params)}
+    else:
+        model, data, jitted, init_state, _ = build(
+            cfg, args.batch, args.seq, mesh, args.lr, args.steps)
 
     def make_state(resume_step: Optional[int]):
         if resume_step is None:
@@ -156,16 +181,26 @@ def main(argv=None):
     t_hist = []
 
     def step_fn(step: int, state):
-        batch = (data.sharded_batch(step, mesh)
-                 if mesh is not None else data.sharded_batch(step))
         t0 = time.monotonic()
-        params, opt, metrics = jitted(state["params"], state["opt"], batch)
+        if args.compress_grads:
+            # shard_map splits the global batch on the data axis itself
+            batch = {k: jnp.asarray(v)
+                     for k, v in data.global_batch(step).items()}
+            params, opt, err, metrics = jitted(
+                state["params"], state["opt"], state["err"], batch)
+            state = {"params": params, "opt": opt, "err": err}
+        else:
+            batch = (data.sharded_batch(step, mesh)
+                     if mesh is not None else data.sharded_batch(step))
+            params, opt, metrics = jitted(state["params"], state["opt"],
+                                          batch)
+            state = {"params": params, "opt": opt}
         metrics = {k: float(v) for k, v in metrics.items()}
         dt = time.monotonic() - t0
         t_hist.append(dt)
         if step % args.log_every == 0:
             log.info("step %d loss %.4f (%.3fs)", step, metrics["loss"], dt)
-        return {"params": params, "opt": opt}, metrics
+        return state, metrics
 
     sup = TrainSupervisor(args.ckpt_dir, make_state, step_fn,
                           ckpt_every=args.ckpt_every,

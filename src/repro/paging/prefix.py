@@ -80,6 +80,19 @@ class PrefixCache:
         self.hits += len(matched)
         return keys, matched
 
+    def probe(self, prompt: np.ndarray) -> int:
+        """Number of leading prompt pages this cache holds — the router's
+        placement signal (DESIGN.md §13). Unlike ``lookup`` it mutates
+        nothing: no LRU touch, no hit/lookup counters — probing every
+        replica to *place* a request must not skew the per-replica metrics
+        or evict-ordering that the serving engine's real lookup drives."""
+        matched = 0
+        for key in page_keys(prompt, self.page_size):
+            if key not in self._entries:
+                break
+            matched += 1
+        return matched
+
     def register(self, key: bytes, page_id: int) -> None:
         """Pin ``page_id`` as the canonical holder of ``key``. The caller
         (PagePool) marks the page read-only; re-registering an existing key

@@ -126,7 +126,8 @@ class ContinuousScheduler:
                  kv_dtype: Optional[str] = None, prefix_cache: bool = True,
                  paged_attn: Optional[str] = None, spec=None,
                  faults: Optional[FaultConfig] = None,
-                 resilience: Optional[ResilienceConfig] = None):
+                 resilience: Optional[ResilienceConfig] = None,
+                 mesh=None):
         if cfg.is_encdec or cfg.family == "vlm":
             raise ValueError(
                 f"family {cfg.family!r} needs per-request encoder/frontend "
@@ -139,6 +140,11 @@ class ContinuousScheduler:
             cfg = dataclasses.replace(cfg, paged_attn_impl=paged_attn)
         self.cfg = cfg
         self.cache_mode = cache
+        # mesh != None = tensor-parallel engine (DESIGN.md §13): params
+        # shard over the mesh's "model" axis at load(), the KV cache over
+        # its head dim, and every jit below runs under GSPMD on the
+        # mesh's devices. mesh=None is the unchanged single-device path.
+        self.mesh = mesh
         self.model = LM(cfg)
         self.max_slots = max_slots
         self.max_len = max_len
@@ -221,6 +227,30 @@ class ContinuousScheduler:
         # all-false mask is bitwise-neutral on the logits)
         self._no_nan = jnp.zeros((max_slots,), jnp.bool_)
 
+        if self.mesh is not None:
+            # Commit every persistent device buffer onto the mesh now:
+            # freshly created arrays are committed to the default device,
+            # and mixing those with mesh-committed params in one jit is a
+            # placement error. The KV cache shards on the head dim
+            # (matching the column-split K/V projections); the small
+            # scheduler vectors replicate. Host pushes inside step()
+            # (jnp.asarray of a numpy mirror) stay uncommitted and follow
+            # the computation, so only the init-time buffers need this.
+            from repro.distributed import tp as tp_lib
+            self.pool.layers = tp_lib.device_put_cache(
+                self.pool.layers, cfg, self.mesh)
+            (self._dev_pos, self._dev_tok, self._dev_prev,
+             self._no_nan) = jax.device_put(
+                (self._dev_pos, self._dev_tok, self._dev_prev,
+                 self._no_nan),
+                tp_lib.replicated_sharding(
+                    (self._dev_pos, self._dev_tok, self._dev_prev,
+                     self._no_nan), self.mesh))
+            if cache == "paged":
+                self._dev_table = jax.device_put(
+                    self._dev_table,
+                    tp_lib.replicated_sharding(self._dev_table, self.mesh))
+
         def prefill(params, toks):
             cache_, logits = self.model.prefill(params, {"tokens": toks},
                                                 max_len)
@@ -279,7 +309,20 @@ class ContinuousScheduler:
         up to ``max_slots * max_len`` (admission groups flatten to
         M = batch·prompt_len rows) and decode at M = ``max_slots`` — so the
         autotuner cache is warm before the first request and no serving
-        step pays a first-call tune or cache write."""
+        step pays a first-call tune or cache write.
+
+        With a mesh, params are placed first: the model's logical
+        PartitionSpecs resolve against the mesh (packed spec twins
+        validated for pack-multiple shard boundaries) and the tree is
+        ``device_put`` accordingly, so every jit below runs GSPMD-sharded.
+        The precomputed plans then read each placed array's sharding and
+        record the per-shard problem plus its collective (DESIGN.md §13)."""
+        shard_fn = None
+        if self.mesh is not None:
+            from repro.distributed import tp as tp_lib
+            _, spec_tree = self.model.init_with_specs_abstract()
+            params = tp_lib.shard_params(params, spec_tree, self.mesh)
+            shard_fn = tp_lib.gemm_shard_fn(self.mesh)
         self.params = params
         top = max(self.max_slots * self.max_len, 1)
         # every pow2 bucket from M=1 up: a single short-prompt admission
@@ -300,7 +343,8 @@ class ContinuousScheduler:
             select=is_packed_linear,
             # warm exactly the impl linear_apply will dispatch ("ref"
             # off-TPU touches no autotune state)
-            impl=gemm_impl(self.cfg))
+            impl=gemm_impl(self.cfg),
+            shard=shard_fn)
         # fused-MLP plans warm alongside (mlp_apply dispatches the fused
         # lowering for fully-packed MLP blocks when the Pallas path is on —
         # the fused autotune keys must be resolved before the hot loop too)
@@ -318,6 +362,23 @@ class ContinuousScheduler:
             dlm = self.draft.model
             self._draft_layers = dlm.init_cache(self.max_slots,
                                                 self.max_len)["layers"]
+            if self.mesh is not None:
+                # the draft is cheap: replicate it (and its cache) on the
+                # mesh rather than TP-sharding it — token exactness needs
+                # only the target's shards, and a replicated draft keeps
+                # the draft round free of collectives
+                from repro.distributed import tp as tp_lib
+                dparams = jax.device_put(
+                    self.draft.params, tp_lib.replicated_sharding(
+                        self.draft.params, self.mesh))
+                if dataclasses.is_dataclass(self.draft):
+                    self.draft = dataclasses.replace(self.draft,
+                                                     params=dparams)
+                else:
+                    self.draft.params = dparams
+                self._draft_layers = jax.device_put(
+                    self._draft_layers, tp_lib.replicated_sharding(
+                        self._draft_layers, self.mesh))
             self._draft_insert = jax.jit(dlm.insert_cache,
                                          donate_argnums=(0,))
 
@@ -859,6 +920,14 @@ class ContinuousScheduler:
             "engine": "continuous",
             "max_slots": self.max_slots,
             "max_len": self.max_len,
+            "mesh": (None if self.mesh is None else
+                     {"tp": int(np.prod(list(dict(
+                          self.mesh.shape).values()))),
+                      "axes": dict(self.mesh.shape),
+                      "collective_plans": sum(
+                          1 for p in getattr(self, "gemm_plans",
+                                             {}).values()
+                          if getattr(p, "collective", None))}),
             "cache": cache_metrics,
             "spec": spec_metrics,
             "concurrency": {"peak": self._live_stat.peak,

@@ -25,7 +25,17 @@ GOLDEN = {
     "repro.core.weights": {
         "TernaryWeight", "Dense2Bit", "Tiled", "Bitplane", "Base3",
         "FORMATS", "register_format", "pack", "ternarize_stacked",
+        "validate_spec_twin",
     },
+    "repro.distributed": {
+        "sharding", "compression", "fault_tolerance", "tp", "router",
+    },
+    "repro.distributed.tp": {
+        "parse_mesh", "replica_meshes", "validate_param_specs",
+        "shard_params", "cache_sharding", "replicated_sharding",
+        "device_put_cache", "mesh_axis_sizes", "gemm_shard_fn",
+    },
+    "repro.distributed.router": {"Router"},
     "repro.kernels": {
         "ternary_gemm", "ternary_gemm_plan", "GemmPlan",
         "register_kernel", "kernel_registry", "serving_phase",

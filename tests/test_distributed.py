@@ -93,6 +93,31 @@ def test_ternarize_gradient_error_feedback():
     assert float(jnp.abs(e).max()) < 10.0
 
 
+def test_init_error_state_leaf_typing():
+    """Error-feedback state: float leaves get same-shape f32 accumulators;
+    non-float leaves (step counters etc.) get inert f32 scalars so the tree
+    still zips with the grad tree under jax.tree.map."""
+    import jax
+    import jax.numpy as jnp
+    params = {"w": jnp.zeros((4, 8), jnp.bfloat16),
+              "b": jnp.zeros((8,), jnp.float32),
+              "step": jnp.zeros((), jnp.int32)}
+    err = compression.init_error_state(params)
+    assert err["w"].shape == (4, 8) and err["w"].dtype == jnp.float32
+    assert err["b"].shape == (8,) and err["b"].dtype == jnp.float32
+    assert err["step"].shape == () and err["step"].dtype == jnp.float32
+    assert all(float(jnp.sum(jnp.abs(v))) == 0.0
+               for v in jax.tree.leaves(err))
+
+
+def test_compress_grads_cli_needs_dp_mesh():
+    """--compress-grads is the pure-DP shard_map trainer: it must refuse a
+    meshless or model-parallel launch instead of silently training dense."""
+    from repro.launch import train
+    with pytest.raises(SystemExit, match="data-parallel"):
+        train.main(["--reduced", "--steps", "1", "--compress-grads"])
+
+
 # ---------------------------------------------------------------------------
 # Multi-device subprocess tests (8 fake CPU devices)
 # ---------------------------------------------------------------------------

@@ -71,6 +71,20 @@ def test_straggler_watchdog():
     assert not w.observe(11, 1.0)
 
 
+def test_straggler_ewma_math():
+    """Exact EWMA semantics: the first observation seeds (never flags), the
+    flag threshold compares against the *pre-update* ewma, and the update
+    is (1-alpha)*ewma + alpha*dt — spikes are absorbed, not adopted."""
+    w = StragglerWatchdog(factor=2.0, alpha=0.1)
+    assert not w.observe(0, 1.0)       # seed: no ewma to compare against
+    assert w.ewma == 1.0
+    assert not w.observe(1, 2.0)       # 2.0 == factor*ewma, not >
+    assert abs(w.ewma - 1.1) < 1e-12   # 0.9*1.0 + 0.1*2.0
+    assert w.observe(2, 2.3)           # 2.3 > 2*1.1
+    assert abs(w.ewma - (0.9 * 1.1 + 0.1 * 2.3)) < 1e-12
+    assert w.straggler_steps == 1
+
+
 def test_straggler_events_bounded():
     """`events` is a ring capped at events_cap — a week of stragglers on a
     flaky node must not grow host memory — while `straggler_steps` stays

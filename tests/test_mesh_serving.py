@@ -1,0 +1,457 @@
+"""Mesh-sharded serving (DESIGN.md §13): spec-twin pack-boundary
+validation, collective-aware GEMM/MLP plans, the prefix-affinity router
+(unit, stub engines) and end-to-end tensor-parallel token exactness
+(subprocess with 8 fake CPU devices, like test_distributed)."""
+import json
+import os
+import subprocess
+import sys
+import types
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import weights
+from repro.distributed import tp as tp_lib
+from repro.distributed.router import Router
+from repro.kernels import ops
+from repro.paging.prefix import PrefixCache, page_keys
+
+
+def _ternary(k, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(-1, 2, size=(k, n)).astype(np.int8)
+
+
+# ---------------------------------------------------------------------------
+# Shard constraints per physical format
+# ---------------------------------------------------------------------------
+
+def test_shard_constraints_per_format():
+    t = _ternary(512, 256)
+    assert weights.pack(t, "dense2bit").shard_constraints() == \
+        {"k": (512, 16), "n": (256, 1)}
+    assert weights.pack(t, "bitplane").shard_constraints() == \
+        {"k": (512, 8), "n": (256, 1)}
+    assert weights.pack(t, "base3").shard_constraints() == \
+        {"k": (512, 5), "n": (256, 1)}
+    tiled = weights.pack(t, "tiled", tile_k=128, tile_n=128)
+    # tile-padded extents, whole-tile multiples
+    assert tiled.shard_constraints() == \
+        {"k": (512, 128), "n": (256, 128)}
+
+
+# ---------------------------------------------------------------------------
+# validate_spec_twin — pack-boundary enforcement (plain-dict meshes)
+# ---------------------------------------------------------------------------
+
+def test_spec_twin_legal_splits_pass():
+    wc = weights.pack(_ternary(64, 32), "dense2bit")
+    mesh = {"model": 4}
+    # N column split: multiple 1, any divisor of 32 works
+    assert weights.validate_spec_twin(
+        wc, wc.replace(packed=P(None, "model")), mesh) is None
+    # K row split: 64 / 4 = 16 per shard == one pack word exactly
+    assert weights.validate_spec_twin(
+        wc, wc.replace(packed=P("model", None)), mesh) is None
+
+
+def test_spec_twin_off_multiple_split_raises():
+    wc = weights.pack(_ternary(64, 32), "dense2bit")
+    # 8-way K split -> 8 values/shard, half a 16-value pack word
+    with pytest.raises(ValueError) as ei:
+        weights.validate_spec_twin(
+            wc, wc.replace(packed=P("model", None)), {"model": 8})
+    msg = str(ei.value)
+    assert "16-value pack multiple" in msg
+    assert "nearest legal boundary is 16" in msg
+    assert "K" in msg
+
+
+def test_spec_twin_tiled_whole_tile_rule():
+    wc = weights.pack(_ternary(512, 256), "tiled", tile_k=128, tile_n=128)
+    mesh = {"model": 4}
+    # K: 4 tiles / 4 shards -> one whole tile each
+    assert weights.validate_spec_twin(
+        wc, wc.replace(packed=P("model", None)), mesh) is None
+    # N: 2 tiles cannot split 4 ways without cutting a tile
+    with pytest.raises(ValueError, match="128-value pack multiple"):
+        weights.validate_spec_twin(
+            wc, wc.replace(packed=P(None, "model")), mesh)
+
+
+def test_spec_twin_stack_axis_burns_mesh_axis():
+    # a leading stack entry consumes "model" -> the trailing K entry
+    # resolves to nothing (no-reuse rule), so no boundary to violate
+    wc = weights.pack(_ternary(24, 32), "dense2bit")  # 24 % 16 != 0
+    twin = wc.replace(packed=P("model", "model", None))
+    assert weights.validate_spec_twin(wc, twin, {"model": 8}) is None
+
+
+def test_spec_twin_replicated_is_noop():
+    wc = weights.pack(_ternary(24, 32), "dense2bit")
+    assert weights.validate_spec_twin(
+        wc, wc.replace(packed=P()), {"model": 8}) is None
+    # no spec leaf at all -> nothing sharded -> nothing to check
+    assert weights.validate_spec_twin(
+        wc, wc.replace(packed=None), {"model": 8}) is None
+
+
+def test_validate_param_specs_counts_containers():
+    wc = weights.pack(_ternary(64, 32), "dense2bit")
+    params = {"a": {"w_packed": wc}, "b": np.zeros(3)}
+    specs = {"a": {"w_packed": wc.replace(packed=P(None, "model"),
+                                          scale=P("model"), bias=None)},
+             "b": P()}
+    mesh = tp_lib.mesh_axis_sizes({"model": 4})
+    assert tp_lib.validate_param_specs(params, specs, mesh) == 1
+
+
+# ---------------------------------------------------------------------------
+# Collective-aware GEMM plans
+# ---------------------------------------------------------------------------
+
+def test_gemm_plan_k_partition_records_psum():
+    w = weights.pack(_ternary(512, 256), "dense2bit")
+    plan = ops.ternary_gemm_plan(w, 32, phase="decode",
+                                 partition="k", tp=4)
+    assert (plan.partition, plan.collective, plan.tp) == ("k", "psum", 4)
+    assert (plan.k, plan.n) == (128, 256)          # per-shard K
+    r = plan.roofline()
+    assert sorted(r) == [
+        "achieved_flops", "arithmetic_intensity", "bound", "bytes",
+        "ceiling_flops", "collective", "collective_bytes", "flops",
+        "headroom", "model_time_s", "peak_flops", "tp"]
+    # ring all-reduce: 2*(tp-1)/tp of the (m, n) f32 partial output
+    assert r["collective_bytes"] == 2.0 * 3 / 4 * 32 * 256 * 4
+    assert r["collective"] == "psum" and r["tp"] == 4
+
+
+def test_gemm_plan_n_partition_no_collective():
+    w = weights.pack(_ternary(512, 256), "dense2bit")
+    plan = ops.ternary_gemm_plan(w, 32, phase="decode",
+                                 partition="n", tp=4)
+    assert (plan.partition, plan.collective) == ("n", None)
+    assert (plan.k, plan.n) == (512, 64)           # per-shard N
+    assert plan.roofline()["collective_bytes"] == 0.0
+    # per-shard tiles never exceed the shard extent
+    if plan.block_n:
+        assert plan.block_n <= 64
+
+
+def test_gemm_plan_partition_validation():
+    w = weights.pack(_ternary(512, 256), "dense2bit")
+    with pytest.raises(ValueError, match="partition must be"):
+        ops.ternary_gemm_plan(w, 32, phase="decode", partition="m", tp=4)
+    with pytest.raises(ValueError, match="tp must be"):
+        ops.ternary_gemm_plan(w, 32, phase="decode", tp=0)
+    # 3-way K split of 512 lands off the 16-value word boundary
+    with pytest.raises(ValueError, match="pack multiple"):
+        ops.ternary_gemm_plan(w, 32, phase="decode", partition="k", tp=3)
+    # tp=1 degenerates to an unsharded plan
+    p1 = ops.ternary_gemm_plan(w, 32, phase="decode", partition="k", tp=1)
+    assert p1.partition is None and p1.collective is None and p1.tp == 1
+
+
+def test_fused_mlp_plan_tp_shards_hidden_dim():
+    w_in = weights.pack(_ternary(128, 256, seed=1), "dense2bit")
+    w_out = weights.pack(_ternary(256, 128, seed=2), "dense2bit")
+    plan = ops.fused_mlp_plan(w_in, w_out, m=32, phase="prefill", tp=4)
+    assert plan.ff == 64 and plan.tp == 4          # per-shard hidden width
+    assert plan.collective == "psum"
+    up, down = plan.sub_plans()
+    assert (up.partition, up.collective) == ("n", None)
+    assert (down.partition, down.collective) == ("k", "psum")
+    assert up.n == 64 and down.k == 64
+    r = plan.roofline()
+    assert r["tp"] == 4 and r["collective"] == "psum"
+    assert r["collective_bytes"] == 2.0 * 3 / 4 * 32 * 128 * 4
+    # indivisible hidden dim refuses to plan
+    with pytest.raises(ValueError, match="pack multiple"):
+        ops.fused_mlp_plan(w_in, w_out, m=32, phase="prefill", tp=3)
+
+
+def test_gemm_shard_fn_reads_placed_specs():
+    shard = tp_lib.gemm_shard_fn({"model": 4})
+
+    def stub(spec, ndim):
+        arr = types.SimpleNamespace(
+            sharding=None if spec is None
+            else types.SimpleNamespace(spec=spec), ndim=ndim)
+        return types.SimpleNamespace(packed=arr)
+
+    assert shard((), stub(P(None, "model"), 2)) == ("n", 4)
+    assert shard((), stub(P("model"), 2)) == ("k", 4)
+    # placed specs strip trailing Nones: a stacked (L, Kw, N) down-proj
+    # reads back as P(None, 'model') — still the K axis once padded
+    assert shard((), stub(P(None, "model"), 3)) == ("k", 4)
+    assert shard((), stub(P(None, None, "model"), 3)) == ("n", 4)
+    assert shard((), stub(P(), 2)) == (None, 1)
+    assert shard((), stub(None, 2)) == (None, 1)
+    # no "model" axis on the mesh -> never sharded
+    assert tp_lib.gemm_shard_fn({"data": 8})(
+        (), stub(P(None, "model"), 2)) == (None, 1)
+
+
+# ---------------------------------------------------------------------------
+# parse_mesh / replica_meshes
+# ---------------------------------------------------------------------------
+
+def test_parse_mesh():
+    assert tp_lib.parse_mesh("2,4") == (2, 4)
+    assert tp_lib.parse_mesh("4") == (1, 4)       # bare tp
+    assert tp_lib.parse_mesh(" 1 , 2 ") == (1, 2)
+    with pytest.raises(ValueError):
+        tp_lib.parse_mesh("1,2,3")
+    with pytest.raises(ValueError):
+        tp_lib.parse_mesh("0,4")
+
+
+def test_replica_meshes_needs_enough_devices():
+    # the main test process keeps the single real CPU device
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        tp_lib.replica_meshes(2, 4)
+
+
+# ---------------------------------------------------------------------------
+# Router placement policy (stub engines)
+# ---------------------------------------------------------------------------
+
+class _StubEngine:
+    def __init__(self, probe=0, depth=0, live=0, with_prefix=True):
+        prefix = (types.SimpleNamespace(probe=lambda p: probe)
+                  if with_prefix else None)
+        self.pool = types.SimpleNamespace(prefix=prefix)
+        self.queue = types.SimpleNamespace(depth=lambda: depth)
+        self._live = {i: None for i in range(live)}
+
+
+def test_router_validates_args():
+    with pytest.raises(ValueError):
+        Router([])
+    with pytest.raises(ValueError):
+        Router([_StubEngine()], spill_threshold=-1)
+
+
+def test_router_cold_traffic_goes_to_least_load():
+    r = Router([_StubEngine(depth=3), _StubEngine(live=1), _StubEngine()])
+    assert r.place(np.arange(8)) == 2
+    assert r.affinity_candidates == 0
+
+
+def test_router_prefix_affinity_wins():
+    r = Router([_StubEngine(probe=0), _StubEngine(probe=3, depth=2),
+                _StubEngine(probe=1)])
+    assert r.place(np.arange(8)) == 1       # deepest prefix, despite load
+    assert (r.affinity_candidates, r.affinity_hits, r.spills) == (1, 1, 0)
+
+
+def test_router_probe_tie_breaks_by_load():
+    r = Router([_StubEngine(probe=2, depth=2), _StubEngine(probe=2)])
+    assert r.place(np.arange(8)) == 1
+
+
+def test_router_spills_past_threshold():
+    r = Router([_StubEngine(probe=4, depth=6, live=1), _StubEngine()],
+               spill_threshold=4)
+    assert r.place(np.arange(8)) == 1       # favorite is 7 deeper -> spill
+    assert (r.spills, r.affinity_hits) == (1, 0)
+    # threshold is a > comparison: exactly at threshold stays sticky
+    r2 = Router([_StubEngine(probe=4, depth=4), _StubEngine()],
+                spill_threshold=4)
+    assert r2.place(np.arange(8)) == 0
+    assert r2.spills == 0
+
+
+def test_router_dense_engines_fall_back_to_load():
+    # SlotPool engines have no prefix cache: probe 0 everywhere
+    r = Router([_StubEngine(with_prefix=False, depth=1),
+                _StubEngine(with_prefix=False)])
+    assert r.place(np.arange(8)) == 1
+    assert r.affinity_candidates == 0
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache.probe — the router's non-mutating placement signal
+# ---------------------------------------------------------------------------
+
+def test_prefix_probe_counts_without_mutating():
+    cache = PrefixCache(page_size=4)
+    prompt = np.arange(10, dtype=np.int32)
+    keys = page_keys(prompt, 4)
+    cache.register(keys[0], 7)
+    cache.register(keys[1], 8)
+    other = np.arange(100, 108, dtype=np.int32)
+    cache.register(page_keys(other, 4)[0], 9)
+    order = list(cache._entries)
+    assert cache.probe(prompt) == 2         # 2 leading pages held, tail not
+    assert cache.probe(other) == 1
+    assert cache.probe(np.arange(50, 60)) == 0
+    # no LRU touch, no counters — unlike lookup()
+    assert list(cache._entries) == order
+    assert (cache.lookups, cache.hits) == (0, 0)
+    cache.lookup(prompt)
+    assert cache.lookups == 3 and cache.hits == 2
+    assert list(cache._entries) != order    # lookup DOES touch
+
+
+# ---------------------------------------------------------------------------
+# Multi-device subprocess tests (8 fake CPU devices; the main process must
+# keep the single real device, so these fork like test_distributed does)
+# ---------------------------------------------------------------------------
+
+_SUBPROC_PRELUDE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, json
+import jax.numpy as jnp
+import numpy as np
+"""
+
+_SERVE_SETUP = """
+import dataclasses
+from repro.configs import get_config
+from repro.models import LM
+from repro.models.layers import pack_params
+from repro.serving.engine import ContinuousScheduler
+from repro.distributed import tp as tp_lib
+
+cfg = get_config("ternary-paper", reduced=True)
+cfg = dataclasses.replace(cfg, ternary_min_dim=64)
+model = LM(cfg)
+params = model.init(jax.random.PRNGKey(0))
+packed = pack_params(params, cfg)
+pcfg = dataclasses.replace(cfg, quantization="ternary_packed")
+rng = np.random.default_rng(0)
+"""
+
+SUBPROC_TIMEOUT = int(os.environ.get("REPRO_TEST_SUBPROC_TIMEOUT", "900"))
+
+
+def _run_sub(code: str) -> dict:
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    try:
+        out = subprocess.run([sys.executable, "-c", _SUBPROC_PRELUDE + code],
+                             capture_output=True, text=True,
+                             timeout=SUBPROC_TIMEOUT, env=env)
+    except subprocess.TimeoutExpired:
+        pytest.skip(f"model-compile subprocess exceeded {SUBPROC_TIMEOUT}s "
+                    "on this machine")
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_tp_serving_token_exact_dense_and_paged():
+    """A tp=4 engine produces bitwise-identical tokens to the single-device
+    engine, dense and paged, and reports its collective plans."""
+    res = _run_sub(_SERVE_SETUP + """
+prompts = [rng.integers(1, cfg.vocab_size, size=12).astype(np.int32)
+           for _ in range(4)]
+
+def serve(mesh, cache):
+    eng = ContinuousScheduler(pcfg, 2, 32, cache=cache, mesh=mesh)
+    eng.load(packed)
+    reqs = [eng.submit(p, 6) for p in prompts]
+    metrics = eng.run()
+    return [[int(t) for t in r.tokens] for r in reqs], metrics
+
+out = {}
+mesh = tp_lib.replica_meshes(1, 4)[0]
+for cache in ("dense", "paged"):
+    ref, _ = serve(None, cache)
+    got, m = serve(mesh, cache)
+    assert all(len(t) == 6 for t in ref)
+    out[cache] = {"exact": got == ref, "mesh": m["mesh"]}
+print(json.dumps(out))
+""")
+    for cache in ("dense", "paged"):
+        assert res[cache]["exact"], f"{cache}: tp=4 tokens diverged"
+        assert res[cache]["mesh"]["tp"] == 4
+        assert res[cache]["mesh"]["axes"] == {"model": 4}
+        assert res[cache]["mesh"]["collective_plans"] > 0
+
+
+@pytest.mark.slow
+def test_tp_spec_serving_token_exact():
+    """Speculative decoding under tp=4: draft replicated, target sharded,
+    tokens still exact vs the single-device spec engine."""
+    res = _run_sub(_SERVE_SETUP + """
+from repro.spec.draft import SpecConfig
+prompts = [rng.integers(1, cfg.vocab_size, size=12).astype(np.int32)
+           for _ in range(3)]
+spec = SpecConfig(draft="resparsify", k=2)
+
+def serve(mesh, cache):
+    eng = ContinuousScheduler(pcfg, 2, 32, cache=cache, spec=spec,
+                              mesh=mesh)
+    eng.load(packed)
+    reqs = [eng.submit(p, 6) for p in prompts]
+    eng.run()
+    return [[int(t) for t in r.tokens] for r in reqs]
+
+mesh = tp_lib.replica_meshes(1, 4)[0]
+out = {cache: serve(None, cache) == serve(mesh, cache)
+       for cache in ("dense", "paged")}
+print(json.dumps(out))
+""")
+    assert res["dense"], "spec dense: tp=4 tokens diverged"
+    assert res["paged"], "spec paged: tp=4 tokens diverged"
+
+
+@pytest.mark.slow
+def test_router_dp2_tp4_affinity_and_exactness():
+    """2 replicas x tp=4: warm each replica with a distinct prefix, then
+    route 10 repeated-prefix requests — every one should land on the
+    replica holding its prefix pages (affinity rate 1.0 >= the 0.8 gate)
+    and every token must match the single-device reference."""
+    res = _run_sub(_SERVE_SETUP + """
+from repro.distributed.router import Router
+
+def make_prompt(prefix, seed):
+    tail = np.random.default_rng(seed).integers(
+        1, cfg.vocab_size, size=4).astype(np.int32)
+    return np.concatenate([prefix, tail])
+
+pa = rng.integers(1, cfg.vocab_size, size=8).astype(np.int32)
+pb = rng.integers(1, cfg.vocab_size, size=8).astype(np.int32)
+warm = [make_prompt(pa, 100), make_prompt(pb, 101)]
+hot = [make_prompt(pa if i % 2 == 0 else pb, i) for i in range(10)]
+
+def build(mesh):
+    eng = ContinuousScheduler(pcfg, 2, 32, cache="paged", page_size=4,
+                              mesh=mesh)
+    eng.load(packed)
+    return eng
+
+meshes = tp_lib.replica_meshes(2, 4)
+router = Router([build(m) for m in meshes])
+warm_reqs = [router.submit(p, 6) for p in warm]
+router.run()                                  # registers prefix pages
+hot_reqs = [router.submit(p, 6) for p in hot]
+metrics = router.run()
+
+ref = build(None)
+ref_reqs = [ref.submit(p, 6) for p in warm + hot]
+ref.run()
+
+got = [[int(t) for t in r.tokens] for r in warm_reqs + hot_reqs]
+want = [[int(t) for t in r.tokens] for r in ref_reqs]
+print(json.dumps({
+    "exact": got == want,
+    "affinity": metrics["affinity"],
+    "spills": metrics["spills"],
+    "placements": metrics["placements"],
+    "drained": [r["drained"] for r in metrics["per_replica"]],
+    "meshes": [r["mesh"] for r in metrics["per_replica"]],
+}))
+""")
+    assert res["exact"], "routed tokens diverged from single-device"
+    assert res["affinity"]["candidates"] == 10
+    assert res["affinity"]["rate"] >= 0.8
+    assert res["spills"] == 0
+    assert sorted(res["drained"]) == [6, 6]   # both replicas worked
+    assert all(m == {"axes": {"model": 4}} for m in res["meshes"])
