@@ -57,10 +57,20 @@ def main(argv=None) -> int:
                     help="allowed drop in structural ratio= entries")
     ap.add_argument("--min-us", type=float, default=200.0,
                     help="report-only noise floor for per-entry listing")
+    ap.add_argument("--prefix", default=None,
+                    help="gate only baseline entries whose name starts "
+                         "with this prefix (coverage, aggregate, and "
+                         "ratios restricted to the subset) — used by CI "
+                         "legs that run a single bench module against "
+                         "the shared baseline")
     args = ap.parse_args(argv)
 
     base = _load(args.baseline)
     cur = _load(args.current)
+    if args.prefix is not None:
+        base = {n: e for n, e in base.items()
+                if n.startswith(args.prefix)}
+        assert base, f"no baseline entries match --prefix {args.prefix}"
     failures = []
 
     # coverage

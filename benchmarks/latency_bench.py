@@ -1,0 +1,203 @@
+"""Latency-percentile benchmark under offered load (DESIGN.md §14).
+
+Throughput benchmarks (serving_bench) drive the engine closed-loop, which
+hides head-of-line blocking: a whole-prompt prefill monopolises the model
+for its full duration, so an interactive request that arrives just behind
+a long prompt waits the entire prefill before its first token. Chunked
+prefill bounds that wait at one token-budgeted step. This module measures
+exactly that effect:
+
+* ``latency_chunked_vs_whole`` — a *pinned* arrival pattern (a long
+  batch-class prompt immediately shadowed by short interactive requests,
+  repeated) replayed open-loop against the whole-prompt engine and the
+  chunked engine. The gated entry is the interactive-class p99-TTFT ratio
+  (whole / chunked), capped at 2.0 so the CI floor (baseline * 0.75) sits
+  at the issue's >= 1.5x contract without riding a lucky run. The pattern
+  is structural — the ratio is ~(long-prefill wall / step wall), several x
+  on any host — so the gate is machine-independent.
+
+* ``latency_load_sweep`` — the seeded Poisson/bursty harness at a few
+  offered rates, reporting p50/p99 TTFT and TPOT (observability entries:
+  coverage-gated, times not individually gated).
+
+Both engines replay the identical schedule, and greedy decoding is
+deterministic per request, so token-exactness across admission policies is
+asserted alongside the latency claim.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import record
+from repro.configs import get_config
+from repro.serving import (Arrival, ContinuousScheduler, SchedConfig,
+                           SLOClass, TrafficConfig, make_schedule,
+                           run_open_loop)
+
+INTERACTIVE = SLOClass("interactive", ttft_target_s=0.2,
+                       tpot_target_s=0.05, priority=0)
+BATCH = SLOClass("batch", ttft_target_s=None, tpot_target_s=None,
+                 priority=1)
+
+
+def _pct(vals, q):
+    return float(np.percentile(np.asarray(vals, np.float64), q))
+
+
+def _ms(x):
+    return f"{x * 1e3:.1f}"
+
+
+def _engine(cfg, slots, max_len, params=None, **kw):
+    eng = ContinuousScheduler(cfg, max_slots=slots, max_len=max_len, **kw)
+    if params is None:
+        params = eng.model.init(jax.random.PRNGKey(0))
+    eng.load(params)
+    return eng, params
+
+
+def _shadowed_schedule(cfg, *, rounds, long_len, short_len, shorts, gap_s,
+                       seed=0):
+    """The head-of-line pattern: at each round start a long batch prompt
+    arrives, and ``shorts`` interactive requests arrive 10ms behind it —
+    inside the window where whole-prompt admission is busy prefilling."""
+    rng = np.random.default_rng(seed)
+    sched = []
+    for i in range(rounds):
+        t = i * gap_s
+        sched.append(Arrival(
+            t=t, prompt=rng.integers(0, cfg.vocab_size, size=long_len,
+                                     dtype=np.int32),
+            max_new=8, slo=BATCH))
+        for j in range(shorts):
+            sched.append(Arrival(
+                t=t + 0.01 + 0.002 * j,
+                prompt=rng.integers(0, cfg.vocab_size, size=short_len,
+                                    dtype=np.int32),
+                max_new=16, slo=INTERACTIVE))
+    return sched
+
+
+def _streams(reqs):
+    return [list(r.tokens) for r in reqs]
+
+
+def latency_chunked_vs_whole(quick: bool = False):
+    cfg = get_config("ternary-paper", reduced=True, num_layers=2)
+    # the long prompt must dwarf a decode step for the head-of-line
+    # effect to be structural: at reduced-model scale a 1024-token
+    # prefill is ~20-40x one decode step on CPU hosts
+    rounds = 4 if quick else 8
+    long_len = 1024 if quick else 2048
+    gap_s = 0.3 if quick else 0.5
+    slots = 4
+    max_len = long_len + 16 + 1
+    sched = _shadowed_schedule(cfg, rounds=rounds, long_len=long_len,
+                               short_len=8, shorts=3, gap_s=gap_s)
+
+    whole, params = _engine(cfg, slots, max_len)
+    chunked, _ = _engine(cfg, slots, max_len, params,
+                         sched=SchedConfig(chunk_tokens=32))
+
+    # pass 1 per engine: compile warmup (the open loop hits each (P,S)
+    # window shape once); pass 2: measured
+    run_open_loop(whole, sched)
+    reqs_w, mw = run_open_loop(whole, sched)
+    run_open_loop(chunked, sched)
+    reqs_c, mc = run_open_loop(chunked, sched)
+
+    exact = _streams(reqs_w) == _streams(reqs_c)
+    ttft_w = [r.ttft_s for r in reqs_w if r.slo is INTERACTIVE]
+    ttft_c = [r.ttft_s for r in reqs_c if r.slo is INTERACTIVE]
+    p99_w, p99_c = _pct(ttft_w, 99), _pct(ttft_c, 99)
+    ratio = p99_w / p99_c
+    tpot_c = [r.tpot_s for r in reqs_c if r.tpot_s is not None]
+    tpot_w = [r.tpot_s for r in reqs_w if r.tpot_s is not None]
+
+    record("latency/whole_prompt", mw["traffic"]["makespan_s"],
+           f"p50_ttft_ms={_ms(_pct(ttft_w, 50))},"
+           f"p99_ttft_ms={_ms(p99_w)},"
+           f"p99_tpot_ms={_ms(_pct(tpot_w, 99))}")
+    record("latency/chunked", mc["traffic"]["makespan_s"],
+           f"p50_ttft_ms={_ms(_pct(ttft_c, 50))},"
+           f"p99_ttft_ms={_ms(p99_c)},"
+           f"p99_tpot_ms={_ms(_pct(tpot_c, 99))},"
+           f"chunk_steps={mc['sched']['chunk_steps']}")
+    # gated: capped at 2.0 so the CI floor (x0.75) is exactly the issue's
+    # 1.5x contract; the measured ratio (typically >> 2) rides along as
+    # an uncapped report field
+    record("latency/p99_ttft_chunked_vs_whole", 0.0,
+           f"ratio={min(ratio, 2.0):.2f},token_exact={exact},"
+           f"measured={ratio:.2f}")
+    assert exact, "chunked streams diverged from whole-prompt admission"
+    assert ratio >= 1.5, (
+        f"interactive p99 TTFT improved only {ratio:.2f}x "
+        f"(whole {p99_w * 1e3:.1f}ms vs chunked {p99_c * 1e3:.1f}ms)")
+
+
+def latency_load_sweep(quick: bool = False):
+    cfg = get_config("ternary-paper", reduced=True, num_layers=2)
+    n = 16 if quick else 48
+    rates = (4.0, 12.0) if quick else (4.0, 12.0, 24.0)
+    eng, _ = _engine(cfg, 4, 128 + 16 + 1,
+                     sched=SchedConfig(chunk_tokens=32))
+
+    def one(name, tc):
+        sched = make_schedule(tc, cfg.vocab_size,
+                              classes=(INTERACTIVE, BATCH),
+                              class_weights=(0.75, 0.25))
+        reqs, m = run_open_loop(eng, sched)
+        lat = m["latency"]
+        record(name, m["traffic"]["makespan_s"],
+               f"p50_ttft_ms={_ms(lat['ttft_s']['p50'])},"
+               f"p99_ttft_ms={_ms(lat['ttft_s']['p99'])},"
+               f"p99_tpot_ms={_ms(lat['tpot_s']['p99'])},"
+               f"max_lag_s={m['traffic']['max_submit_lag_s']}")
+        assert m["drained"] == n, (m["drained"], n)
+
+    for rate in rates:
+        one(f"latency/sweep_poisson_r{int(rate)}",
+            TrafficConfig(kind="poisson", rate=rate, n_requests=n,
+                          prompt_lens=(8, 32, 128),
+                          prompt_weights=(0.5, 0.3, 0.2),
+                          gen_lens=(8, 16), seed=11))
+    one("latency/sweep_bursty_r12",
+        TrafficConfig(kind="bursty", rate=12.0, n_requests=n,
+                      prompt_lens=(8, 32, 128),
+                      prompt_weights=(0.5, 0.3, 0.2),
+                      gen_lens=(8, 16), burst_size=6, seed=11))
+
+
+ALL = [latency_chunked_vs_whole, latency_load_sweep]
+
+
+def main(argv=None):
+    """Standalone CLI for the CI latency-smoke leg: runs only this
+    module's benches and writes the same JSON shape as run.py --json, so
+    check_regression.py --prefix latency/ gates it against the shared
+    baseline."""
+    from benchmarks.common import RESULTS, emit_header
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="",
+                    help="also write results as JSON to this path")
+    args = ap.parse_args(argv)
+
+    emit_header()
+    for bench in ALL:
+        bench(quick=args.quick)
+    if args.json:
+        entries = {r["name"]: {"us_per_call": r["us_per_call"],
+                               "derived": r["derived"]} for r in RESULTS}
+        with open(args.json, "w") as f:
+            json.dump({"version": 1, "quick": args.quick,
+                       "entries": entries}, f, indent=1)
+        print(f"wrote {len(entries)} entries to {args.json}")
+
+
+if __name__ == "__main__":
+    main()

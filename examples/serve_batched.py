@@ -10,19 +10,68 @@ per round and the target verifies them in one multi-token forward —
 outputs are token-exact vs the plain engine, and the printed spec block
 shows the acceptance rate the draft achieved.
 
+Pass ``--traffic poisson`` (or ``bursty``) to drive the engine open-loop
+from a seeded arrival schedule with chunked prefill + SLO-aware admission
+(DESIGN.md §14): requests split between an interactive class (tight TTFT
+target, priority 0) and a batch class, prompts stream in ``--chunk-tokens``
+per step alongside decode, and the printed report shows per-class
+p50/p99 TTFT.
+
 Run:  PYTHONPATH=src python examples/serve_batched.py --arch mixtral-8x22b
       PYTHONPATH=src python examples/serve_batched.py \
           --arch ternary-paper --spec --spec-k 4
+      PYTHONPATH=src python examples/serve_batched.py \
+          --arch ternary-paper --traffic poisson --rate 12
 """
 import argparse
 import json
 
 import jax
+import numpy as np
 
 from repro.configs import get_config
 from repro.launch.serve import (BatchedServer, build_workload, run_continuous,
                                 run_static)
-from repro.serving import ContinuousScheduler
+from repro.serving import (ContinuousScheduler, SchedConfig, SLOClass,
+                           TrafficConfig, make_schedule, run_open_loop)
+
+
+def serve_traffic(args):
+    """Open-loop demo (DESIGN.md §14): chunked prefill + SLO admission
+    under a seeded Poisson/bursty arrival schedule, with a per-class
+    latency-percentile report."""
+    cfg = get_config(args.arch, reduced=True)
+    gen_lens = [int(g) for g in args.gen_lens.split(",")]
+    interactive = SLOClass("interactive", ttft_target_s=0.5,
+                           tpot_target_s=0.1, priority=0)
+    batch = SLOClass("batch", ttft_target_s=None, priority=1)
+    engine = ContinuousScheduler(
+        cfg, max_slots=args.slots,
+        max_len=args.prompt_len + max(gen_lens) + 1,
+        sched=SchedConfig(chunk_tokens=args.chunk_tokens))
+    engine.load(engine.model.init(jax.random.PRNGKey(0)))
+    tc = TrafficConfig(kind=args.traffic, rate=args.rate,
+                       n_requests=args.requests,
+                       prompt_lens=(args.prompt_len,),
+                       gen_lens=tuple(gen_lens), seed=0)
+    schedule = make_schedule(tc, cfg.vocab_size,
+                             classes=(interactive, batch),
+                             class_weights=(0.75, 0.25))
+    reqs, metrics = run_open_loop(engine, schedule)
+    for name in ("interactive", "batch"):
+        ttfts = [r.ttft_s for r in reqs
+                 if r.slo is not None and r.slo.name == name
+                 and r.ttft_s is not None]
+        if ttfts:
+            print(f"# {name}: n={len(ttfts)} "
+                  f"p50_ttft={np.percentile(ttfts, 50) * 1e3:.1f}ms "
+                  f"p99_ttft={np.percentile(ttfts, 99) * 1e3:.1f}ms")
+    t = metrics["traffic"]
+    print(f"# {args.traffic} rate={args.rate}/s offered={t['offered_rate']} "
+          f"makespan={t['makespan_s']}s "
+          f"chunk_steps={metrics['sched']['chunk_steps']}")
+    print(json.dumps({k: v for k, v in metrics.items()
+                      if k != "per_request"}))
 
 
 def main():
@@ -38,7 +87,19 @@ def main():
                     help="speculative decoding (layer-skip draft; "
                          "token-exact vs the plain engine)")
     ap.add_argument("--spec-k", type=int, default=4)
+    ap.add_argument("--traffic", default="off",
+                    choices=("poisson", "bursty", "off"),
+                    help="open-loop arrival schedule + chunked prefill "
+                         "with SLO classes (DESIGN.md §14)")
+    ap.add_argument("--rate", type=float, default=12.0,
+                    help="--traffic: offered load, requests/second")
+    ap.add_argument("--chunk-tokens", type=int, default=16,
+                    help="--traffic: prefill chunk size per step")
     args = ap.parse_args()
+
+    if args.traffic != "off":
+        serve_traffic(args)
+        return
 
     cfg = get_config(args.arch, reduced=True)
     gen_lens = [int(g) for g in args.gen_lens.split(",")]

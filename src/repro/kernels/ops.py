@@ -83,9 +83,10 @@ __all__ = ["ternary_gemm", "ternary_gemm_plan", "GemmPlan", "KernelImpl",
 # Serving-phase tag consumed at trace time: prefill GEMMs are M=B·L
 # GEMM-shaped, decode GEMMs are M=slots GEMV-shaped, verify GEMMs
 # (speculative decoding, DESIGN.md §10) are M=slots·(k+1) small-GEMM
-# shaped — no two of them may share (and thrash) one autotune entry even
-# when their bucketed M collides.
-SERVING_PHASES = ("prefill", "decode", "verify")
+# shaped, and chunk GEMMs (chunked prefill, DESIGN.md §14) are
+# M=P·chunk_tokens mid-size — no two of them may share (and thrash) one
+# autotune entry even when their bucketed M collides.
+SERVING_PHASES = ("prefill", "decode", "verify", "chunk")
 
 _SERVING_PHASE: contextvars.ContextVar[Optional[str]] = \
     contextvars.ContextVar("repro_serving_phase", default=None)
@@ -93,9 +94,9 @@ _SERVING_PHASE: contextvars.ContextVar[Optional[str]] = \
 
 @contextlib.contextmanager
 def serving_phase(phase: Optional[str]):
-    """Tag ``ternary_gemm`` dispatches traced inside this scope as
-    ``"prefill"``, ``"decode"`` or ``"verify"`` so the autotuner keys them
-    separately (the serving engine wraps its phase jit calls in this)."""
+    """Tag ``ternary_gemm`` dispatches traced inside this scope with one
+    of ``SERVING_PHASES`` so the autotuner keys them separately (the
+    serving engine wraps its phase jit calls in this)."""
     assert phase is None or phase in SERVING_PHASES, phase
     token = _SERVING_PHASE.set(phase)
     try:
@@ -821,6 +822,7 @@ def ternary_gemm_plan(
 
 
 def precompute_plans(params, *, prefill_ms=(), decode_ms=(), verify_ms=(),
+                     chunk_ms=(),
                      select: Optional[Callable] = None, impl: str = "auto",
                      shard: Optional[Callable] = None,
                      ) -> Dict[Tuple[int, ...], GemmPlan]:
@@ -847,7 +849,7 @@ def precompute_plans(params, *, prefill_ms=(), decode_ms=(), verify_ms=(),
     for i, (path, w) in enumerate(ws):
         part, ntp = shard(path, w) if shard is not None else (None, 1)
         for phase, ms in (("prefill", prefill_ms), ("decode", decode_ms),
-                          ("verify", verify_ms)):
+                          ("verify", verify_ms), ("chunk", chunk_ms)):
             for m in ms:
                 plans[(i, m, phase)] = ternary_gemm_plan(
                     w, m, impl=impl, phase=phase, partition=part, tp=ntp)
@@ -1237,7 +1239,8 @@ def fused_mlp(x: jnp.ndarray, w_in: Any, w_out: Any, w_gate: Any = None,
 
 
 def precompute_fused_plans(params, *, prefill_ms=(), decode_ms=(),
-                           verify_ms=(), impl: str = "auto", tp: int = 1,
+                           verify_ms=(), chunk_ms=(), impl: str = "auto",
+                           tp: int = 1,
                            ) -> Dict[Tuple[int, ...], FusedMlpPlan]:
     """Warm phase-keyed *fused* plans for MLP-shaped subtrees: any dict
     with packed ``"in"``/``"out"`` (and optionally ``"gate"``) linears.
@@ -1274,7 +1277,7 @@ def precompute_fused_plans(params, *, prefill_ms=(), decode_ms=(),
     plans: Dict[Tuple[int, ...], FusedMlpPlan] = {}
     for i, (wi, wo, wg) in enumerate(found):
         for phase, ms in (("prefill", prefill_ms), ("decode", decode_ms),
-                          ("verify", verify_ms)):
+                          ("verify", verify_ms), ("chunk", chunk_ms)):
             for m in ms:
                 plans[(i, m, phase)] = fused_mlp_plan(
                     wi, wo, wg, m=m, impl=impl, phase=phase, tp=tp)

@@ -28,6 +28,15 @@ Usage:
                                       # lifecycle hardening: NaN quarantine,
                                       # retry-with-replay, deadlines, the
                                       # degradation ladder (DESIGN.md §11)
+  ... --chunked-prefill --chunk-tokens 32 \\
+      --traffic poisson --arrival-rate 12 \\
+      --slo-ttft-ms 200 --slo-tpot-ms 50   # SLO-aware chunked prefill
+                                      # under open-loop offered load:
+                                      # prompts stream in alongside decode
+                                      # under a per-step token budget, and
+                                      # the JSON reports p50/p90/p99 TTFT
+                                      # (split queue-wait + prefill) and
+                                      # TPOT per class (DESIGN.md §14)
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
   ... --mesh 2,4                      # dp x tp mesh serving: 2 engine
                                       # replicas, each tensor-parallel over
@@ -245,6 +254,37 @@ def main(argv: Optional[Sequence[str]] = None):
     ap.add_argument("--max-retries", type=int, default=2,
                     help="quarantine replays allowed per request before "
                          "it terminates failed (reason 'nan_logits')")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="continuous mode: chunked prefill + SLO-aware "
+                         "admission (DESIGN.md §14) — prompts stream in "
+                         "--chunk-tokens per step alongside decode, so a "
+                         "long prompt never monopolises a step. Token-"
+                         "exact vs whole-prompt admission")
+    ap.add_argument("--chunk-tokens", type=int, default=32,
+                    help="--chunked-prefill: max prompt tokens one request "
+                         "prefills per step (windows are rounded down to "
+                         "powers of two for bounded jit shapes)")
+    ap.add_argument("--step-token-budget", type=int, default=0,
+                    help="--chunked-prefill: total model-forward tokens "
+                         "per step, decode charged first (0 = auto: "
+                         "slots*(1+spec_k) + chunk-tokens)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=0.0,
+                    help=">0: tag interactive-class requests with this "
+                         "TTFT objective; admission orders by (priority, "
+                         "deadline) and boosts deadline-pressed prefills")
+    ap.add_argument("--slo-tpot-ms", type=float, default=0.0,
+                    help=">0: interactive-class decode time-per-token "
+                         "objective; prefill residual shrinks when steps "
+                         "run over it")
+    ap.add_argument("--traffic", default="off",
+                    choices=("poisson", "bursty", "off"),
+                    help="continuous mode: drive the engine open-loop "
+                         "from a seeded arrival schedule instead of "
+                         "submit-all-then-drain; requests split between "
+                         "the interactive and batch SLO classes "
+                         "(DESIGN.md §14)")
+    ap.add_argument("--arrival-rate", type=float, default=8.0,
+                    help="--traffic: mean offered load, requests/second")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -282,13 +322,16 @@ def main(argv: Optional[Sequence[str]] = None):
         if args.mesh:
             raise SystemExit("--mesh is a continuous-engine feature; "
                              "drop --static")
+        if args.chunked_prefill or args.traffic != "off":
+            raise SystemExit("--chunked-prefill/--traffic drive the "
+                             "continuous engine; drop --static")
         server = BatchedServer(cfg, max_len)
         server.load(params)
         _, metrics = run_static(server, prompts, gens, args.batch,
                                 extras=extras)
     else:
         from repro.serving import (ContinuousScheduler, FaultConfig,
-                                   ResilienceConfig)
+                                   ResilienceConfig, SchedConfig, SLOClass)
         eos = args.eos_id if args.eos_id >= 0 else None
         spec = None
         if args.spec != "off":
@@ -304,6 +347,25 @@ def main(argv: Optional[Sequence[str]] = None):
         resilience = ResilienceConfig(
             deadline_s=args.deadline_s if args.deadline_s > 0 else None,
             max_retries=args.max_retries)
+        # SLO classes (DESIGN.md §14): the interactive class carries the
+        # CLI latency objectives; batch-class requests ride priority 1
+        slo_on = (args.chunked_prefill or args.slo_ttft_ms > 0
+                  or args.slo_tpot_ms > 0 or args.traffic != "off")
+        interactive = SLOClass(
+            "interactive",
+            ttft_target_s=(args.slo_ttft_ms / 1e3
+                           if args.slo_ttft_ms > 0 else 0.5),
+            tpot_target_s=(args.slo_tpot_ms / 1e3
+                           if args.slo_tpot_ms > 0 else 0.1),
+            priority=0)
+        batch_cls = SLOClass("batch", ttft_target_s=None,
+                             tpot_target_s=None, priority=1)
+        sched = None
+        if slo_on:
+            sched = SchedConfig(
+                chunk_tokens=args.chunk_tokens if args.chunked_prefill
+                else 0,
+                step_token_budget=args.step_token_budget)
 
         def build_engine(mesh=None):
             eng = ContinuousScheduler(
@@ -312,11 +374,14 @@ def main(argv: Optional[Sequence[str]] = None):
                 n_pages=args.pages, kv_dtype=args.kv_dtype or None,
                 prefix_cache=not args.no_prefix_cache,
                 paged_attn=args.paged_attn, spec=spec, faults=faults,
-                resilience=resilience, mesh=mesh)
+                resilience=resilience, sched=sched, mesh=mesh)
             eng.load(params)
             return eng
 
         if args.mesh:
+            if args.traffic != "off":
+                raise SystemExit("--traffic drives a single engine "
+                                 "open-loop; drop --mesh")
             from repro.distributed import router as router_lib
             from repro.distributed import tp as tp_lib
             dp, tp = tp_lib.parse_mesh(args.mesh)
@@ -324,7 +389,23 @@ def main(argv: Optional[Sequence[str]] = None):
             front = router_lib.Router([build_engine(m) for m in meshes])
         else:
             front = build_engine()
-        _, metrics = run_continuous(front, prompts, gens)
+        if args.traffic != "off":
+            from repro.serving import (TrafficConfig, make_schedule,
+                                       run_open_loop)
+            tc = TrafficConfig(kind=args.traffic, rate=args.arrival_rate,
+                               n_requests=args.requests,
+                               prompt_lens=(args.prompt_len,),
+                               gen_lens=tuple(gen_lens), seed=args.seed)
+            schedule = make_schedule(tc, cfg.vocab_size,
+                                     classes=(interactive, batch_cls),
+                                     class_weights=(0.75, 0.25))
+            _, metrics = run_open_loop(front, schedule)
+        else:
+            slo = interactive if slo_on else None
+            reqs = [front.submit(p, g, slo=slo)
+                    for p, g in zip(prompts, gens)]
+            metrics = front.run()
+            del reqs
     print(json.dumps(metrics))
     return metrics
 

@@ -281,6 +281,7 @@ def attn_apply(params, x: jnp.ndarray, cfg: ModelConfig, *,
 
     new_cache = cache
     opt = cache is not None and cfg.cache_layout == "opt"
+    attend_view = False   # prefill-into-cache: attend the stored view
     if cache is not None and kv_override is None:
         flat = cache["k"].ndim == 3
         cache_len = cache["k"].shape[2] if opt else cache["k"].shape[1]
@@ -338,6 +339,15 @@ def attn_apply(params, x: jnp.ndarray, cfg: ModelConfig, *,
                 new_cache = {"k": k_c, "v": v_c}
                 k, v = _cache_view(k_c, cfg), _cache_view(v_c, cfg)
         else:                       # prefill: write whole K/V
+            # Attend the same cache-dtype-rounded K/V the cache will hold
+            # (a no-op when the cache is full precision). Every other
+            # consumer of these positions — sequential decode, spec verify
+            # windows, chunked-prefill windows — reads the *stored*
+            # values, so rounding at production makes prefill->decode
+            # bitwise-consistent with windowed admission (DESIGN.md §14)
+            # instead of agreeing only up to greedy near-ties.
+            k = k.astype(cache["k"].dtype).astype(k.dtype)
+            v = v.astype(cache["v"].dtype).astype(v.dtype)
             s = k.shape[1]
             if opt:
                 ks = k.transpose(0, 2, 1, 3)            # (B,KV,S,hd)
@@ -370,6 +380,20 @@ def attn_apply(params, x: jnp.ndarray, cfg: ModelConfig, *,
                         cache["k"], ks.astype(cache["k"].dtype), zeros)
                     v_c = jax.lax.dynamic_update_slice(
                         cache["v"], vs.astype(cache["v"].dtype), zeros)
+                    # Attend through the *written cache view*, not the
+                    # S-wide fresh K/V: sequential decode, spec verify and
+                    # chunked-prefill windows all reduce attention over the
+                    # full cache axis (naive, max_len-wide, stale tail
+                    # masked as future by causality), and both the reducer
+                    # width and the kernel choice change f32 accumulation
+                    # grouping — an S-wide (or flash-blocked) prefill
+                    # disagrees with the windowed paths by ~1 ULP on
+                    # layer>=1 K/V, enough to flip greedy near-ties.
+                    # Attending the view makes whole-prompt admission
+                    # bitwise-equal to windowed admission (DESIGN.md §14).
+                    k = _cache_view(k_c, cfg)
+                    v = _cache_view(v_c, cfg)
+                    attend_view = True
             new_cache = {"k": k_c, "v": v_c}
 
     if cache_pos is not None and q.shape[1] > 1:
@@ -400,6 +424,12 @@ def attn_apply(params, x: jnp.ndarray, cfg: ModelConfig, *,
         else:
             o = naive_attention(q, k, v, causal=False, window=win,
                                 q_offset=q_off, kv_valid_len=valid)
+    elif attend_view:
+        # prefill into a cache: same kernel + reduction width as the
+        # decode/verify/chunk consumers of these positions (see above) —
+        # never flash/pallas, whose blockwise accumulation differs
+        o = naive_attention(q, k, v, causal=True,
+                            window=cfg.sliding_window)
     else:
         if (cfg.gqa_repeat_kv or cfg.attn_impl == "pallas") \
                 and k.shape[2] < h:

@@ -227,19 +227,31 @@ class PagePool:
     # ------------------------------------------------------------------
     # Admission / growth / release
     # ------------------------------------------------------------------
-    def admit(self, prompt: np.ndarray) -> Optional[Admission]:
+    def admit(self, prompt: np.ndarray, *,
+              use_prefix: bool = True) -> Optional[Admission]:
         """Reserve a slot + every page the prompt needs, reusing registered
         prefix pages. All-or-nothing: on failure every side effect is
-        rolled back and ``None`` is returned (the engine defers)."""
+        rolled back and ``None`` is returned (the engine defers).
+
+        ``use_prefix=False`` skips prefix matching *and* registration for
+        this admission. Chunked prefill (DESIGN.md §14) needs this: the
+        registry's contract is that a registered page already holds its
+        prompt content, but a chunked request writes its pages
+        incrementally over several steps — registering them at admission
+        would let a concurrent whole-prompt admission share a page whose
+        K/V has not been written yet. Chunked requests therefore take
+        private pages only (prefix sharing for chunked admissions is
+        future work)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         n_p = self.pages_needed(prompt.size)
         assert n_p <= self.pages_per_slot, (n_p, self.pages_per_slot)
         if not self._free_slots:
             return None
+        prefix = self.prefix if use_prefix else None
         matched: List[int] = []
         keys: List[bytes] = []
-        if self.prefix is not None:
-            keys, matched = self.prefix.lookup(prompt)
+        if prefix is not None:
+            keys, matched = prefix.lookup(prompt)
             for pid in matched:          # pin before reclamation can run
                 self._refcount[pid] += 1
                 self._reclaimable.pop(pid, None)
@@ -250,7 +262,7 @@ class PagePool:
             return None
         for pid in fresh:
             self._refcount[pid] = 1
-        if self.prefix is not None:
+        if prefix is not None:
             for key, pid in zip(keys[len(matched):], fresh):
                 self.prefix.register(key, pid)
         slot = self._free_slots.pop()

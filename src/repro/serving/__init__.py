@@ -14,11 +14,23 @@ Fault tolerance (DESIGN.md §11): ``FaultConfig`` arms the seeded chaos
 injector (``FaultInjector``), ``ResilienceConfig`` sets the engine's
 response policy — deadlines, quarantine retries, and the graceful
 degradation ladder. Both default inert.
+
+Scheduling under SLOs (DESIGN.md §14): ``SchedConfig`` switches the
+engine to chunked prefill co-scheduled with the decode batch under a
+per-step token budget, with ``SLOClass``-driven priority/deadline
+admission (``SLOQueue``); ``TrafficConfig``/``make_schedule``/
+``run_open_loop`` drive the engine from a seeded open-loop Poisson or
+bursty arrival schedule for latency-percentile measurement.
 """
 from repro.serving.engine import ContinuousScheduler
 from repro.serving.faults import FaultConfig, FaultInjector, ResilienceConfig
 from repro.serving.queue import Request, RequestQueue
+from repro.serving.sched import SchedConfig, SLOClass, SLOQueue
 from repro.serving.slots import SlotPool
+from repro.serving.traffic import (Arrival, TrafficConfig, make_schedule,
+                                   run_open_loop)
 
 __all__ = ["ContinuousScheduler", "Request", "RequestQueue", "SlotPool",
-           "FaultConfig", "FaultInjector", "ResilienceConfig"]
+           "FaultConfig", "FaultInjector", "ResilienceConfig",
+           "SchedConfig", "SLOClass", "SLOQueue",
+           "Arrival", "TrafficConfig", "make_schedule", "run_open_loop"]

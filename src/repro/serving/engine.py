@@ -51,6 +51,24 @@ token-exact vs the non-spec engine; rejected tokens roll back by length
 bookkeeping (dense) plus O(1) tail-page reclamation (paged). Each round
 emits 1..k+1 tokens per live slot.
 
+Chunked prefill + SLO scheduling (DESIGN.md §14): ``sched=SchedConfig``
+replaces grouped whole-prompt admission with chunked prefill — a request
+is admitted the moment a slot (and, paged, its prompt's pages) is free,
+then its prompt streams into the cache ``chunk_tokens`` at a time,
+co-scheduled with the decode batch under a per-step token budget: the
+decode batch is charged first, mid-prefill requests split the residual
+(earliest TTFT deadline first, deadline-pressed requests claiming the
+whole residual). The chunk forward reuses the (B, S) decode window that
+speculative verify proved bitwise-equal to sequential decode, so chunked
+output streams are token-exact vs whole-prompt admission. Admission
+ordering comes from ``sched.SLOQueue`` (priority + earliest deadline,
+preserving preempt-at-head / retry-at-tail / backoff semantics), and
+``run()`` grows exact p50/p90/p99 TTFT/TPOT aggregates plus per-class
+SLO violation counts. Chunked prefill shares spec's model restrictions
+(attention-only, ``cache_layout='bshd'``, no sliding window): the
+prefilling slots ride the decode batch as garbage lanes, which only the
+overwrite-before-read attention argument makes safe.
+
 Fault tolerance (DESIGN.md §11): every decode/verify step runs a jit'd
 finite check over each slot's logits; a slot with non-finite logits is
 *quarantined* — its uncommitted token is dropped, its slot/pages released,
@@ -81,6 +99,8 @@ from repro.models import LM
 from repro.serving.faults import (FAIL_DEADLINE, FAIL_NUMERIC, FaultConfig,
                                   FaultInjector, ResilienceConfig)
 from repro.serving.queue import Request, RequestQueue
+from repro.serving.sched import ChunkRunner, SchedConfig, SLOQueue
+from repro.serving.sched.slo import plan_chunks
 from repro.serving.slots import SlotPool
 
 log = logging.getLogger("repro.serving")
@@ -119,6 +139,20 @@ class _RunningStat:
         return self.total / self.n if self.n else 0.0
 
 
+def _pcts(values) -> Optional[Dict[str, float]]:
+    """Exact p50/p90/p99 (+ mean/max/n) over the non-None values, or
+    None when nothing was measured."""
+    vals = [v for v in values if v is not None]
+    if not vals:
+        return None
+    a = np.asarray(vals, np.float64)
+    return {"p50": float(np.percentile(a, 50)),
+            "p90": float(np.percentile(a, 90)),
+            "p99": float(np.percentile(a, 99)),
+            "mean": float(a.mean()), "max": float(a.max()),
+            "n": int(a.size)}
+
+
 class ContinuousScheduler:
     def __init__(self, cfg: ModelConfig, max_slots: int, max_len: int,
                  eos_id: Optional[int] = None, *, cache: str = "dense",
@@ -127,7 +161,7 @@ class ContinuousScheduler:
                  paged_attn: Optional[str] = None, spec=None,
                  faults: Optional[FaultConfig] = None,
                  resilience: Optional[ResilienceConfig] = None,
-                 mesh=None):
+                 mesh=None, sched: Optional[SchedConfig] = None):
         if cfg.is_encdec or cfg.family == "vlm":
             raise ValueError(
                 f"family {cfg.family!r} needs per-request encoder/frontend "
@@ -171,8 +205,38 @@ class ContinuousScheduler:
                     "overwrites the oldest live entry, which rollback "
                     "cannot restore")
         self.spec = spec
+        # ---- chunked prefill + SLO admission (DESIGN.md §14) ----
+        if sched is not None and sched.chunked:
+            if any(kind != "attn" for kind, _ in self.model.block_kinds):
+                raise ValueError(
+                    "chunked prefill needs an attention-only stack: "
+                    "mid-prefill slots ride the decode batch as garbage "
+                    "lanes, and SSM recurrent state advanced on garbage "
+                    "tokens cannot be overwritten later")
+            if cfg.cache_layout == "opt":
+                raise ValueError("chunked prefill needs "
+                                 "cache_layout='bshd' (the 'opt' "
+                                 "delta-commit layout is one-token-only)")
+            if cfg.sliding_window:
+                raise ValueError(
+                    "chunked prefill does not support rolling "
+                    "sliding-window caches: padded chunk-window writes "
+                    "would overwrite live rolled entries")
+        self.sched = sched
         self.params = None
-        self.queue = RequestQueue()
+        self.queue = (SLOQueue() if sched is not None
+                      and sched.admission == "slo" else RequestQueue())
+        self._chunker = (ChunkRunner(self.model, max_len,
+                                     paged=cache == "paged",
+                                     rows=max_slots)
+                         if sched is not None and sched.chunked else None)
+        self._prefills: Dict[int, Request] = {}      # slot -> mid-prefill
+        self.chunk_steps = 0
+        self.chunk_tokens_committed = 0
+        self.prefill_completions = 0
+        # recent per-step wall time (EMA) — drives the budgeter's
+        # deadline-pressure and TPOT-protection heuristics
+        self._step_ema = 0.0
         if cache == "paged":
             from repro.paging import PagePool
             self.pool = PagePool(self.model, max_slots, max_len,
@@ -331,6 +395,16 @@ class ContinuousScheduler:
         from repro.models.layers import gemm_impl
         is_packed_linear = (lambda path, w:
                             getattr(path[-1], "key", None) == "w_packed")
+        # chunk windows flatten to M = P·S rows, P <= max_slots rows of at
+        # most chunk_tokens each (a deadline-pressed row can claim the
+        # whole step budget) — warm every pow2 bucket up to that ceiling
+        # under the "chunk" phase (DESIGN.md §14)
+        chunk_ms = ()
+        if self._chunker is not None:
+            ctop = max(self.max_slots * self.sched.budget_for(
+                self.max_slots, self.spec.k if self.spec else 0), 1)
+            ctop = min(ctop, top)
+            chunk_ms = [1 << i for i in range((ctop - 1).bit_length() + 1)]
         self.gemm_plans = kops.precompute_plans(
             params, prefill_ms=prefill_ms, decode_ms=(self.max_slots,),
             # verify windows flatten to M = slots·(k+1) rows; their plans
@@ -338,6 +412,7 @@ class ContinuousScheduler:
             # decode entries (DESIGN.md §10)
             verify_ms=((self.max_slots * (self.spec.k + 1),)
                        if self.spec else ()),
+            chunk_ms=chunk_ms,
             # only packed linears dispatch through ternary_gemm; MoE expert
             # banks are materialized in moe_apply and need no GEMM plan
             select=is_packed_linear,
@@ -353,7 +428,8 @@ class ContinuousScheduler:
             self.fused_plans = kops.precompute_fused_plans(
                 params, prefill_ms=prefill_ms, decode_ms=(self.max_slots,),
                 verify_ms=((self.max_slots * (self.spec.k + 1),)
-                           if self.spec else ()))
+                           if self.spec else ()),
+                chunk_ms=chunk_ms)
         else:
             self.fused_plans = {}
         if self.spec is not None:
@@ -399,10 +475,23 @@ class ContinuousScheduler:
                     self.draft.params, decode_ms=(self.max_slots,),
                     select=is_packed_linear,
                     impl=gemm_impl(dlm.cfg)).items())
+        if self._chunker is not None:
+            # XLA-compile every chunk-window shape before traffic: rows
+            # are always padded to max_slots and plan_chunks quantizes S
+            # to powers of two <= min(budget, max_len), so the shape set
+            # is small and closed — a mid-traffic compile costs seconds
+            # and would wreck the p99 the scheduler exists to protect
+            smax = min(self.sched.budget_for(
+                self.max_slots, self.spec.k if self.spec else 0),
+                self.max_len)
+            self._chunker.warmup(
+                self.params, self.pool,
+                [1 << i for i in range(smax.bit_length())])
 
     def submit(self, prompt: np.ndarray, max_new: int, *,
                deadline_s: Optional[float] = None,
-               max_retries: Optional[int] = None) -> Request:
+               max_retries: Optional[int] = None,
+               slo=None, submit_t: Optional[float] = None) -> Request:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         # spec mode reserves k positions of headroom: the last emitted
         # token's verify window writes up to position prompt+gen-1+k
@@ -416,7 +505,8 @@ class ContinuousScheduler:
             self._any_deadline = True
         return self.queue.submit(prompt, max_new, eos_id=self.eos_id,
                                  deadline_s=deadline_s,
-                                 max_retries=max_retries)
+                                 max_retries=max_retries, slo=slo,
+                                 submit_t=submit_t)
 
     # ------------------------------------------------------------------
     def _prefill_group(self, group) -> None:
@@ -424,6 +514,9 @@ class ContinuousScheduler:
         ``group`` is ``[(request, slot, Admission|None)]`` — the admission
         carries the paged pool's page plan, ``None`` in dense mode. Shared
         between both cache modes so their bookkeeping cannot diverge."""
+        t_admit = time.monotonic()
+        for req, _, _ in group:
+            req.admit_t = t_admit       # slot granted; prefill starts now
         prompts = np.stack([r.prompt for r, _, _ in group])
         with kops.serving_phase("prefill"):
             req_layers, toks_dev = self._prefill(
@@ -469,7 +562,8 @@ class ContinuousScheduler:
         pressure, pause admission while live requests drain — shedding
         load *before* the preempt-and-replay storm rather than during."""
         frac = self.resilience.admission_pause_frac
-        if (not frac or self.cache_mode != "paged" or not self._live
+        if (not frac or self.cache_mode != "paged"
+                or not (self._live or self._prefills)
                 or self.queue.empty()):
             return False
         if self.pool.n_free_pages / self.pool.usable_pages < frac:
@@ -503,9 +597,37 @@ class ContinuousScheduler:
             if deferred:    # already counted — don't re-attempt this step
                 return
 
+    def _admit_chunked(self, now: float) -> None:
+        """Chunked admission (DESIGN.md §14): grant a slot (and, paged,
+        the prompt's pages — private ones only, see ``PagePool.admit``'s
+        ``use_prefix``) the moment one is free; no prefill forward runs
+        here. The request enters ``_prefills`` at ``prefill_pos=0`` and
+        streams its prompt in via ``_run_chunks`` over subsequent
+        steps."""
+        while self._head_ready(now) and self.pool.n_free:
+            req = self.queue.peek()
+            if self.cache_mode == "paged":
+                adm = self.pool.admit(req.prompt, use_prefix=False)
+                if adm is None:
+                    self.deferrals += 1
+                    return
+                slot = adm.slot
+            else:
+                slot = self.pool.alloc()
+            popped = self.queue.pop()
+            assert popped is req, (popped.rid, req.rid)
+            req.slot = slot
+            req.state = "live"
+            req.prefill_pos = 0
+            req.admit_t = time.monotonic()
+            self._prefills[slot] = req
+
     def _admit(self) -> None:
         now = time.monotonic()
         if self._admission_paused():
+            return
+        if self._chunker is not None:
+            self._admit_chunked(now)
             return
         if self.cache_mode == "paged":
             self._admit_paged(now)
@@ -523,11 +645,14 @@ class ContinuousScheduler:
                 [(req, self.pool.alloc(), None) for req in group])
 
     def _release_slot(self, slot: int) -> Request:
-        """Common tail of every live-slot exit: pop the request, return the
-        slot's cache (pages or dense row) to its pool, zero the host
-        mirrors. Shared by evict/preempt/quarantine/fail so slot
-        accounting cannot diverge between the happy and failure paths."""
-        req = self._live.pop(slot)
+        """Common tail of every live-slot exit: pop the request (from the
+        decode batch or the mid-prefill set), return the slot's cache
+        (pages or dense row) to its pool, zero the host mirrors. Shared
+        by evict/preempt/quarantine/fail so slot accounting cannot
+        diverge between the happy and failure paths."""
+        req = self._live.pop(slot, None)
+        if req is None:
+            req = self._prefills.pop(slot)
         req.slot = None
         self._pos[slot] = 0
         self._tok[slot] = 0
@@ -554,6 +679,8 @@ class ContinuousScheduler:
         req = self._release_slot(slot)
         req.tokens.clear()
         req.first_token_t = None
+        req.admit_t = None            # re-stamped at the retry admission
+        req.prefill_pos = 0           # chunked prefill restarts from 0
         req.spec_proposed = 0         # replay re-counts draft stats
         req.spec_accepted = 0
         return req
@@ -591,7 +718,7 @@ class ContinuousScheduler:
         determinism) with exponential backoff, up to its retry budget;
         other slots are untouched — one poisoned row never kills the
         batch."""
-        req = self._live[slot]
+        req = self._live.get(slot) or self._prefills[slot]
         self.quarantines += 1
         req.attempts += 1
         retries = (req.max_retries if req.max_retries is not None
@@ -622,6 +749,10 @@ class ContinuousScheduler:
             if self._live[slot].expired(now):
                 self._fail_live(slot, FAIL_DEADLINE)
                 self.deadline_cancels += 1
+        for slot in list(self._prefills):
+            if self._prefills[slot].expired(now):
+                self._fail_live(slot, FAIL_DEADLINE)
+                self.deadline_cancels += 1
 
     def _grow_paged(self, horizon: int = 1) -> None:
         """Before each paged decode step, make every live row's next
@@ -640,10 +771,80 @@ class ContinuousScheduler:
                 if self.pool.ensure_append(slot, int(self._pos[slot]) + p):
                     p += 1
                     continue
-                victim = next(reversed(self._live))
+                # preempt mid-prefill slots before decoding ones: they
+                # have produced no tokens yet, so replaying them wastes
+                # the least work — and the oldest-never-preempted rule
+                # still holds (a decode slot outranks every prefill)
+                victim = (next(reversed(self._prefills))
+                          if self._prefills
+                          else next(reversed(self._live)))
                 self._preempt(victim)
                 if victim == slot:
                     break
+
+    def _run_chunks(self) -> None:
+        """Advance every mid-prefill slot by its planned chunk
+        (DESIGN.md §14): budget the step's residual tokens across
+        ``_prefills`` (earliest TTFT deadline first), run one batched
+        chunk window, then commit — a request whose prompt completes this
+        step reads its first token from the window's last real position
+        and joins the decode batch immediately (spec mode additionally
+        catches the draft cache up with a B=1 whole-prompt draft
+        prefill)."""
+        if not self._prefills:
+            return
+        spec_active = self.spec is not None and not self.spec_disabled
+        k = self.spec.k if spec_active else 0
+        tpots = [r.slo.tpot_target_s for r in self._live.values()
+                 if r.slo is not None
+                 and getattr(r.slo, "tpot_target_s", None) is not None]
+        jobs, _meta = plan_chunks(
+            list(self._prefills.items()), cfg=self.sched,
+            budget=self.sched.budget_for(self.max_slots, k),
+            n_decode_tokens=len(self._live) * (1 + k),
+            max_len=self.max_len, now=time.monotonic(),
+            step_s=self._step_ema,
+            tpot_floor=min(tpots) if tpots else None)
+        if not jobs:
+            return
+        greedy, ok = self._chunker.advance(self.params, self.pool, jobs)
+        self.chunk_steps += 1
+        now = time.monotonic()
+        completed = []
+        for i, (slot, req, c) in enumerate(jobs):
+            if not ok[i]:
+                self._quarantine(slot)
+                continue
+            req.prefill_pos += c
+            req.chunks += 1
+            self.chunk_tokens_committed += c
+            # the slot's garbage decode lane follows the prefill frontier;
+            # its writes land at positions the next chunk (or the first
+            # real decode) overwrites before any query attends there
+            self._pos[slot] = req.prefill_pos
+            self._dirty = True
+            if req.prefill_pos >= req.prompt_len:
+                tok = int(greedy[i, c - 1])
+                del self._prefills[slot]
+                self._live[slot] = req
+                req.tokens.append(tok)
+                req.first_token_t = now
+                self._tok[slot] = tok
+                self._prev_tok[slot] = int(req.prompt[-1])
+                self.prefill_completions += 1
+                if req.done:             # max_new == 1 (or instant EOS)
+                    self._evict(slot)
+                elif self.spec is not None:
+                    completed.append((slot, req))
+        for slot, req in completed:
+            # the draft runs its own dense whole-prompt prefill — cheap
+            # (draft-sized), and chunking it would buy nothing since the
+            # draft cache is not the serving-latency bottleneck
+            with kops.serving_phase("prefill"):
+                dl = self._draft_prefill(self.draft.params,
+                                         jnp.asarray(req.prompt[None]))
+            self._draft_layers = self._draft_insert(
+                self._draft_layers, dl, jnp.asarray([slot]))
 
     def _plan_faults(self):
         """Draw this step's chaos schedule and apply the engine-external
@@ -672,13 +873,17 @@ class ContinuousScheduler:
 
     def step(self) -> None:
         """One scheduler iteration: inject scheduled faults, expire
-        deadlines, admit + prefill, decode (or the spec draft -> verify ->
-        rollback round) under the numerical guard, evict/quarantine."""
+        deadlines, admit (+ prefill, or advance chunked prefills), decode
+        (or the spec draft -> verify -> rollback round) under the
+        numerical guard, evict/quarantine."""
         self._step_no += 1
+        t_step = time.monotonic()
         faults = self._plan_faults()
         self._expire_deadlines()
         self._depth_stat.push(self.queue.depth())
         self._admit()
+        if self._chunker is not None:
+            self._run_chunks()
         # a draft fault (or the acceptance-floor ladder) downgrades this
         # step to plain one-token decode; growth only needs horizon 1 then
         spec_active = self.spec is not None and not self.spec_disabled
@@ -691,8 +896,10 @@ class ContinuousScheduler:
             self._grow_paged(1 + (self.spec.k
                                   if spec_active and not draft_down else 0))
         if not self._live:
+            if self._prefills:       # chunk-only step: still real work
+                self._note_step_time(t_step)
             return
-        self._live_stat.push(len(self._live))
+        self._live_stat.push(len(self._live) + len(self._prefills))
         if self._dirty:
             self._dev_pos = jnp.asarray(self._pos)
             self._dev_tok = jnp.asarray(self._tok)
@@ -701,6 +908,7 @@ class ContinuousScheduler:
             self._dirty = False
         if spec_active and not draft_down:
             self._step_spec(faults)
+            self._note_step_time(t_step)
             return
         mask = self._nan_mask(faults)
         with kops.serving_phase("decode"):
@@ -734,6 +942,16 @@ class ContinuousScheduler:
             self._tok[slot] = toks[slot]
             if req.done:
                 self._evict(slot)
+        self._note_step_time(t_step)
+
+    def _note_step_time(self, t0: float) -> None:
+        """EMA of recent step wall time — the budgeter's clock for
+        deadline pressure (how many steps fit before a TTFT deadline)
+        and TPOT protection (is the step already slower than the
+        tightest live target)."""
+        dt = time.monotonic() - t0
+        self._step_ema = (0.7 * self._step_ema + 0.3 * dt
+                          if self._step_ema else dt)
 
     def _step_spec(self, faults=None) -> None:
         """One speculative round (DESIGN.md §10): draft k tokens per slot
@@ -824,27 +1042,50 @@ class ContinuousScheduler:
                         self._accept_ring.maxlen)
 
     # ------------------------------------------------------------------
-    def run(self) -> Dict[str, Any]:
-        """Drain the queue completely; return the metrics JSON dict."""
+    def has_work(self) -> bool:
+        """Anything queued, mid-prefill, or decoding — the loop condition
+        for external step drivers (``serving.traffic.run_open_loop``)."""
+        return bool(self.queue) or bool(self._live) or bool(self._prefills)
+
+    def begin_metrics(self) -> Dict[str, Any]:
+        """Snapshot every cumulative counter and reset the windowed stats.
+        ``run()`` calls this at entry; an external driver that steps the
+        engine itself (the open-loop traffic harness) calls it before its
+        own loop and ``collect_metrics`` after, so manually-driven spans
+        report the same JSON ``run()`` would."""
         assert self.params is not None, "load(params) first"
-        t0 = time.monotonic()
-        n0 = self.total_drained
-        p0, d0 = self.prefill_steps, self.decode_steps
-        s0 = (self.spec_rounds, self.spec_proposed, self.spec_accepted,
-              self.spec_emitted, self.spec_page_reclaims,
-              self.spec_slot_rounds)
-        f0 = {"quarantines": self.quarantines,
-              "retries": self.fault_retries,
-              "failed": self.failed_requests,
-              "pauses": self.admission_pauses,
-              "deadline_cancels": self.deadline_cancels,
-              "spec_disables": self.spec_disables,
-              "draft_fallbacks": self.draft_fallbacks,
-              "injected": (dict(self.injector.injected)
-                           if self.injector else {})}
         self._depth_stat = _RunningStat()
         self._live_stat = _RunningStat()
-        budget = (self.queue.depth() + len(self._live)) * self.max_len + 1
+        return {
+            "t0": time.monotonic(),
+            "n0": self.total_drained,
+            "p0": self.prefill_steps,
+            "d0": self.decode_steps,
+            "c0": (self.chunk_steps, self.chunk_tokens_committed,
+                   self.prefill_completions),
+            "s0": (self.spec_rounds, self.spec_proposed,
+                   self.spec_accepted, self.spec_emitted,
+                   self.spec_page_reclaims, self.spec_slot_rounds),
+            "f0": {"quarantines": self.quarantines,
+                   "retries": self.fault_retries,
+                   "failed": self.failed_requests,
+                   "pauses": self.admission_pauses,
+                   "deadline_cancels": self.deadline_cancels,
+                   "spec_disables": self.spec_disables,
+                   "draft_fallbacks": self.draft_fallbacks,
+                   "injected": (dict(self.injector.injected)
+                                if self.injector else {})},
+        }
+
+    def run(self) -> Dict[str, Any]:
+        """Drain the queue completely; return the metrics JSON dict."""
+        snap = self.begin_metrics()
+        budget = (self.queue.depth() + len(self._live)
+                  + len(self._prefills)) * self.max_len + 1
+        if self._chunker is not None:
+            # chunked prefill spends up to prompt_len extra chunk steps
+            # per request (worst case: the 1-token/step liveness trickle)
+            budget *= 2
         if self.cache_mode == "paged":
             # preempt-and-replay re-runs requests; each replay costs at most
             # max_len extra steps and the oldest-never-preempted rule bounds
@@ -855,12 +1096,12 @@ class ContinuousScheduler:
             # of the max_retries attempts can cost another full generation
             budget *= 2 + self.resilience.max_retries
         idle = 0
-        while self.queue or self._live:
+        while self.queue or self._live or self._prefills:
             assert budget > 0, "scheduler failed to make progress"
             progress = (self.prefill_steps, self.decode_steps,
-                        self.total_drained)
+                        self.chunk_steps, self.total_drained)
             self.step()
-            if (self.prefill_steps, self.decode_steps,
+            if (self.prefill_steps, self.decode_steps, self.chunk_steps,
                     self.total_drained) == progress:
                 # idle tick — nothing live and the queue head is inside its
                 # retry-backoff window. Waiting costs no work, so it must
@@ -871,10 +1112,38 @@ class ContinuousScheduler:
             else:
                 idle = 0
                 budget -= 1
-        wall = time.monotonic() - t0
         assert self.total_drained == self.queue.submitted, (
             "drained-request count != submitted count",
             self.total_drained, self.queue.submitted)
+        return self.collect_metrics(snap)
+
+    def _slo_report(self, done) -> Optional[Dict[str, Any]]:
+        """Per-class SLO violation counts over a span's terminal
+        requests. Targets are objectives, not guarantees — this is the
+        honest scoreboard."""
+        classes: Dict[str, Dict[str, Any]] = {}
+        for r in done:
+            if r.slo is None:
+                continue
+            ttft_t = getattr(r.slo, "ttft_target_s", None)
+            tpot_t = getattr(r.slo, "tpot_target_s", None)
+            c = classes.setdefault(r.slo.name, {
+                "n": 0, "ttft_target_s": ttft_t, "tpot_target_s": tpot_t,
+                "ttft_violations": 0, "tpot_violations": 0})
+            c["n"] += 1
+            if ttft_t is not None and r.ttft_s is not None \
+                    and r.ttft_s > ttft_t:
+                c["ttft_violations"] += 1
+            if tpot_t is not None and r.tpot_s is not None \
+                    and r.tpot_s > tpot_t:
+                c["tpot_violations"] += 1
+        return classes or None
+
+    def collect_metrics(self, snap: Dict[str, Any]) -> Dict[str, Any]:
+        """Build the metrics JSON for the span since ``begin_metrics``."""
+        n0, p0, d0 = snap["n0"], snap["p0"], snap["d0"]
+        s0, f0, c0 = snap["s0"], snap["f0"], snap["c0"]
+        wall = time.monotonic() - snap["t0"]
         done = self._finished[n0:]
         gen = sum(len(r.tokens) for r in done)
         ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
@@ -943,6 +1212,29 @@ class ContinuousScheduler:
             "decode_steps": self.decode_steps - d0,
             "ttft_s": {"mean": float(np.mean(ttfts)) if ttfts else None,
                        "max": float(np.max(ttfts)) if ttfts else None},
+            # exact percentile aggregates over the span's terminal
+            # requests (DESIGN.md §14) — no reservoir approximation at
+            # our scales
+            "latency": {
+                "ttft_s": _pcts(r.ttft_s for r in done),
+                "queue_wait_s": _pcts(r.queue_wait_s for r in done),
+                "prefill_s": _pcts(r.prefill_s for r in done),
+                "tpot_s": _pcts(r.tpot_s for r in done),
+                "e2e_s": _pcts(r.latency_s for r in done),
+            },
+            "sched": (None if self.sched is None else {
+                "chunked_prefill": self._chunker is not None,
+                "chunk_tokens": self.sched.chunk_tokens,
+                "step_token_budget": self.sched.budget_for(
+                    self.max_slots,
+                    self.spec.k if self.spec is not None else 0),
+                "admission": self.sched.admission,
+                "chunk_steps": self.chunk_steps - c0[0],
+                "chunk_tokens_committed":
+                    self.chunk_tokens_committed - c0[1],
+                "prefill_completions": self.prefill_completions - c0[2],
+                "slo": self._slo_report(done),
+            }),
             "queue_depth": {"max": self._depth_stat.peak,
                             "mean": self._depth_stat.mean},
             "faults": {

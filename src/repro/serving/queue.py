@@ -39,12 +39,27 @@ class Request:
     state: str = "queued"                # queued | live | done | failed
     fail_reason: Optional[str] = None    # faults.FAIL_* when state=="failed"
 
+    # SLO-aware scheduling (DESIGN.md §14): the request's class — a
+    # ``serving.sched.SLOClass`` (duck-typed here to keep queue.py free of
+    # the sched import) with ``priority`` / ``ttft_target_s`` /
+    # ``tpot_target_s``. ``None`` = best-effort (FIFO-equivalent ordering
+    # under the SLO queue). ``seq`` is the queue's enqueue counter —
+    # re-stamped on retry so a retried request re-enters behind
+    # equal-priority/equal-deadline waiters (retry-at-tail under EDF).
+    slo: Optional[object] = None
+    seq: int = 0
+
     # scheduler-owned state / metrics
     tokens: List[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
     submit_t: float = 0.0
+    admit_t: Optional[float] = None      # slot granted / prefill started
     first_token_t: Optional[float] = None
     done_t: Optional[float] = None
+    # chunked prefill (DESIGN.md §14): prompt tokens committed so far and
+    # the number of chunk forwards this request rode in
+    prefill_pos: int = 0
+    chunks: int = 0
     # speculative decoding (DESIGN.md §10): per-request draft stats
     spec_proposed: int = 0
     spec_accepted: int = 0
@@ -75,6 +90,38 @@ class Request:
         return self.first_token_t - self.submit_t
 
     @property
+    def queue_wait_s(self) -> Optional[float]:
+        """Time from submit until a slot was granted (admission latency).
+        TTFT == queue_wait_s + prefill_s by construction; ``admit_t`` is
+        re-stamped on replay, so after preemption this reports the wait
+        before the *successful* admission (matching ttft_s, which keeps
+        the original submit_t)."""
+        if self.admit_t is None:
+            return None
+        return self.admit_t - self.submit_t
+
+    @property
+    def prefill_s(self) -> Optional[float]:
+        """Admission-to-first-token time (whole-prompt: one forward;
+        chunked: all chunk forwards plus any steps spent waiting for
+        token budget)."""
+        if self.first_token_t is None or self.admit_t is None:
+            return None
+        return self.first_token_t - self.admit_t
+
+    @property
+    def tpot_s(self) -> Optional[float]:
+        """Decode-phase time-per-output-token: (done - first token) over
+        the tokens generated after the first. None until terminal or when
+        only one token was generated (no decode phase to measure)."""
+        if self.done_t is None or self.first_token_t is None:
+            return None
+        n = len(self.tokens) - 1
+        if n <= 0:
+            return None
+        return (self.done_t - self.first_token_t) / n
+
+    @property
     def latency_s(self) -> Optional[float]:
         if self.done_t is None:
             return None
@@ -86,10 +133,15 @@ class Request:
             "prompt_len": self.prompt_len,
             "gen_len": len(self.tokens),
             "ttft_s": self.ttft_s,
+            "queue_wait_s": self.queue_wait_s,
+            "prefill_s": self.prefill_s,
+            "tpot_s": self.tpot_s,
             "latency_s": self.latency_s,
             "state": self.state,
             "fail_reason": self.fail_reason,
             "attempts": self.attempts,
+            "chunks": self.chunks,
+            "slo": self.slo.name if self.slo is not None else None,
         }
 
 
@@ -108,13 +160,23 @@ class RequestQueue:
     def submit(self, prompt: np.ndarray, max_new: int,
                eos_id: Optional[int] = None,
                deadline_s: Optional[float] = None,
-               max_retries: Optional[int] = None) -> Request:
+               max_retries: Optional[int] = None,
+               slo: Optional[object] = None,
+               submit_t: Optional[float] = None) -> Request:
+        # submit_t (monotonic float) lets an open-loop driver stamp the
+        # *intended* arrival instant rather than the moment this call ran:
+        # a blocking engine step delays the submit() call itself, and
+        # stamping late would silently erase exactly the queueing delay
+        # TTFT exists to measure (DESIGN.md §14).
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert prompt.size > 0, "empty prompt"
         assert max_new >= 1, max_new
         req = Request(rid=self._next_rid, prompt=prompt, max_new=max_new,
                       eos_id=eos_id, deadline_s=deadline_s,
-                      max_retries=max_retries, submit_t=time.monotonic())
+                      max_retries=max_retries, slo=slo,
+                      seq=self.submitted,
+                      submit_t=(time.monotonic() if submit_t is None
+                                else submit_t))
         self._next_rid += 1
         self.submitted += 1
         self._q.append(req)
@@ -148,13 +210,18 @@ class RequestQueue:
 
     def take_expired(self, now: float) -> List[Request]:
         """Remove and return every queued request past its deadline (the
-        engine fails them without wasting a prefill). O(depth); the engine
-        only calls this when some request actually carries a deadline."""
-        expired = [r for r in self._q if r.expired(now)]
-        if expired:
-            dead = set(id(r) for r in expired)
-            self._q = collections.deque(
-                r for r in self._q if id(r) not in dead)
+        engine fails them without wasting a prefill), in submit order
+        (``rid`` order — rids are assigned monotonically at submit, and a
+        ``push_front`` replay keeps its original rid, so ordering by rid
+        is stable across preemption re-queues). O(depth); the engine only
+        calls this when some request actually carries a deadline."""
+        dead = {r.rid for r in self._q if r.expired(now)}
+        if not dead:
+            return []
+        expired = sorted((r for r in self._q if r.rid in dead),
+                         key=lambda r: r.rid)
+        self._q = collections.deque(
+            r for r in self._q if r.rid not in dead)
         return expired
 
     def depth(self) -> int:

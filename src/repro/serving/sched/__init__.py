@@ -1,0 +1,29 @@
+"""SLO-aware chunked-prefill scheduling (DESIGN.md §14).
+
+Three cooperating pieces layered on the continuous-batching engine:
+
+- ``config``: ``SLOClass`` (per-request-class TTFT/TPOT targets +
+  priority) and ``SchedConfig`` (chunk size, per-step token budget,
+  admission policy).
+- ``slo``: ``SLOQueue`` — priority + earliest-TTFT-deadline admission
+  ordering over ``RequestQueue`` semantics (preempt-at-head replays,
+  retry-at-tail, ``not_before`` backoff) — and ``plan_chunks``, the pure
+  deadline-aware token budgeter that splits each step's budget between
+  the decode batch and prefill chunks.
+- ``chunker``: ``ChunkRunner`` — the jit'd windowed forward that advances
+  every mid-prefill slot by its planned chunk in one batched call,
+  reusing the (B, S) decode window (bitwise-equal to sequential decode,
+  DESIGN.md §10) over dense slot rows or paged block tables.
+"""
+from repro.serving.sched.chunker import ChunkRunner
+from repro.serving.sched.config import DEFAULT_SLO_CLASSES, SchedConfig, SLOClass
+from repro.serving.sched.slo import SLOQueue, plan_chunks
+
+__all__ = [
+    "ChunkRunner",
+    "DEFAULT_SLO_CLASSES",
+    "SLOClass",
+    "SLOQueue",
+    "SchedConfig",
+    "plan_chunks",
+]

@@ -1,0 +1,87 @@
+"""Scheduling configuration: request SLO classes and the chunked-prefill
+token budget (DESIGN.md §14).
+
+``SLOClass`` names a request class and its latency targets. Targets are
+*objectives*, not guarantees: the scheduler orders admission by
+(priority, TTFT deadline) and boosts chunk allocations for
+deadline-pressed prefills, then reports per-class violation counts in
+``run()``'s metrics so an operator can see how far reality landed from
+the targets at a given offered load.
+
+``SchedConfig`` switches the engine from grouped whole-prompt prefill to
+chunked prefill: each step spends at most ``step_token_budget`` tokens of
+model forward work — the decode batch is charged first (one token per
+live slot; ``k + 1`` under speculative decoding), and mid-prefill
+requests split the residual in chunks of at most ``chunk_tokens``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """A request class with latency objectives.
+
+    priority: lower runs first (ties broken by TTFT deadline, then
+        submit order). Best-effort requests (``Request.slo is None``)
+        get priority 0 and an infinite deadline, so an all-default
+        workload degenerates to plain FIFO.
+    ttft_target_s: time-to-first-token objective from submit; drives the
+        admission deadline (``submit_t + ttft_target_s``) and the
+        deadline-pressed chunk boost.
+    tpot_target_s: decode time-per-output-token objective; classes with
+        a TPOT target shrink the prefill residual when the engine's
+        recent step time is already above the tightest live target.
+    """
+    name: str
+    ttft_target_s: Optional[float] = None
+    tpot_target_s: Optional[float] = None
+    priority: int = 0
+
+
+# A reasonable interactive/batch split for demos and the serve CLI;
+# real deployments define their own.
+DEFAULT_SLO_CLASSES: Tuple[SLOClass, ...] = (
+    SLOClass("interactive", ttft_target_s=0.5, tpot_target_s=0.1,
+             priority=0),
+    SLOClass("batch", ttft_target_s=10.0, tpot_target_s=None, priority=1),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedConfig:
+    """Chunked-prefill + admission policy knobs.
+
+    chunk_tokens: max prompt tokens a request prefills per step. 0
+        disables chunking (whole-prompt prefill with SLO-ordered
+        admission only).
+    step_token_budget: max model-forward tokens per engine step (decode
+        charged first, prefill chunks fill the residual). 0 = automatic:
+        ``max_slots + chunk_tokens``, i.e. a full decode batch plus one
+        chunk.
+    admission: "slo" orders the queue by (priority, TTFT deadline,
+        submit order); "fifo" keeps plain FIFO admission (chunking
+        still applies).
+    """
+    chunk_tokens: int = 64
+    step_token_budget: int = 0
+    admission: str = "slo"
+
+    def __post_init__(self):
+        assert self.chunk_tokens >= 0, self.chunk_tokens
+        assert self.step_token_budget >= 0, self.step_token_budget
+        assert self.admission in ("slo", "fifo"), self.admission
+
+    @property
+    def chunked(self) -> bool:
+        return self.chunk_tokens > 0
+
+    def budget_for(self, max_slots: int, spec_k: int = 0) -> int:
+        """Effective per-step token budget for an engine with
+        ``max_slots`` decode slots (each costing ``1 + spec_k`` verify
+        tokens per step under speculative decoding)."""
+        if self.step_token_budget:
+            return self.step_token_budget
+        return max_slots * (1 + spec_k) + max(self.chunk_tokens, 1)

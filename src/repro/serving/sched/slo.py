@@ -1,0 +1,239 @@
+"""SLO-aware admission ordering and per-step chunk budgeting
+(DESIGN.md §14).
+
+``SLOQueue`` keeps every behavioural contract of the FIFO
+``RequestQueue`` the engine already depends on — preempted requests
+re-enter at the *absolute* head (they hold no cache but must win the
+next admission to preserve drain progress), quarantine retries re-enter
+at the tail, ``not_before`` backoff windows are honoured — but orders
+ordinary admission by ``(priority, TTFT deadline, submit order)``
+instead of arrival alone. Best-effort requests (no SLO class) get
+priority 0 and an infinite deadline, so a workload with no classes
+behaves exactly like FIFO.
+
+``plan_chunks`` is the pure per-step token budgeter: given the
+mid-prefill slots, the decode batch's token charge, and the step
+budget, it decides how many prompt tokens each prefill advances this
+step. Pure and host-only, so unit tests pin its policy without an
+engine.
+"""
+from __future__ import annotations
+
+import collections
+import math
+import time
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+from repro.serving.queue import Request, RequestQueue
+from repro.serving.sched.config import SchedConfig
+
+_NO_DEADLINE = math.inf
+
+
+def slo_key(req: Request) -> Tuple[int, float, int]:
+    """Admission ordering key: (priority, TTFT deadline, enqueue seq).
+
+    Priority strictly dominates (a priority-1 batch request never
+    overtakes a priority-0 request, even when its deadline is nearer);
+    within a priority level, earliest TTFT deadline first; submit order
+    breaks ties. ``seq`` is re-stamped by ``requeue`` so retries fall to
+    the tail of their (priority, deadline) cohort.
+    """
+    slo = req.slo
+    pr = getattr(slo, "priority", 0) if slo is not None else 0
+    ttft = getattr(slo, "ttft_target_s", None) if slo is not None else None
+    dl = req.submit_t + ttft if ttft is not None else _NO_DEADLINE
+    return (pr, dl, req.seq)
+
+
+def ttft_deadline(req: Request) -> float:
+    """Absolute TTFT deadline (monotonic clock), inf when untargeted."""
+    return slo_key(req)[1]
+
+
+class SLOQueue(RequestQueue):
+    """Priority + earliest-deadline admission queue.
+
+    Storage is an unordered list ordered on demand (queue depths here
+    are tens-to-thousands; an O(n log n) sort per admission round is
+    noise next to a model forward). Replays live in a separate deque
+    that always wins ``peek``/``pop`` — preempt-at-head semantics are
+    absolute, matching the FIFO queue.
+    """
+
+    def __init__(self):
+        super().__init__()
+        self._q: List[Request] = []                  # unordered
+        self._replays: Deque[Request] = collections.deque()
+        self._peeked: Optional[Request] = None
+
+    # -- ordering core ----------------------------------------------------
+    def _best(self, now: float) -> Optional[Request]:
+        if self._replays:
+            return self._replays[0]
+        if not self._q:
+            return None
+        order = sorted(self._q, key=slo_key)
+        for r in order:
+            if r.not_before <= now:
+                return r
+        # Everything is inside its retry-backoff window: surface the
+        # best-ranked request so the engine's not_before gate idles
+        # (exactly what the FIFO head would do).
+        return order[0]
+
+    # -- RequestQueue surface ---------------------------------------------
+    def pop(self) -> Request:
+        req = self.peek()
+        if req is None:
+            raise IndexError(
+                "pop from an empty SLOQueue — admission must guard on "
+                ".empty() (or depth()) before popping")
+        if self._replays and self._replays[0] is req:
+            self._replays.popleft()
+        else:
+            self._q.remove(req)
+        self._peeked = None
+        return req
+
+    def push_front(self, req: Request) -> None:
+        req.state = "queued"
+        self._replays.appendleft(req)
+        self._peeked = None
+
+    def requeue(self, req: Request) -> None:
+        # Re-stamp the enqueue seq: a retried request re-enters behind
+        # every already-waiting request of equal (priority, deadline) —
+        # retry-at-tail, so a faulty request cannot camp on the head.
+        req.state = "queued"
+        req.seq = self.submitted + len(self._replays) + len(self._q)
+        self.submitted = max(self.submitted, req.seq)  # keep seqs fresh
+        self._q.append(req)
+        self._peeked = None
+
+    def submit(self, *args, **kwargs) -> Request:
+        self._peeked = None
+        return super().submit(*args, **kwargs)
+
+    def peek(self) -> Optional[Request]:
+        # Memoized so an engine's peek-then-pop (and grouped admission's
+        # repeated peeks) see one consistent choice even as the clock
+        # advances between calls.
+        if self._peeked is not None and (
+                (self._replays and self._replays[0] is self._peeked)
+                or self._peeked in self._q):
+            return self._peeked
+        self._peeked = self._best(time.monotonic())
+        return self._peeked
+
+    def empty(self) -> bool:
+        return not (self._q or self._replays)
+
+    def take_expired(self, now: float) -> List[Request]:
+        dead = {r.rid for r in self._q if r.expired(now)}
+        dead |= {r.rid for r in self._replays if r.expired(now)}
+        if not dead:
+            return []
+        expired = [r for r in self._q if r.rid in dead]
+        expired += [r for r in self._replays if r.rid in dead]
+        self._q = [r for r in self._q if r.rid not in dead]
+        self._replays = collections.deque(
+            r for r in self._replays if r.rid not in dead)
+        self._peeked = None
+        return sorted(expired, key=lambda r: r.rid)
+
+    def depth(self) -> int:
+        return len(self._q) + len(self._replays)
+
+    def __len__(self) -> int:
+        return self.depth()
+
+    def __bool__(self) -> bool:
+        return bool(self._q or self._replays)
+
+
+def plan_chunks(
+    prefills: Sequence[Tuple[int, Request]],
+    *,
+    cfg: SchedConfig,
+    budget: int,
+    n_decode_tokens: int,
+    max_len: int,
+    now: float,
+    step_s: float = 0.0,
+    tpot_floor: Optional[float] = None,
+) -> Tuple[List[Tuple[int, Request, int]], Dict[str, int]]:
+    """Split this step's token budget across mid-prefill requests.
+
+    prefills: (slot, request) pairs currently mid-prefill.
+    budget: the step's total forward-token budget
+        (``SchedConfig.budget_for``).
+    n_decode_tokens: tokens the decode batch charges this step (live
+        slots, times ``k + 1`` under spec).
+    max_len: cache capacity per slot — bounds the rectangular chunk
+        window so padded rows never write past the cache (DESIGN.md §14
+        in-bounds cap).
+    now / step_s: monotonic clock and recent per-step wall time, for
+        deadline-pressure boosting.
+    tpot_floor: tightest TPOT target among *live decode* requests, or
+        None. When recent steps already exceed it, the prefill residual
+        is halved — decode slots keep their TPOT, prefill absorbs the
+        slack.
+
+    Returns ``(jobs, meta)``: jobs are ``(slot, request, chunk_len)``
+    with ``chunk_len >= 1``, ordered by ``slo_key`` (the order rows are
+    packed into the chunk window), and meta records the budget split.
+    """
+    residual = budget - n_decode_tokens
+    if tpot_floor is not None and step_s > tpot_floor and residual > 1:
+        residual //= 2
+    if residual <= 0 and prefills:
+        # Liveness floor: a mid-prefill slot pins cache memory; under a
+        # budget the decode batch alone saturates, still trickle one
+        # token per step so held slots eventually reach decode.
+        residual = 1
+    meta = {"budget": budget, "decode_tokens": n_decode_tokens,
+            "residual": residual, "assigned": 0, "window": 0}
+    if not prefills or residual <= 0:
+        return [], meta
+
+    ordered = sorted(prefills, key=lambda sr: slo_key(sr[1]))
+    jobs: List[Tuple[int, Request, int]] = []
+    left = residual
+    for slot, req in ordered:
+        if left <= 0:
+            break
+        remaining = req.prompt_len - req.prefill_pos
+        assert remaining > 0, (req.rid, req.prefill_pos, req.prompt_len)
+        cap = cfg.chunk_tokens if cfg.chunk_tokens else remaining
+        dl = ttft_deadline(req)
+        if dl <= now + 2.0 * step_s:
+            # Deadline-pressed (or already past): let it claim the whole
+            # residual instead of one polite chunk.
+            cap = remaining
+        c = min(cap, remaining, left)
+        if c <= 0:
+            break
+        jobs.append((slot, req, c))
+        left -= c
+
+    if jobs:
+        # Rectangular-window in-bounds cap: every packed row writes S
+        # positions starting at its prefill_pos (short rows are padded);
+        # shrink S so no row's window crosses max_len. submit() asserts
+        # prompt + max_new (+ spec headroom) <= max_len, so the cap
+        # always leaves S >= 1.
+        s = max(c for _, _, c in jobs)
+        s = min(s, min(max_len - r.prefill_pos for _, r, _ in jobs))
+        assert s >= 1, (s, [(r.rid, r.prefill_pos) for _, r, _ in jobs])
+        # Round the window down to a power of two: the chunk forward is
+        # jit-compiled per (rows, S) shape, and budget leftovers would
+        # otherwise produce an unbounded set of odd widths (a fresh XLA
+        # compile mid-traffic costs more than the tokens it carries).
+        # Rounding down keeps the in-bounds cap intact; the remainder
+        # just lands in the next round's window.
+        s = 1 << (s.bit_length() - 1)
+        jobs = [(slot, r, min(c, s)) for slot, r, c in jobs]
+        meta["window"] = s
+    meta["assigned"] = sum(c for _, _, c in jobs)
+    return jobs, meta

@@ -1,0 +1,165 @@
+"""Open-loop traffic harness (DESIGN.md §14).
+
+Serving latency is only meaningful under *offered load*: a closed-loop
+driver (submit everything, then drain — what ``run()`` does) lets the
+system set its own arrival rate, hiding exactly the queueing behaviour
+p99 TTFT exists to expose. This module generates a seeded wall-clock
+arrival schedule (Poisson or bursty) ahead of time and drives the
+engine from it **open-loop**: arrivals happen at their scheduled times
+whether or not the engine has kept up, so saturation shows up as
+growing queue wait — not as a silently stretched benchmark.
+
+``make_schedule`` is pure and seeded (same config -> same schedule,
+byte-for-byte), so an A/B comparison (chunked vs whole-prompt
+admission, ``benchmarks/latency_bench.py``) replays the identical
+workload against both engines. ``run_open_loop`` wraps the engine's
+``begin_metrics``/``collect_metrics`` span, so it reports the same JSON
+``run()`` would, plus a ``traffic`` block.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["Arrival", "TrafficConfig", "make_schedule", "run_open_loop"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficConfig:
+    """Arrival-process + workload-shape knobs.
+
+    kind: "poisson" (independent exponential inter-arrivals at ``rate``)
+        or "bursty" (bursts of ~``burst_size`` simultaneous arrivals,
+        burst times Poisson at ``rate / burst_size`` — same mean offered
+        rate, much worse tail behaviour).
+    rate: mean offered load, requests/second.
+    prompt_lens / prompt_weights: prompt-length distribution (weights
+        default uniform). gen_lens: output-budget choices, sampled
+        uniformly.
+    """
+    kind: str = "poisson"
+    rate: float = 8.0
+    n_requests: int = 64
+    prompt_lens: Tuple[int, ...] = (16,)
+    prompt_weights: Tuple[float, ...] = ()
+    gen_lens: Tuple[int, ...] = (16,)
+    burst_size: int = 8
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.kind in ("poisson", "bursty"), self.kind
+        assert self.rate > 0, self.rate
+        assert self.n_requests >= 1, self.n_requests
+        assert self.prompt_lens and self.gen_lens
+        assert self.burst_size >= 1, self.burst_size
+        if self.prompt_weights:
+            assert len(self.prompt_weights) == len(self.prompt_lens)
+
+
+@dataclasses.dataclass
+class Arrival:
+    """One scheduled request: wall-clock offset from harness start."""
+    t: float
+    prompt: np.ndarray
+    max_new: int
+    slo: Optional[object] = None
+
+
+def make_schedule(tc: TrafficConfig, vocab_size: int,
+                  classes: Sequence = (),
+                  class_weights: Sequence[float] = ()) -> List[Arrival]:
+    """Draw a deterministic arrival schedule. ``classes`` (SLOClass
+    instances) are sampled per request by ``class_weights`` (uniform
+    when omitted); empty = all best-effort."""
+    rng = np.random.default_rng(tc.seed)
+    n = tc.n_requests
+    if tc.kind == "poisson":
+        times = np.cumsum(rng.exponential(1.0 / tc.rate, size=n))
+    else:
+        # bursts arrive Poisson at rate/burst_size; members share the
+        # burst instant (the scheduler sees them in one admission round)
+        times_l: List[float] = []
+        t = 0.0
+        while len(times_l) < n:
+            t += float(rng.exponential(tc.burst_size / tc.rate))
+            size = int(rng.geometric(1.0 / tc.burst_size))
+            times_l.extend([t] * min(size, n - len(times_l)))
+        times = np.asarray(times_l)
+
+    pw = None
+    if tc.prompt_weights:
+        pw = np.asarray(tc.prompt_weights, np.float64)
+        pw = pw / pw.sum()
+    plens = rng.choice(np.asarray(tc.prompt_lens), size=n, p=pw)
+    glens = rng.choice(np.asarray(tc.gen_lens), size=n)
+    cls: List[Optional[object]] = [None] * n
+    if classes:
+        cw = None
+        if class_weights:
+            cw = np.asarray(class_weights, np.float64)
+            cw = cw / cw.sum()
+        picks = rng.choice(len(classes), size=n, p=cw)
+        cls = [classes[int(i)] for i in picks]
+    return [Arrival(t=float(times[i]),
+                    prompt=rng.integers(0, vocab_size, size=int(plens[i]),
+                                        dtype=np.int32),
+                    max_new=int(glens[i]), slo=cls[i])
+            for i in range(n)]
+
+
+def run_open_loop(engine, schedule: Sequence[Arrival], *,
+                  time_scale: float = 1.0,
+                  deadline_s: Optional[float] = None,
+                  ) -> Tuple[List[Any], Dict[str, Any]]:
+    """Drive ``engine`` from the wall-clock ``schedule``: submit each
+    arrival at (or as soon as possible after) its scheduled time,
+    stepping the engine in between, until the schedule is exhausted and
+    the engine drains. ``time_scale`` compresses the schedule (0 =
+    everything arrives at t=0: a closed-loop drain, useful for
+    exactness tests). Returns ``(requests, metrics)`` where metrics is
+    the engine's standard JSON plus a ``traffic`` block."""
+    assert engine.params is not None, "load(params) first"
+    snap = engine.begin_metrics()
+    t0 = time.monotonic()
+    reqs: List[Any] = []
+    i, n = 0, len(schedule)
+    late = 0.0
+    while i < n or engine.has_work():
+        now = time.monotonic() - t0
+        while i < n and schedule[i].t * time_scale <= now:
+            a = schedule[i]
+            late = max(late, now - a.t * time_scale)
+            # stamp the *intended* arrival instant, not the moment this
+            # call ran: a blocking engine step (a long whole-prompt
+            # prefill) delays the submit loop, and stamping late would
+            # erase exactly the head-of-line queueing delay the open
+            # loop exists to expose
+            reqs.append(engine.submit(a.prompt, a.max_new, slo=a.slo,
+                                      deadline_s=deadline_s,
+                                      submit_t=t0 + a.t * time_scale))
+            i += 1
+        if engine.has_work():
+            engine.step()
+        elif i < n:
+            # idle until the next arrival — short naps so a long gap
+            # doesn't overshoot it
+            time.sleep(min(max(schedule[i].t * time_scale - now, 0.0),
+                           0.005))
+    metrics = engine.collect_metrics(snap)
+    makespan = time.monotonic() - t0
+    span = schedule[-1].t - schedule[0].t if n > 1 else 0.0
+    metrics["traffic"] = {
+        "n": n,
+        "time_scale": time_scale,
+        "offered_rate": (round((n - 1) / span, 3)
+                         if span > 0 and time_scale > 0 else None),
+        "makespan_s": round(makespan, 4),
+        # how far submission lagged the schedule at worst (a large value
+        # means the host couldn't keep the open loop open — the engine
+        # step outran the arrival spacing)
+        "max_submit_lag_s": round(late, 4),
+    }
+    return reqs, metrics

@@ -54,6 +54,12 @@ GOLDEN = {
     "repro.serving": {
         "ContinuousScheduler", "Request", "RequestQueue", "SlotPool",
         "FaultConfig", "FaultInjector", "ResilienceConfig",
+        "SchedConfig", "SLOClass", "SLOQueue",
+        "Arrival", "TrafficConfig", "make_schedule", "run_open_loop",
+    },
+    "repro.serving.sched": {
+        "ChunkRunner", "DEFAULT_SLO_CLASSES", "SLOClass", "SLOQueue",
+        "SchedConfig", "plan_chunks",
     },
     "repro.paging": {
         "PagePool", "Admission", "PrefixCache", "Int8Pages",
@@ -81,8 +87,9 @@ GOLDEN_KERNELS = {
 }
 GOLDEN_PAGED_ATTN = {"jax", "pallas"}
 # Autotune phase keys the serving engine traces under (prefill GEMM /
-# decode GEMV / speculative verify small-GEMM, DESIGN.md §10).
-GOLDEN_PHASES = ("prefill", "decode", "verify")
+# decode GEMV / speculative verify small-GEMM / chunked-prefill window,
+# DESIGN.md §10 + §14).
+GOLDEN_PHASES = ("prefill", "decode", "verify", "chunk")
 
 
 @pytest.mark.parametrize("module", sorted(GOLDEN))

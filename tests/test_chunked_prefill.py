@@ -1,0 +1,190 @@
+"""Chunked-prefill exactness (DESIGN.md §14): chunked admission must
+produce byte-identical token streams to whole-prompt admission in every
+cache mode — the chunk window commits the same KV bytes as the one-shot
+prefill, and greedy decoding is deterministic — including chunk sizes
+that don't divide the prompt length, mid-prefill preemption/OOM replay,
+and speculative decoding riding on top."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving import ContinuousScheduler, SchedConfig
+
+# mixed lengths: several not divisible by any tested chunk size, one
+# shorter than every chunk size, one longer than 3 chunks
+PLENS = (16, 23, 7, 16, 31, 5)
+GENS = (6, 3, 8, 2, 5, 7)
+
+
+def _cfg(**overrides):
+    return get_config("ternary-paper", reduced=True, num_layers=2,
+                      **overrides)
+
+
+def _workload(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+            for n in PLENS]
+
+
+def _run(cfg, params=None, *, slots=3, max_len=48, seed=0, **kw):
+    eng = ContinuousScheduler(cfg, max_slots=slots, max_len=max_len, **kw)
+    if params is None:
+        params = eng.model.init(jax.random.PRNGKey(seed))
+    eng.load(params)
+    reqs = [eng.submit(p, g) for p, g in zip(_workload(cfg), GENS)]
+    metrics = eng.run()
+    return params, [list(r.tokens) for r in reqs], metrics
+
+
+@pytest.mark.parametrize("chunk", [1, 5, 64])
+def test_chunked_dense_token_exact(chunk):
+    """Dense mode, chunk sizes from pathological (1 token/step) through
+    non-dividing (5) to degenerate (64 > every prompt: single-chunk)."""
+    cfg = _cfg()
+    params, ref, _ = _run(cfg)
+    _, got, m = _run(cfg, params, sched=SchedConfig(chunk_tokens=chunk))
+    assert got == ref
+    assert m["sched"]["chunked_prefill"]
+    assert m["sched"]["prefill_completions"] == len(PLENS)
+    assert m["sched"]["chunk_tokens_committed"] == sum(PLENS)
+    # chunk=64 exceeds every prompt, but windows are rounded down to
+    # powers of two (bounded jit shapes), so an L-token prompt completes
+    # in at most bit_length(L) pow2-descent rounds — and a pow2-length
+    # prompt in exactly one
+    if chunk == 64:
+        assert all(r["chunks"] <= int(r["prompt_len"]).bit_length()
+                   for r in m["per_request"])
+        assert all(r["chunks"] == 1 for r in m["per_request"]
+                   if r["prompt_len"] == 16)
+
+
+def test_chunked_paged_token_exact():
+    """Paged mode (fp pages): chunked == whole-prompt under the same
+    cache config."""
+    cfg = _cfg()
+    params, ref, _ = _run(cfg, cache="paged", page_size=4)
+    _, got, m = _run(cfg, params, cache="paged", page_size=4,
+                     sched=SchedConfig(chunk_tokens=8))
+    assert got == ref
+    assert m["sched"]["prefill_completions"] == len(PLENS)
+
+
+def test_chunked_paged_int8_chunk_size_invariant():
+    """int8 pages: whole-prompt prefill attends bf16 in-flight K/V while
+    chunk windows attend the *quantized* pages, so chunked-vs-whole is
+    not a bitwise contract under quantized caches. The contract that
+    does hold: every chunk granularity stores and attends the same
+    dequantized bytes at every position, so the token stream is
+    chunk-size-invariant."""
+    cfg = _cfg()
+    params, ref, _ = _run(cfg, cache="paged", page_size=4, kv_dtype="int8",
+                          sched=SchedConfig(chunk_tokens=8))
+    for chunk in (4, 64):
+        _, got, m = _run(cfg, params, cache="paged", page_size=4,
+                         kv_dtype="int8",
+                         sched=SchedConfig(chunk_tokens=chunk))
+        assert got == ref, chunk
+        assert m["sched"]["prefill_completions"] == len(PLENS)
+
+
+def test_chunked_spec_token_exact():
+    """Speculative decoding over chunked prefill: the draft cache
+    catches up with a whole-prompt draft prefill at chunk completion, so
+    spec+chunked == spec+whole == plain dense."""
+    from repro.spec import SpecConfig
+    cfg = _cfg()
+    params, ref, _ = _run(cfg)
+    _, spec_whole, _ = _run(cfg, params, max_len=64, spec=SpecConfig(k=3))
+    _, spec_chunk, m = _run(cfg, params, max_len=64, spec=SpecConfig(k=3),
+                            sched=SchedConfig(chunk_tokens=8))
+    assert spec_whole == ref
+    assert spec_chunk == ref
+    assert m["spec"]["rounds"] > 0
+
+
+def test_mid_prefill_oom_replay_token_exact():
+    """Injected allocation failures after the first chunk step force
+    mid-prefill preemptions; the replay restarts from prefill_pos=0 and
+    must regenerate the exact stream."""
+    cfg = _cfg()
+    params, ref, _ = _run(cfg)
+    eng = ContinuousScheduler(cfg, max_slots=3, max_len=48, cache="paged",
+                              page_size=4, sched=SchedConfig(chunk_tokens=8))
+    eng.load(params)
+    reqs = [eng.submit(p, g) for p, g in zip(_workload(cfg), GENS)]
+    eng.step()                          # admit + first chunk round
+    assert eng._prefills                # someone is mid-prefill
+    eng.pool.inject_alloc_failures(3)
+    m = eng.run()
+    assert m["cache"]["preemptions"] >= 1
+    assert [list(r.tokens) for r in reqs] == ref
+
+
+def test_tiny_pool_preemption_token_exact():
+    """A page pool too small for the full working set: chunked admission
+    defers/preempts under genuine pressure and still drains exactly."""
+    cfg = _cfg()
+    params, ref, _ = _run(cfg, max_len=40)
+    _, got, m = _run(cfg, params, max_len=40, cache="paged", page_size=4,
+                     n_pages=14, sched=SchedConfig(chunk_tokens=8))
+    assert got == ref
+    assert (m["cache"]["preemptions"] + m["cache"]["deferrals"]) >= 1
+
+
+def test_slo_admission_whole_prompt_exact():
+    """chunk_tokens=0: SLO-ordered admission with whole-prompt prefill
+    (the two tentpole pieces are orthogonal). An all-best-effort
+    workload degenerates to FIFO, so streams match the baseline."""
+    cfg = _cfg()
+    params, ref, _ = _run(cfg)
+    _, got, m = _run(cfg, params, sched=SchedConfig(chunk_tokens=0))
+    assert got == ref
+    assert not m["sched"]["chunked_prefill"]
+    assert m["sched"]["chunk_steps"] == 0
+
+
+def test_step_token_budget_trickle_still_drains():
+    """A budget the decode batch alone saturates: the liveness floor
+    trickles prefill forward one token per step and everything still
+    drains token-exact."""
+    cfg = _cfg()
+    params, ref, _ = _run(cfg)
+    _, got, m = _run(cfg, params,
+                     sched=SchedConfig(chunk_tokens=8, step_token_budget=4))
+    assert got == ref
+    # each round commits at most `budget` prompt tokens, so the budget
+    # implies a hard floor on the number of chunk rounds
+    assert m["sched"]["chunk_steps"] >= -(-sum(PLENS) // 4)
+
+
+def test_chunked_rejects_ssm_stack():
+    """Chunked prefill rides the decode batch as garbage lanes, which is
+    only safe when stale writes can be overwritten — SSM recurrent state
+    cannot, so the engine must refuse loudly."""
+    cfg = get_config("mamba2-130m", reduced=True, num_layers=2)
+    with pytest.raises(ValueError, match="attention-only"):
+        ContinuousScheduler(cfg, max_slots=2, max_len=32,
+                            sched=SchedConfig(chunk_tokens=8))
+
+
+def test_metrics_split_and_percentiles():
+    """Satellite: TTFT decomposes into queue_wait + prefill, tpot_s is
+    populated, and run() reports exact p50/p90/p99 aggregates."""
+    cfg = _cfg()
+    _, _, m = _run(cfg, sched=SchedConfig(chunk_tokens=8))
+    for r in m["per_request"]:
+        assert r["queue_wait_s"] is not None
+        assert r["prefill_s"] is not None
+        assert r["ttft_s"] == pytest.approx(
+            r["queue_wait_s"] + r["prefill_s"], abs=1e-6)
+        if r["gen_len"] > 1:
+            assert r["tpot_s"] is not None
+        assert r["chunks"] >= 1
+    lat = m["latency"]
+    for key in ("ttft_s", "queue_wait_s", "prefill_s", "tpot_s", "e2e_s"):
+        block = lat[key]
+        assert block is not None, key
+        assert block["p50"] <= block["p90"] <= block["p99"] <= block["max"]
+    assert lat["ttft_s"]["n"] == len(PLENS)

@@ -248,8 +248,9 @@ def test_precompute_fused_plans_warms_phase_keys():
     tree = {"blk": {"mlp": {"in": {"w_packed": wi}, "gate": {"w_packed": wg},
                             "out": {"w_packed": wo}}}}
     plans = ops.precompute_fused_plans(tree, prefill_ms=(8, 64),
-                                       decode_ms=(4,), verify_ms=(5,))
-    assert len(plans) == 4
+                                       decode_ms=(4,), verify_ms=(5,),
+                                       chunk_ms=(16,))
+    assert len(plans) == 5
     assert {p.phase for p in plans.values()} == set(ops.SERVING_PHASES)
     assert all(p.gated for p in plans.values())
     assert all(p.impl == "pallas" for p in plans.values())

@@ -1,0 +1,259 @@
+"""Scheduler-policy units (DESIGN.md §14), pinned without an engine:
+``SLOQueue`` ordering (priority > deadline > submit order, replays
+absolute-head, retries re-stamped to the tail), the pure ``plan_chunks``
+token budgeter, the rid-keyed ``take_expired`` contract on both queue
+flavours, and the seeded open-loop traffic schedule."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving.queue import Request, RequestQueue
+from repro.serving.sched import SchedConfig, SLOClass, SLOQueue, plan_chunks
+from repro.serving.sched.slo import slo_key, ttft_deadline
+from repro.serving.traffic import TrafficConfig, make_schedule
+
+INTERACTIVE = SLOClass("interactive", ttft_target_s=0.5,
+                       tpot_target_s=0.1, priority=0)
+BATCH = SLOClass("batch", ttft_target_s=10.0, priority=1)
+
+
+def _req(rid, *, plen=8, slo=None, submit_t=0.0, seq=None, prefill_pos=0):
+    return Request(rid=rid, prompt=np.arange(plen, dtype=np.int32),
+                   max_new=4, slo=slo, submit_t=submit_t,
+                   seq=rid if seq is None else seq,
+                   prefill_pos=prefill_pos)
+
+
+# ---------------------------------------------------------------- SLOQueue
+
+def test_slo_key_priority_dominates_deadline():
+    urgent_batch = _req(0, slo=BATCH, submit_t=0.0)        # dl = 10
+    lazy_inter = _req(1, slo=INTERACTIVE, submit_t=100.0)  # dl = 100.5
+    assert slo_key(lazy_inter) < slo_key(urgent_batch)
+    assert ttft_deadline(_req(2)) == float("inf")
+
+
+def test_sloqueue_orders_by_class_then_deadline():
+    q = SLOQueue()
+    p = np.arange(4, dtype=np.int32)
+    b = q.submit(p, 4, slo=BATCH)          # first in, low priority
+    e1 = q.submit(p, 4)                    # best-effort: inf deadline
+    i1 = q.submit(p, 4, slo=INTERACTIVE)   # tight deadline, priority 0
+    i2 = q.submit(p, 4, slo=INTERACTIVE)   # same class, later submit
+    assert [q.pop() for _ in range(4)] == [i1, i2, e1, b]
+
+
+def test_sloqueue_best_effort_degenerates_to_fifo():
+    q = SLOQueue()
+    reqs = [q.submit(np.arange(3, dtype=np.int32), 2) for _ in range(5)]
+    assert [q.pop() for _ in range(5)] == reqs
+
+
+def test_sloqueue_replays_win_over_tighter_deadlines():
+    q = SLOQueue()
+    p = np.arange(4, dtype=np.int32)
+    victim = q.submit(p, 4, slo=BATCH)
+    q.submit(p, 4, slo=INTERACTIVE)
+    assert q.pop() is not victim or True  # interactive pops first
+    q.push_front(victim)                  # preempted: holds drain progress
+    assert q.peek() is victim             # absolute head, despite BATCH
+    assert q.pop() is victim
+
+
+def test_sloqueue_retry_restamps_seq_to_tail():
+    q = SLOQueue()
+    p = np.arange(4, dtype=np.int32)
+    r0 = q.submit(p, 4)
+    r1 = q.submit(p, 4)
+    assert q.pop() is r0
+    q.requeue(r0)                         # quarantine retry
+    assert r0.seq > r1.seq                # re-stamped behind the waiter
+    assert [q.pop(), q.pop()] == [r1, r0]
+
+
+def test_sloqueue_backoff_skips_to_eligible():
+    q = SLOQueue()
+    p = np.arange(4, dtype=np.int32)
+    gated = q.submit(p, 4, slo=INTERACTIVE)
+    gated.not_before = time.monotonic() + 60.0  # deep in backoff
+    ok = q.submit(p, 4, slo=BATCH)
+    assert q.peek() is ok                 # eligible beats better-ranked
+    assert q.pop() is ok
+    # only the gated request left: surface it so the engine's not_before
+    # check idles (FIFO-head behaviour)
+    assert q.peek() is gated
+
+
+def test_sloqueue_peek_pop_consistent():
+    q = SLOQueue()
+    p = np.arange(4, dtype=np.int32)
+    q.submit(p, 4, slo=INTERACTIVE)
+    q.submit(p, 4, slo=INTERACTIVE)
+    head = q.peek()
+    assert q.peek() is head               # memoized
+    assert q.pop() is head                # pop honours the peek
+    assert len(q) == 1 and bool(q) and q.depth() == 1
+
+
+# ------------------------------------------------- take_expired (satellite)
+
+def test_take_expired_rid_order_despite_push_front_interleaving():
+    """Preemption replays scramble the deque; expiry must still report in
+    submit (rid) order and leave the survivors' order intact."""
+    q = RequestQueue()
+    p = np.arange(4, dtype=np.int32)
+    reqs = [q.submit(p, 4, deadline_s=(0.0 if i % 2 else None))
+            for i in range(4)]
+    r0, r1 = q.pop(), q.pop()
+    q.push_front(r0)
+    q.push_front(r1)                      # deque now [r1, r0, r2, r3]
+    assert q.peek() is r1
+    expired = q.take_expired(time.monotonic() + 1.0)
+    assert [r.rid for r in expired] == [1, 3]      # rid order, not deque
+    assert all(r.expired(time.monotonic() + 1.0) for r in expired)
+    assert [q.pop(), q.pop()] == [reqs[0], reqs[2]]  # replay head kept
+
+
+def test_sloqueue_take_expired_covers_replays():
+    q = SLOQueue()
+    p = np.arange(4, dtype=np.int32)
+    r0 = q.submit(p, 4, deadline_s=0.0)
+    r1 = q.submit(p, 4, deadline_s=0.0, slo=INTERACTIVE)
+    assert q.pop() is r1
+    q.push_front(r1)                      # expired request in the replay deque
+    expired = q.take_expired(time.monotonic() + 1.0)
+    assert [r.rid for r in expired] == [r0.rid, r1.rid]
+    assert q.empty() and not q
+
+
+# -------------------------------------------------------------- plan_chunks
+
+CFG8 = SchedConfig(chunk_tokens=8)
+
+
+def test_plan_chunks_splits_residual_in_slo_order():
+    a = _req(0, plen=20, slo=INTERACTIVE, submit_t=0.0)
+    b = _req(1, plen=20, slo=BATCH, submit_t=0.0)
+    jobs, meta = plan_chunks([(5, b), (3, a)], cfg=CFG8, budget=16,
+                             n_decode_tokens=4, max_len=64, now=0.0)
+    # residual 12: interactive first (priority) gets its full chunk of 8,
+    # batch gets the 4 left over
+    assert [(s, r.rid, c) for s, r, c in jobs] == [(3, 0, 8), (5, 1, 4)]
+    assert meta["residual"] == 12 and meta["assigned"] == 12
+    assert meta["window"] == 8
+
+
+def test_plan_chunks_liveness_floor():
+    a = _req(0, plen=20)
+    jobs, meta = plan_chunks([(0, a)], cfg=CFG8, budget=4,
+                             n_decode_tokens=6, max_len=64, now=0.0)
+    assert meta["residual"] == 1
+    assert jobs == [(0, a, 1)]
+
+
+def test_plan_chunks_tpot_pressure_halves_residual():
+    a = _req(0, plen=40)
+    jobs, meta = plan_chunks([(0, a)], cfg=CFG8, budget=16,
+                             n_decode_tokens=4, max_len=64, now=0.0,
+                             step_s=0.2, tpot_floor=0.1)
+    assert meta["residual"] == 6          # (16 - 4) // 2
+    assert jobs == [(0, a, 4)]            # 6 rounded down to a pow2 window
+    # no pressure when steps are under the floor
+    _, meta2 = plan_chunks([(0, a)], cfg=CFG8, budget=16,
+                           n_decode_tokens=4, max_len=64, now=0.0,
+                           step_s=0.05, tpot_floor=0.1)
+    assert meta2["residual"] == 12
+
+
+def test_plan_chunks_deadline_pressure_claims_residual():
+    late = _req(0, plen=30, slo=INTERACTIVE, submit_t=0.0)
+    jobs, _ = plan_chunks([(0, late)], cfg=CFG8, budget=64,
+                          n_decode_tokens=0, max_len=64,
+                          now=10.0, step_s=0.01)   # deadline long past
+    # claims past its one polite chunk of 8 — the whole remaining 30,
+    # pow2-rounded to a 16-wide window
+    assert jobs == [(0, late, 16)]
+    calm = _req(1, plen=30, slo=INTERACTIVE, submit_t=9.9)
+    jobs, _ = plan_chunks([(0, calm)], cfg=CFG8, budget=64,
+                          n_decode_tokens=0, max_len=64,
+                          now=0.0, step_s=0.01)
+    assert jobs == [(0, calm, 8)]         # polite chunk when not pressed
+
+
+def test_plan_chunks_window_capped_by_cache_bounds():
+    near_end = _req(0, plen=40, prefill_pos=38)    # 2 tokens left, pos 38
+    fresh = _req(1, plen=20)
+    jobs, meta = plan_chunks([(0, near_end), (1, fresh)], cfg=CFG8,
+                             budget=64, n_decode_tokens=0, max_len=40,
+                             now=0.0)
+    # rectangular window: S <= min(max_len - prefill_pos) over rows = 2
+    assert meta["window"] == 2
+    assert all(c <= 2 for _, _, c in jobs)
+
+
+def test_plan_chunks_empty_and_exhausted():
+    assert plan_chunks([], cfg=CFG8, budget=16, n_decode_tokens=0,
+                       max_len=64, now=0.0)[0] == []
+    many = [(i, _req(i, plen=30)) for i in range(4)]
+    jobs, meta = plan_chunks(many, cfg=CFG8, budget=10, n_decode_tokens=0,
+                             max_len=64, now=0.0)
+    assert meta["assigned"] <= 10         # budget respected
+    assert len(jobs) == 2                 # 8 + 2, remaining slots starved
+
+
+# ------------------------------------------------------------------ config
+
+def test_sched_config_budget():
+    cfg = SchedConfig(chunk_tokens=32)
+    assert cfg.chunked
+    assert cfg.budget_for(max_slots=4, spec_k=0) == 4 * 1 + 32
+    assert cfg.budget_for(max_slots=4, spec_k=3) == 4 * 4 + 32
+    assert SchedConfig(chunk_tokens=0, step_token_budget=7).budget_for(
+        8, 0) == 7
+    assert not SchedConfig(chunk_tokens=0).chunked
+
+
+# ----------------------------------------------------------------- traffic
+
+def test_traffic_schedule_deterministic():
+    tc = TrafficConfig(kind="poisson", rate=20.0, n_requests=32,
+                       prompt_lens=(8, 24), gen_lens=(4, 12), seed=7)
+    a = make_schedule(tc, vocab_size=1000)
+    b = make_schedule(tc, vocab_size=1000)
+    assert [x.t for x in a] == [x.t for x in b]
+    assert all(np.array_equal(x.prompt, y.prompt) for x, y in zip(a, b))
+    assert [x.max_new for x in a] == [x.max_new for x in b]
+    # different seed -> different schedule
+    c = make_schedule(TrafficConfig(kind="poisson", rate=20.0,
+                                    n_requests=32, prompt_lens=(8, 24),
+                                    gen_lens=(4, 12), seed=8), 1000)
+    assert [x.t for x in a] != [x.t for x in c]
+
+
+def test_traffic_poisson_rate_sanity():
+    tc = TrafficConfig(kind="poisson", rate=50.0, n_requests=400, seed=3)
+    sched = make_schedule(tc, vocab_size=100)
+    ts = np.asarray([a.t for a in sched])
+    assert np.all(np.diff(ts) >= 0)       # sorted arrivals
+    mean_gap = float(np.diff(ts).mean())
+    assert 0.5 / tc.rate < mean_gap < 2.0 / tc.rate
+
+
+def test_traffic_bursty_shares_instants():
+    tc = TrafficConfig(kind="bursty", rate=50.0, n_requests=200,
+                       burst_size=8, seed=3)
+    sched = make_schedule(tc, vocab_size=100)
+    ts = [a.t for a in sched]
+    assert len(set(ts)) < len(ts) / 2     # real bursts: shared instants
+
+
+def test_traffic_assigns_slo_classes():
+    tc = TrafficConfig(rate=10.0, n_requests=50, seed=1)
+    sched = make_schedule(tc, vocab_size=100,
+                          classes=(INTERACTIVE, BATCH),
+                          class_weights=(0.5, 0.5))
+    names = {a.slo.name for a in sched}
+    assert names == {"interactive", "batch"}
+    with pytest.raises(AssertionError):
+        TrafficConfig(kind="nope")
