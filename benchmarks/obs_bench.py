@@ -1,0 +1,169 @@
+"""Observability overhead benchmarks (DESIGN.md §15).
+
+The tracing contract is "low overhead when on, zero cost when off": one
+deque append per event, no dict/string work until export, and a
+``tracer=None`` engine takes exactly one attribute test per site. This
+module measures the contract:
+
+* ``obs_trace_overhead`` — one engine drains a closed-loop workload
+  with its ``tracer`` toggled between adjacent decode steps (off, on,
+  off, on, ...); each adjacent (off, on) pair of decode steps yields a
+  per-pair ratio ``dt_off / dt_on`` — for equal work that *is* the
+  traced/untraced tokens/s ratio — and the gated entry is the median
+  over a few hundred pairs. Pairing adjacent same-kind steps cancels
+  the slow host drift that makes whole-drain comparisons on a shared
+  runner swing by +/-5-10%, far more than the ~1-2% effect being
+  gated; the median discards scheduler-noise outliers. Capped at 1.0
+  so the baseline pins the CI floor at the issue's >= 0.95 contract
+  (``check_regression --prefix obs/ --ratio-tolerance 0.05``); the
+  uncapped measurement rides along.
+* ``obs_trace_export`` — fill a ring past capacity and time
+  ``export()`` (the only part of tracing that builds dicts and touches
+  the filesystem); report-only, coverage-gated.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from benchmarks.common import record
+from repro.configs import get_config
+from repro.obs import Tracer, load_trace, validate_events
+from repro.serving import ContinuousScheduler
+
+
+def _engine(cfg, slots, max_len, params=None, **kw):
+    eng = ContinuousScheduler(cfg, max_slots=slots, max_len=max_len, **kw)
+    if params is None:
+        params = eng.model.init(jax.random.PRNGKey(0))
+    eng.load(params)
+    return eng, params
+
+
+def _workload(cfg, n, prompt_len, seed=0):
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           size=(n, prompt_len)).astype(np.int32)
+    gens = [int(g) for g in rng.integers(24, 49, size=n)]
+    return prompts, gens
+
+
+def _drain_paired(eng, tracer, prompts, gens):
+    """Drain one closed-loop pass, toggling ``eng.tracer`` between
+    adjacent decode steps and timing every step. Returns the
+    ``(dt_off, dt_on)`` list of adjacent decode-step pairs; a
+    non-decode step (prefill/admit) resets the pending pair so only
+    same-kind neighbours are ever compared."""
+    import time
+    for p, g in zip(prompts, gens):
+        eng.submit(p, g)
+    pairs = []
+    pending_off = None
+    i = 0
+    while eng.has_work():
+        on = i % 2 == 1
+        eng.tracer = tracer if on else None
+        d0 = eng.decode_steps
+        t0 = time.perf_counter()
+        eng.step()
+        dt = time.perf_counter() - t0
+        if eng.decode_steps == d0:
+            pending_off = None
+            continue
+        i += 1
+        if not on:
+            pending_off = dt
+        elif pending_off is not None:
+            pairs.append((pending_off, dt))
+            pending_off = None
+    return pairs
+
+
+def obs_trace_overhead(quick: bool = False):
+    # num_layers=4 on purpose: the overhead being gated is a fixed
+    # per-step cost, so the gate should measure it against a
+    # serving-shaped step (~3 ms), not a toy one where host-timer noise
+    # is the same order as the step itself
+    cfg = get_config("ternary-paper", reduced=True, num_layers=4)
+    n = 12 if quick else 24
+    drains = 2 if quick else 4
+    prompts, gens = _workload(cfg, n, 32)
+
+    tracer = Tracer(capacity=1 << 16)
+    eng, _ = _engine(cfg, 8, 96, tracer=tracer)
+
+    # drain 0 compiles both paths (same jitted fns — the toggle only
+    # changes host-side emission)
+    _drain_paired(eng, tracer, prompts, gens)
+    pairs = []
+    for _ in range(drains):
+        pairs += _drain_paired(eng, tracer, prompts, gens)
+    ratios = [dt_off / dt_on for dt_off, dt_on in pairs if dt_on > 0]
+
+    ratio = float(np.median(ratios))
+    record("obs/trace_overhead", 0.0,
+           f"ratio={min(ratio, 1.0):.3f},measured={ratio:.3f},"
+           f"pairs={len(ratios)},events={len(tracer)},"
+           f"dropped={tracer.dropped}")
+    # loose local sanity floor — the tight 0.95 gate is check_regression's
+    # job, against the baseline-pinned ratio
+    assert ratio >= 0.5, (
+        f"tracing cost {(1 - ratio) * 100:.0f}% of step time "
+        f"(median paired ratio {ratio:.3f} over {len(ratios)} pairs)")
+
+
+def obs_trace_export(quick: bool = False):
+    cap = 1 << 14 if quick else 1 << 16
+    tracer = Tracer(capacity=cap)
+    pid = tracer.new_pid("bench")
+    # overfill by 25% to exercise the drop-oldest path too
+    for i in range(cap + cap // 4):
+        tracer.instant("tick", pid=pid, args={"i": i})
+    import time
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "trace.json")
+        t0 = time.perf_counter()
+        n_events = tracer.export(path)
+        dt = time.perf_counter() - t0
+        doc = load_trace(path)
+        validate_events(doc["traceEvents"])
+    assert tracer.dropped == cap // 4, (tracer.dropped, cap // 4)
+    record("obs/trace_export", dt,
+           f"events={n_events},dropped={tracer.dropped},"
+           f"us_per_event={dt / n_events * 1e6:.3f}")
+
+
+ALL = [obs_trace_overhead, obs_trace_export]
+
+
+def main(argv=None):
+    """Standalone CLI for the CI obs-smoke leg: runs only this module's
+    benches and writes the same JSON shape as run.py --json, so
+    check_regression.py --prefix obs/ gates it against the shared
+    baseline."""
+    from benchmarks.common import RESULTS, emit_header
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="",
+                    help="also write results as JSON to this path")
+    args = ap.parse_args(argv)
+
+    emit_header()
+    for bench in ALL:
+        bench(quick=args.quick)
+    if args.json:
+        entries = {r["name"]: {"us_per_call": r["us_per_call"],
+                               "derived": r["derived"]} for r in RESULTS}
+        with open(args.json, "w") as f:
+            json.dump({"version": 1, "quick": args.quick,
+                       "entries": entries}, f, indent=1)
+        print(f"wrote {len(entries)} entries to {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -79,11 +79,52 @@ def _ternary(rng, k: int, n: int, density: float = 0.5):
     return np.where(rng.random((k, n)) < density, w, 0).astype(np.int8)
 
 
-def kernel_report(quick: bool = False) -> Dict[str, Dict]:
+def _measure(op, reps: int = 3) -> float:
+    """Best-of-``reps`` eager wall time via ``ops.kernel_probe`` (lowering
+    through block_until_ready). The first call compiles and is discarded.
+    A nesting op (fused_mlp's chain impl dispatches probed ternary_gemms
+    inside it) reports *last*, so the final callback per invocation is
+    the outermost measurement."""
+    from repro.kernels import ops
+
+    best = None
+    for i in range(reps + 1):
+        times: List[float] = []
+        with ops.kernel_probe(lambda _plan, dt: times.append(dt)):
+            op()
+        assert times, "probe missed the dispatch"
+        if i and (best is None or times[-1] < best):
+            best = times[-1]
+    return best
+
+
+def _measured_fields(roofline: Dict, dt: float) -> Dict:
+    """Measured achieved-vs-peak columns next to the model's: the modeled
+    roofline says what the kernel *could* do on the reference part; these
+    say what this host actually did."""
+    flops = roofline["flops"]
+    return {
+        "measured_time_s": dt,
+        "measured_flops": flops / dt if dt > 0 else None,
+        # >1: slower than the model's bound — the gap is host dispatch,
+        # interpret-mode overhead, or unmodeled memory traffic
+        "measured_vs_model": (dt / roofline["model_time_s"]
+                              if roofline["model_time_s"] else None),
+        "measured_vs_peak": (flops / dt / roofline["peak_flops"]
+                             if dt > 0 else None),
+    }
+
+
+def kernel_report(quick: bool = False,
+                  measured: bool = False) -> Dict[str, Dict]:
     """Per-registered-kernel roofline: one representative plan per
     ``(format, impl)`` lowering in the GEMM registry plus one per fused-MLP
     impl, each entry carrying the plan's modeled ``roofline()`` dict
-    (achieved vs ceiling FLOP/s, HBM bytes from occupancy metadata)."""
+    (achieved vs ceiling FLOP/s, HBM bytes from occupancy metadata).
+    ``measured=True`` additionally times each lowering eagerly through
+    ``ops.kernel_probe`` and reports measured achieved-vs-peak next to
+    the model (DESIGN.md §15)."""
+    import jax.numpy as jnp
     import numpy as np
 
     from repro.core import weights
@@ -93,6 +134,7 @@ def kernel_report(quick: bool = False) -> Dict[str, Dict]:
     rng = np.random.default_rng(0)
     packed = {fmt: weights.pack(_ternary(rng, k, n), fmt)
               for fmt in ("dense2bit", "tiled", "bitplane")}
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
 
     report: Dict[str, Dict] = {}
     for (fmt, impl) in sorted(ops.kernel_registry()):
@@ -100,31 +142,42 @@ def kernel_report(quick: bool = False) -> Dict[str, Dict]:
         if w is None:
             continue
         plan = ops.ternary_gemm_plan(w, m, impl=impl, phase=None)
-        report[f"{fmt}/{impl}"] = {
+        rec = {
             "kind": "gemm", "m": m, "k": k, "n": n,
             "blocks": {"block_m": plan.block_m, "block_n": plan.block_n,
                        "block_k": plan.block_k},
             "occupancy": plan.occupancy,
             "roofline": plan.roofline(),
         }
+        if measured:
+            dt = _measure(lambda w=w, impl=impl:
+                          ops.ternary_gemm(x, w, impl=impl))
+            rec["measured"] = _measured_fields(rec["roofline"], dt)
+        report[f"{fmt}/{impl}"] = rec
 
     wi = weights.pack(_ternary(rng, k, ff), "dense2bit")
     wg = weights.pack(_ternary(rng, k, ff), "dense2bit")
     wo = weights.pack(_ternary(rng, ff, n), "dense2bit")
     for impl in sorted(ops.fused_registry()):
         plan = ops.fused_mlp_plan(wi, wo, wg, m=m, impl=impl, phase=None)
-        report[f"fused_mlp/{impl}"] = {
+        rec = {
             "kind": "fused_mlp", "m": m, "k": k, "ff": ff, "n": n,
             "blocks": {"block_m": plan.block_m, "block_n1": plan.block_n1,
                        "block_k1": plan.block_k1, "block_n2": plan.block_n2,
                        "block_k2": plan.block_k2},
             "roofline": plan.roofline(),
         }
+        if measured:
+            dt = _measure(lambda impl=impl:
+                          ops.fused_mlp(x, wi, wo, wg, impl=impl))
+            rec["measured"] = _measured_fields(rec["roofline"], dt)
+        report[f"fused_mlp/{impl}"] = rec
     return report
 
 
-def write_kernel_report(path: str, quick: bool = False) -> Dict[str, Dict]:
-    report = kernel_report(quick=quick)
+def write_kernel_report(path: str, quick: bool = False,
+                        measured: bool = False) -> Dict[str, Dict]:
+    report = kernel_report(quick=quick, measured=measured)
     doc = {"version": 1, "quick": quick, "kernels": report}
     d = os.path.dirname(path)
     if d:
@@ -136,13 +189,24 @@ def write_kernel_report(path: str, quick: bool = False) -> Dict[str, Dict]:
 
 def print_kernel_report(report: Dict[str, Dict]) -> None:
     print("\n== kernel roofline ==")
-    print("kernel,bound,arithmetic_intensity,achieved_gflops,"
-          "ceiling_gflops,headroom")
+    has_measured = any("measured" in rec for rec in report.values())
+    cols = ("kernel,bound,arithmetic_intensity,achieved_gflops,"
+            "ceiling_gflops,headroom")
+    if has_measured:
+        cols += ",measured_ms,measured_gflops,measured_vs_model"
+    print(cols)
     for name, rec in sorted(report.items()):
         rl = rec["roofline"]
-        print(f"{name},{rl['bound']},{rl['arithmetic_intensity']:.1f},"
-              f"{rl['achieved_flops'] / 1e9:.1f},"
-              f"{rl['ceiling_flops'] / 1e9:.1f},{rl['headroom']:.3f}")
+        row = (f"{name},{rl['bound']},{rl['arithmetic_intensity']:.1f},"
+               f"{rl['achieved_flops'] / 1e9:.1f},"
+               f"{rl['ceiling_flops'] / 1e9:.1f},{rl['headroom']:.3f}")
+        if has_measured:
+            ms = rec.get("measured")
+            row += (",,," if ms is None else
+                    f",{ms['measured_time_s'] * 1e3:.3f},"
+                    f"{ms['measured_flops'] / 1e9:.2f},"
+                    f"{ms['measured_vs_model']:.1f}")
+        print(row)
 
 
 def main(out_dir: str = "experiments/dryrun"):
@@ -162,12 +226,17 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="small representative shapes (CI bench leg)")
+    ap.add_argument("--measured", action="store_true",
+                    help="time each lowering eagerly (ops.kernel_probe) "
+                         "and report measured achieved-vs-peak next to "
+                         "the modeled roofline")
     ap.add_argument("--json", default="",
                     help="write the per-kernel roofline report to this path")
     ap.add_argument("--out-dir", default="experiments/dryrun",
                     help="dry-run records for the model-level table")
     args = ap.parse_args()
     main(args.out_dir)
-    rep = (write_kernel_report(args.json, quick=args.quick) if args.json
-           else kernel_report(quick=args.quick))
+    rep = (write_kernel_report(args.json, quick=args.quick,
+                               measured=args.measured) if args.json
+           else kernel_report(quick=args.quick, measured=args.measured))
     print_kernel_report(rep)

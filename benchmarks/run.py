@@ -16,14 +16,15 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (chaos_bench, kernel_bench, latency_bench,
-                            paper_figs, roofline, serving_bench,
+                            obs_bench, paper_figs, roofline, serving_bench,
                             sharding_bench)
     from benchmarks.common import RESULTS, emit_header
 
     emit_header()
     benches = {f.__name__: f
                for f in paper_figs.ALL + kernel_bench.ALL + serving_bench.ALL
-               + chaos_bench.ALL + sharding_bench.ALL + latency_bench.ALL}
+               + chaos_bench.ALL + sharding_bench.ALL + latency_bench.ALL
+               + obs_bench.ALL}
     selected = (args.only.split(",") if args.only else list(benches))
     for name in selected:
         benches[name](quick=args.quick)

@@ -16,7 +16,6 @@ Usage:
 import argparse
 import json
 import sys
-import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -30,6 +29,7 @@ from repro.launch.dryrun import (HBM_BW, ICI_BW, PEAK_FLOPS,  # noqa: E402
                                  model_flops)
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models import LM, set_mesh  # noqa: E402
+from repro.obs import clock as obs_clock  # noqa: E402
 
 
 def lower_cell(arch, shape_name, overrides, multi_pod=False, mesh=None):
@@ -89,7 +89,7 @@ def main():
         typ = f.type if isinstance(f.type, type) else eval(f.type)  # noqa: S307
         overrides[k] = (v.lower() in ("1", "true")) if typ is bool else typ(v)
 
-    t0 = time.time()
+    t0 = obs_clock.now()
     lowered, cfg, mesh = lower_cell(args.arch, args.shape, overrides,
                                     args.multi_pod)
     compiled = lowered.compile()
@@ -113,7 +113,7 @@ def main():
         "useful_ratio": (mf / chips) / walked.flops if walked.flops else None,
         "hbm_gb": (getattr(mem, "argument_size_in_bytes", 0)
                    + getattr(mem, "temp_size_in_bytes", 0)) / 2**30,
-        "compile_s": round(time.time() - t0, 1),
+        "compile_s": round(obs_clock.now() - t0, 1),
         "top_bytes_by_op": [(k, b, f) for k, b, f in walked.top_bytes(args.top)],
     }
     if args.autotune_gemm:

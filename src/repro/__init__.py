@@ -11,7 +11,7 @@ import importlib
 __all__ = [
     # subsystem namespaces
     "configs", "core", "checkpoint", "data", "distributed", "kernels",
-    "launch", "models", "optim", "paging", "serving", "spec",
+    "launch", "models", "obs", "optim", "paging", "serving", "spec",
     # the paper-technique surface
     "TernaryWeight", "Dense2Bit", "Tiled", "Bitplane", "Base3", "pack",
     "ternary_gemm", "ternary_gemm_plan",

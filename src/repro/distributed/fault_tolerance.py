@@ -17,43 +17,78 @@ The pieces here implement that contract host-side:
 from __future__ import annotations
 
 import logging
-import time
-from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 from repro import checkpoint as ckpt_lib
+from repro.obs import clock as obs_clock
+from repro.obs.metrics import MetricsRegistry
 
 log = logging.getLogger("repro.ft")
 
 
-@dataclass
 class StragglerWatchdog:
-    factor: float = 2.0
-    alpha: float = 0.1
-    ewma: Optional[float] = None
-    straggler_steps: int = 0
-    # `events` is a bounded ring of the most recent straggler records
-    # (step, dt, ewma) — a week-long job on a flaky node could otherwise
-    # grow this list without limit. `straggler_steps` stays exact over
-    # every observation; only the retained detail is capped.
-    events: list = field(default_factory=list)
-    events_cap: int = 256
-    _ring_i: int = 0
+    """EWMA step-time tracker flagging slow steps (> factor x EWMA).
+
+    The EWMA and the straggler count are registry-backed
+    (``repro.obs.metrics``) — the same ``Ewma``/``Counter`` mechanism
+    behind the serving engine's step-time budgeter, so train and serve
+    share one step-time implementation and a supervisor's
+    ``registry.snapshot()`` includes both for free. The public surface
+    (constructor keywords, ``ewma``/``straggler_steps`` attributes,
+    ``observe`` semantics: flag against the *pre-update* EWMA, seed on
+    first observation, never flag the seed) is unchanged.
+    """
+
+    def __init__(self, factor: float = 2.0, alpha: float = 0.1,
+                 ewma: Optional[float] = None, straggler_steps: int = 0,
+                 events: Optional[list] = None, events_cap: int = 256,
+                 registry: Optional[MetricsRegistry] = None):
+        self.factor = factor
+        self.alpha = alpha
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._ewma = self.registry.ewma("step_time_s", alpha=alpha)
+        self._count = self.registry.counter("straggler_steps")
+        if ewma is not None:
+            self._ewma.value = float(ewma)
+        if straggler_steps:
+            self._count.value = int(straggler_steps)
+        # `events` is a bounded ring of the most recent straggler records
+        # (step, dt, ewma) — a week-long job on a flaky node could
+        # otherwise grow this list without limit. `straggler_steps` stays
+        # exact over every observation; only the retained detail is capped.
+        self.events: list = list(events) if events is not None else []
+        self.events_cap = events_cap
+        self._ring_i = 0
+
+    @property
+    def ewma(self) -> Optional[float]:
+        return self._ewma.value
+
+    @ewma.setter
+    def ewma(self, v: Optional[float]) -> None:
+        self._ewma.value = v
+
+    @property
+    def straggler_steps(self) -> int:
+        return self._count.value
+
+    @straggler_steps.setter
+    def straggler_steps(self, v: int) -> None:
+        self._count.value = int(v)
 
     def observe(self, step: int, dt: float) -> bool:
-        is_straggler = False
-        if self.ewma is not None and dt > self.factor * self.ewma:
-            is_straggler = True
-            self.straggler_steps += 1
+        ewma = self._ewma.value
+        is_straggler = ewma is not None and dt > self.factor * ewma
+        if is_straggler:
+            self._count.inc()
             if len(self.events) < self.events_cap:
-                self.events.append((step, dt, self.ewma))
+                self.events.append((step, dt, ewma))
             else:
-                self.events[self._ring_i] = (step, dt, self.ewma)
+                self.events[self._ring_i] = (step, dt, ewma)
                 self._ring_i = (self._ring_i + 1) % self.events_cap
             log.warning("straggler: step %d took %.3fs (ewma %.3fs)",
-                        step, dt, self.ewma)
-        self.ewma = dt if self.ewma is None else \
-            (1 - self.alpha) * self.ewma + self.alpha * dt
+                        step, dt, ewma)
+        self._ewma.update(dt)
         return is_straggler
 
 
@@ -86,11 +121,11 @@ class TrainSupervisor:
         history = []
         while step < num_steps:
             try:
-                t0 = time.monotonic()
+                t0 = obs_clock.now()
                 if failure_injector is not None:
                     failure_injector(step)
                 state, metrics = self.step_fn(step, state)
-                dt = time.monotonic() - t0
+                dt = obs_clock.now() - t0
                 self.watchdog.observe(step, dt)
                 history.append((step, metrics))
                 step += 1

@@ -30,6 +30,8 @@ from typing import Any, Dict, List, Sequence
 
 import numpy as np
 
+from repro.obs import clock as obs_clock
+
 __all__ = ["Router"]
 
 
@@ -97,7 +99,7 @@ class Router:
         fleet metrics dict (placement counters + per-replica summaries)."""
         for e in self.engines:
             assert e.params is not None, "load(params) every replica first"
-        t0 = time.monotonic()
+        t0 = obs_clock.now()
         budget = sum(
             (e.queue.depth() + len(e._live)) * e.max_len * 16 + 1
             for e in self.engines)
@@ -121,7 +123,7 @@ class Router:
                 idle = 0
                 budget -= len(pending)
                 assert budget > 0, "router failed to make progress"
-        wall = time.monotonic() - t0
+        wall = obs_clock.now() - t0
         per_replica = []
         gen = 0
         for e in self.engines:

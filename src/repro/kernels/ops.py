@@ -62,6 +62,7 @@ import numpy as np
 
 from repro.core import formats, weights
 from repro.kernels import ref
+from repro.obs import clock as obs_clock
 from repro.kernels import autotune as autotune_lib
 from repro.kernels.fused_mlp import ACTIVATIONS, fused_mlp_pallas
 from repro.kernels.ternary_gemm import (K_PER_WORD, ternary_gemm_pallas,
@@ -76,7 +77,7 @@ __all__ = ["ternary_gemm", "ternary_gemm_plan", "GemmPlan", "KernelImpl",
            "register_fused", "fused_registry", "precompute_fused_plans",
            "pack_weights", "pack_weights_tiled",
            "serving_phase", "current_phase", "SERVING_PHASES",
-           "SKIP_OCCUPANCY_CUTOFF",
+           "kernel_probe", "SKIP_OCCUPANCY_CUTOFF",
            "paged_decode_attention", "register_paged_attn",
            "paged_attention_registry"]
 
@@ -107,6 +108,40 @@ def serving_phase(phase: Optional[str]):
 
 def current_phase() -> Optional[str]:
     return _SERVING_PHASE.get()
+
+
+# Optional kernel timing probe (DESIGN.md §15): a callback receiving
+# (plan, wall_seconds) for every *eager* ternary_gemm / fused_mlp
+# dispatch inside the scope. The measured time spans lowering through
+# block_until_ready, bracketed by a jax.profiler.TraceAnnotation so the
+# same region shows up in an XLA profile. Dispatches under jit tracing
+# are skipped — there is no wall time to measure at trace time, and the
+# probe must not bake a callback into a compiled computation.
+_KERNEL_PROBE: contextvars.ContextVar[Optional[Callable]] = \
+    contextvars.ContextVar("repro_kernel_probe", default=None)
+
+
+@contextlib.contextmanager
+def kernel_probe(cb: Callable[[Any, float], None]):
+    """``with kernel_probe(lambda plan, dt: ...):`` — time every eager
+    kernel dispatch in the scope against its plan (whose ``roofline()``
+    carries the modeled bytes/FLOPs/time for measured-vs-modeled
+    reporting; see ``benchmarks/roofline.py --measured``)."""
+    token = _KERNEL_PROBE.set(cb)
+    try:
+        yield
+    finally:
+        _KERNEL_PROBE.reset(token)
+
+
+def _probe_dispatch(probe: Callable, plan, tag: str, lower: Callable):
+    """Timed dispatch path shared by the two public ops."""
+    t0 = obs_clock.now()
+    with jax.profiler.TraceAnnotation(tag):
+        y = lower()
+        jax.block_until_ready(y)
+    probe(plan, obs_clock.now() - t0)
+    return y
 
 # Above this occupied-tile fraction the skipping grid saves too little to
 # justify the scalar-prefetch indirection; "auto" falls back to dense.
@@ -1235,6 +1270,12 @@ def fused_mlp(x: jnp.ndarray, w_in: Any, w_out: Any, w_gate: Any = None,
     if x.shape[1] != w_in.k:
         raise ValueError(f"x has K={x.shape[1]} but the up projection "
                          f"encodes K={w_in.k}")
+    probe = _KERNEL_PROBE.get()
+    if probe is not None and not isinstance(x, jax.core.Tracer):
+        return _probe_dispatch(
+            probe, plan,
+            f"fused_mlp[{plan.impl} m={plan.m} k={plan.k} ff={plan.ff}]",
+            lambda: _FUSED[plan.impl].fn(plan, x, w_in, w_out, w_gate))
     return _FUSED[plan.impl].fn(plan, x, w_in, w_out, w_gate)
 
 
@@ -1319,4 +1360,12 @@ def ternary_gemm(
         w, x.shape[0], impl=impl, block_m=block_m, block_n=block_n,
         block_k=block_k, fuse_prelu=fuse_prelu, prelu_alpha=prelu_alpha,
         interpret=interpret)
+    probe = _KERNEL_PROBE.get()
+    if probe is not None and not isinstance(x, jax.core.Tracer):
+        return _probe_dispatch(
+            probe, plan,
+            f"ternary_gemm[{plan.format}/{plan.impl} m={plan.m} "
+            f"k={plan.k} n={plan.n}]",
+            lambda: _KERNELS[(plan.format, plan.impl)].lower(
+                plan, x, w, scale, bias))
     return _KERNELS[(plan.format, plan.impl)].lower(plan, x, w, scale, bias)

@@ -20,7 +20,6 @@ import argparse
 import json
 import re
 import sys
-import time
 import traceback
 from typing import Any, Dict
 
@@ -32,6 +31,7 @@ from repro.distributed import sharding as shlib
 from repro.launch import hlo_cost
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_production_mesh
+from repro.obs import clock as obs_clock
 from repro.models import LM, set_mesh
 
 # --- hardware constants (TPU v5e-class, per the assignment brief) ---
@@ -135,7 +135,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     chips = mesh.devices.size
     set_mesh(mesh)
     model = LM(cfg)
-    t0 = time.time()
+    t0 = obs_clock.now()
 
     p_shapes, p_shardings = steps_lib.model_shardings(model, cfg, mesh)
     batch = steps_lib.input_specs(cfg, shape)
@@ -165,9 +165,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                          donate_argnums=(1,))
         lowered = jitted.lower(p_shapes, cache_shapes, batch["tokens"])
 
-    t_lower = time.time() - t0
+    t_lower = obs_clock.now() - t0
     compiled = lowered.compile()
-    t_compile = time.time() - t0 - t_lower
+    t_compile = obs_clock.now() - t0 - t_lower
 
     cost = hlo_cost.xla_cost(compiled)
     mem = _mem_dict(compiled.memory_analysis())

@@ -48,7 +48,7 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
+import sys
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -57,6 +57,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.data import SyntheticLM
+from repro.obs import clock as obs_clock
 from repro.models import LM
 
 
@@ -136,7 +137,7 @@ def run_static(server: BatchedServer, prompts: np.ndarray,
     n = len(prompts)
     assert n == len(gens) and n > 0
     outs: List[np.ndarray] = []
-    t0 = time.monotonic()
+    t0 = obs_clock.now()
     n_decode = 0
     for lo in range(0, n, batch):
         chunk = prompts[lo:lo + batch]
@@ -155,7 +156,7 @@ def run_static(server: BatchedServer, prompts: np.ndarray,
         n_decode += gen
         for i, g in enumerate(budgets):
             outs.append(toks[i, :g].astype(np.int32))
-    wall = time.monotonic() - t0
+    wall = obs_clock.now() - t0
     assert len(outs) == n, (len(outs), n)
     useful = sum(len(o) for o in outs)
     return outs, {
@@ -285,6 +286,17 @@ def main(argv: Optional[Sequence[str]] = None):
                          "(DESIGN.md §14)")
     ap.add_argument("--arrival-rate", type=float, default=8.0,
                     help="--traffic: mean offered load, requests/second")
+    ap.add_argument("--trace", default="",
+                    help="continuous mode: write a Perfetto-loadable "
+                         "Chrome trace-event JSON of the run — per-request "
+                         "lifecycle tracks, kernel spans carrying modeled "
+                         "roofline attributes, per-step scheduler counters "
+                         "(DESIGN.md §15). Load at https://ui.perfetto.dev "
+                         "or analyse with scripts/trace_report.py")
+    ap.add_argument("--trace-buffer", type=int, default=65536,
+                    help="--trace: ring capacity in events; the oldest "
+                         "events drop first and the drop count is "
+                         "recorded in the file")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -302,7 +314,6 @@ def main(argv: Optional[Sequence[str]] = None):
     params = LM(cfg).init(jax.random.PRNGKey(args.seed))
     if args.packed:
         import dataclasses
-        import sys
         from repro.core import weights
         from repro.models import layers as L
         params = L.pack_params(params, cfg)
@@ -318,6 +329,11 @@ def main(argv: Optional[Sequence[str]] = None):
                   f"ternary_min_dim={cfg.ternary_min_dim}); serving the "
                   f"dense model", file=sys.stderr)
 
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer(capacity=args.trace_buffer)
+
     if args.static:
         if args.mesh:
             raise SystemExit("--mesh is a continuous-engine feature; "
@@ -325,6 +341,9 @@ def main(argv: Optional[Sequence[str]] = None):
         if args.chunked_prefill or args.traffic != "off":
             raise SystemExit("--chunked-prefill/--traffic drive the "
                              "continuous engine; drop --static")
+        if args.trace:
+            raise SystemExit("--trace instruments the continuous engine; "
+                             "drop --static")
         server = BatchedServer(cfg, max_len)
         server.load(params)
         _, metrics = run_static(server, prompts, gens, args.batch,
@@ -374,7 +393,8 @@ def main(argv: Optional[Sequence[str]] = None):
                 n_pages=args.pages, kv_dtype=args.kv_dtype or None,
                 prefix_cache=not args.no_prefix_cache,
                 paged_attn=args.paged_attn, spec=spec, faults=faults,
-                resilience=resilience, sched=sched, mesh=mesh)
+                resilience=resilience, sched=sched, mesh=mesh,
+                tracer=tracer)
             eng.load(params)
             return eng
 
@@ -406,6 +426,13 @@ def main(argv: Optional[Sequence[str]] = None):
                     for p, g in zip(prompts, gens)]
             metrics = front.run()
             del reqs
+        if tracer is not None:
+            # one file even under --mesh: every replica engine registered
+            # its own pid on the shared tracer, so replica timelines load
+            # as separate process groups in the same Perfetto view
+            n_ev = tracer.export(args.trace)
+            print(f"# trace: {args.trace} ({n_ev} events, "
+                  f"{tracer.dropped} dropped)", file=sys.stderr)
     print(json.dumps(metrics))
     return metrics
 

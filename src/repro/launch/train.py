@@ -16,7 +16,6 @@ from __future__ import annotations
 import argparse
 import json
 import logging
-import time
 from typing import Any, Dict, Optional
 
 import jax
@@ -30,6 +29,7 @@ from repro.distributed import sharding as shlib
 from repro.distributed.fault_tolerance import StragglerWatchdog, TrainSupervisor
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_local_mesh
+from repro.obs import clock as obs_clock
 from repro.models import LM, set_mesh
 from repro.optim import warmup_cosine
 
@@ -181,7 +181,7 @@ def main(argv=None):
     t_hist = []
 
     def step_fn(step: int, state):
-        t0 = time.monotonic()
+        t0 = obs_clock.now()
         if args.compress_grads:
             # shard_map splits the global batch on the data axis itself
             batch = {k: jnp.asarray(v)
@@ -196,7 +196,7 @@ def main(argv=None):
                                           batch)
             state = {"params": params, "opt": opt}
         metrics = {k: float(v) for k, v in metrics.items()}
-        dt = time.monotonic() - t0
+        dt = obs_clock.now() - t0
         t_hist.append(dt)
         if step % args.log_every == 0:
             log.info("step %d loss %.4f (%.3fs)", step, metrics["loss"], dt)

@@ -1,0 +1,34 @@
+"""Observability subsystem (DESIGN.md §15): one clock, one tracer, one
+metrics registry.
+
+``obs.clock``   — the single monotonic clock source every serving-path
+                  timestamp (submit/admit/first-token/deadline/backoff)
+                  reads from; fake-able in tests so trace and metrics
+                  output is deterministic.
+``obs.trace``   — a low-overhead ring-buffer ``Tracer`` emitting
+                  span/instant/counter events and exporting Chrome
+                  trace-event JSON (load the file in Perfetto or
+                  chrome://tracing). Per-request events share one track,
+                  so a request's lifecycle — submit → admit →
+                  prefill-chunk(s) → first token → decode →
+                  done/failed/preempted — renders as one row.
+``obs.metrics`` — counter/gauge/histogram/EWMA registry plus the shared
+                  exact-percentile helper behind the engine's metrics
+                  JSON (whose shape is golden-locked by
+                  ``tests/test_obs.py``).
+
+The disabled path is zero-cost by construction: call sites hold
+``tracer=None`` and guard with one attribute test — no event object is
+built, no clock is read.
+"""
+from repro.obs import clock
+from repro.obs.metrics import (Counter, Ewma, Gauge, Histogram,
+                               MetricsRegistry, RunningStat, percentiles)
+from repro.obs.trace import Tracer, load_trace, validate_events
+
+__all__ = [
+    "clock", "trace", "metrics",
+    "Tracer", "load_trace", "validate_events",
+    "MetricsRegistry", "Counter", "Gauge", "Histogram", "Ewma",
+    "RunningStat", "percentiles",
+]

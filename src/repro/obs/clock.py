@@ -1,0 +1,78 @@
+"""The single monotonic clock source for every serving-path timestamp.
+
+Before this module the stack mixed bare ``time.monotonic()`` calls across
+the engine, queue, SLO admission, traffic harness, and train supervisor —
+individually correct, but impossible to fake coherently: a test that
+wanted deterministic TTFT numbers (or a trace whose timestamps survive a
+golden comparison) had no seam. Every timing site now reads ``clock.now()``
+and tests swap the source with ``set_clock``/``fake_clock``.
+
+``now()`` must stay *monotonic and mutually consistent*: deadlines
+(``Request.expired``), retry backoff (``not_before``), trace timestamps,
+and latency metrics are all compared against each other, so they must all
+come from this one function. ``time.time()`` (wall clock, steppable by
+NTP) is never an acceptable substitute for durations.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Callable
+
+__all__ = ["now", "set_clock", "reset_clock", "FakeClock", "fake_clock"]
+
+_clock: Callable[[], float] = time.monotonic
+
+
+def now() -> float:
+    """Seconds from the process-wide monotonic source (or the installed
+    fake). The float is comparable across every module that uses it —
+    that mutual consistency is the whole point."""
+    return _clock()
+
+
+def set_clock(fn: Callable[[], float]) -> Callable[[], float]:
+    """Install ``fn`` as the clock source; returns the previous source so
+    callers can restore it (prefer the ``fake_clock`` context manager)."""
+    global _clock
+    prev = _clock
+    _clock = fn
+    return prev
+
+
+def reset_clock() -> None:
+    """Restore the real ``time.monotonic`` source."""
+    global _clock
+    _clock = time.monotonic
+
+
+class FakeClock:
+    """Deterministic test clock: starts at ``t0`` and advances only via
+    ``advance()`` — plus an optional ``tick`` added on every read so
+    code that busy-waits on the clock (admission backoff, deadline
+    sweeps) still observes progress under test."""
+
+    def __init__(self, t0: float = 0.0, tick: float = 0.0):
+        self.t = float(t0)
+        self.tick = float(tick)
+
+    def __call__(self) -> float:
+        self.t += self.tick
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        assert dt >= 0.0, f"monotonic clocks cannot rewind ({dt})"
+        self.t += dt
+        return self.t
+
+
+@contextlib.contextmanager
+def fake_clock(clock: FakeClock = None, **kw):
+    """``with fake_clock(tick=0.01) as fc: ...`` — installs a FakeClock
+    for the scope and always restores the previous source."""
+    fc = clock if clock is not None else FakeClock(**kw)
+    prev = set_clock(fc)
+    try:
+        yield fc
+    finally:
+        set_clock(prev)

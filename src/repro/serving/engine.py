@@ -96,6 +96,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.kernels import ops as kops
 from repro.models import LM
+from repro.obs import clock as obs_clock
+from repro.obs.metrics import MetricsRegistry, RunningStat, percentiles
 from repro.serving.faults import (FAIL_DEADLINE, FAIL_NUMERIC, FaultConfig,
                                   FaultInjector, ResilienceConfig)
 from repro.serving.queue import Request, RequestQueue
@@ -105,52 +107,15 @@ from repro.serving.slots import SlotPool
 
 log = logging.getLogger("repro.serving")
 
+# both primitives moved to repro.obs.metrics (DESIGN.md §15); the old
+# private names stay importable for anything that grew against them
+_RunningStat = RunningStat
+_pcts = percentiles
 
-class _RunningStat:
-    """Bounded replacement for the old unbounded per-step sample lists:
-    count/sum/peak accumulate in O(1) state — ``mean``/``peak`` are exact
-    over *every* pushed sample, unlike a sampling reservoir — plus a small
-    ring of the most recent samples for debugging long runs."""
-
-    __slots__ = ("n", "total", "peak", "ring", "_cap", "_i")
-
-    def __init__(self, cap: int = 1024):
-        self.n = 0
-        self.total = 0
-        self.peak = 0
-        self.ring: List[int] = []
-        self._cap = cap
-        self._i = 0
-
-    def push(self, v: int) -> None:
-        v = int(v)
-        self.n += 1
-        self.total += v
-        if v > self.peak:
-            self.peak = v
-        if len(self.ring) < self._cap:
-            self.ring.append(v)
-        else:
-            self.ring[self._i] = v
-            self._i = (self._i + 1) % self._cap
-
-    @property
-    def mean(self) -> float:
-        return self.total / self.n if self.n else 0.0
-
-
-def _pcts(values) -> Optional[Dict[str, float]]:
-    """Exact p50/p90/p99 (+ mean/max/n) over the non-None values, or
-    None when nothing was measured."""
-    vals = [v for v in values if v is not None]
-    if not vals:
-        return None
-    a = np.asarray(vals, np.float64)
-    return {"p50": float(np.percentile(a, 50)),
-            "p90": float(np.percentile(a, 90)),
-            "p99": float(np.percentile(a, 99)),
-            "mean": float(a.mean()), "max": float(a.max()),
-            "n": int(a.size)}
+# a step this many times slower than the step-time EWMA is a straggler —
+# generous because serving steps legitimately vary (whole-prompt prefill
+# vs GEMV decode); the signal targets pathological stalls, not phase mix
+_STRAGGLER_FACTOR = 8.0
 
 
 class ContinuousScheduler:
@@ -161,7 +126,8 @@ class ContinuousScheduler:
                  paged_attn: Optional[str] = None, spec=None,
                  faults: Optional[FaultConfig] = None,
                  resilience: Optional[ResilienceConfig] = None,
-                 mesh=None, sched: Optional[SchedConfig] = None):
+                 mesh=None, sched: Optional[SchedConfig] = None,
+                 tracer=None):
         if cfg.is_encdec or cfg.family == "vlm":
             raise ValueError(
                 f"family {cfg.family!r} needs per-request encoder/frontend "
@@ -174,6 +140,16 @@ class ContinuousScheduler:
             cfg = dataclasses.replace(cfg, paged_attn_impl=paged_attn)
         self.cfg = cfg
         self.cache_mode = cache
+        # every ad-hoc `self.x = 0; self.x += 1` counter below is
+        # registry-backed (DESIGN.md §15) behind unchanged attribute
+        # names — see the property block after the class body
+        self.metrics = MetricsRegistry()
+        # obs.trace.Tracer or None; None is the zero-cost path (one
+        # attribute test per site, no clock read, no event)
+        self.tracer = tracer
+        self._trace_pid = tracer.new_pid("engine") if tracer is not None else 0
+        if tracer is not None:
+            tracer.thread_name(self._trace_pid, 0, "scheduler")
         # mesh != None = tensor-parallel engine (DESIGN.md §13): params
         # shard over the mesh's "model" axis at load(), the KV cache over
         # its head dim, and every jit below runs under GSPMD on the
@@ -234,9 +210,12 @@ class ContinuousScheduler:
         self.chunk_steps = 0
         self.chunk_tokens_committed = 0
         self.prefill_completions = 0
-        # recent per-step wall time (EMA) — drives the budgeter's
-        # deadline-pressure and TPOT-protection heuristics
-        self._step_ema = 0.0
+        self._chunk_meta = None       # last plan_chunks meta, for tracing
+        # recent per-step wall time (EWMA) — drives the budgeter's
+        # deadline-pressure and TPOT-protection heuristics, and (with
+        # _STRAGGLER_FACTOR) flags anomalous steps through the same
+        # registry mechanism the train supervisor's watchdog uses
+        self._step_time = self.metrics.ewma("step_time_s", alpha=0.3)
         if cache == "paged":
             from repro.paging import PagePool
             self.pool = PagePool(self.model, max_slots, max_len,
@@ -269,8 +248,8 @@ class ContinuousScheduler:
         self.spec_accepted = 0
         self.spec_emitted = 0
         self.spec_page_reclaims = 0
-        self._depth_stat = _RunningStat()
-        self._live_stat = _RunningStat()
+        self._depth_stat = RunningStat("queue_depth")
+        self._live_stat = RunningStat("live_slots")
 
         # ---- fault tolerance (DESIGN.md §11) ----
         self.resilience = resilience or ResilienceConfig()
@@ -487,6 +466,44 @@ class ContinuousScheduler:
             self._chunker.warmup(
                 self.params, self.pool,
                 [1 << i for i in range(smax.bit_length())])
+        # per-(phase, M-bucket) modeled roofline aggregates over the
+        # warmed plans — attached to this engine's measured kernel-phase
+        # trace spans so a trace carries measured-vs-modeled utilization
+        # side by side (DESIGN.md §15)
+        self._phase_model: Dict[tuple, Dict[str, float]] = {}
+        self._modeled_memo: Dict[tuple, Optional[Dict[str, float]]] = {}
+        for key, plan in self.gemm_plans.items():
+            if key[0] == "draft":
+                continue
+            _, m, phase = key
+            agg = self._phase_model.setdefault(
+                (phase, m), {"gemms": 0, "modeled_flops": 0.0,
+                             "modeled_bytes": 0.0, "model_time_s": 0.0})
+            rl = plan.roofline()
+            agg["gemms"] += 1
+            agg["modeled_flops"] += rl["flops"]
+            agg["modeled_bytes"] += rl["bytes"]
+            agg["model_time_s"] += rl["model_time_s"]
+
+    def _modeled(self, phase: str, m: int) -> Optional[Dict[str, float]]:
+        """Modeled roofline aggregate for one kernel-phase span: the
+        warmed plan bucket that dispatch would hit for ``m`` rows (the
+        smallest planned bucket >= m, or the largest available).
+        Memoized — the decode path asks the same (phase, m) every step
+        and the answer is fixed once ``load()`` builds the buckets."""
+        memo = getattr(self, "_modeled_memo", None)
+        if memo is not None and (phase, m) in memo:
+            return memo[(phase, m)]
+        buckets = sorted(mb for ph, mb in
+                         getattr(self, "_phase_model", {}) if ph == phase)
+        if not buckets:
+            out = None
+        else:
+            mb = next((b for b in buckets if b >= m), buckets[-1])
+            out = dict(self._phase_model[(phase, mb)], m_bucket=mb)
+        if memo is not None:
+            memo[(phase, m)] = out
+        return out
 
     def submit(self, prompt: np.ndarray, max_new: int, *,
                deadline_s: Optional[float] = None,
@@ -503,10 +520,45 @@ class ContinuousScheduler:
             deadline_s = self.resilience.deadline_s
         if deadline_s is not None:
             self._any_deadline = True
-        return self.queue.submit(prompt, max_new, eos_id=self.eos_id,
-                                 deadline_s=deadline_s,
-                                 max_retries=max_retries, slo=slo,
-                                 submit_t=submit_t)
+        req = self.queue.submit(prompt, max_new, eos_id=self.eos_id,
+                                deadline_s=deadline_s,
+                                max_retries=max_retries, slo=slo,
+                                submit_t=submit_t)
+        tr = self.tracer
+        if tr is not None:
+            tr.thread_name(self._trace_pid, req.rid + 1, f"req {req.rid}")
+            tr.instant("submit", t=req.submit_t, cat="request",
+                       pid=self._trace_pid, tid=req.rid + 1,
+                       args={"rid": req.rid, "prompt_len": req.prompt_len,
+                             "max_new": max_new,
+                             "slo": slo.name if slo is not None else None})
+        return req
+
+    # ------------------------------------------------------------------
+    # tracing helpers (DESIGN.md §15). Callers on hot paths guard with
+    # `if self.tracer is not None` so the disabled engine pays exactly
+    # one attribute test per site.
+    def _trace_first_token(self, req: Request) -> None:
+        """Retrospective TTFT components on the request's track, from the
+        same clock stamps the metrics use: queue_wait (submit → admit)
+        and prefill (admit → first token) sum to ``Request.ttft_s`` up
+        to microsecond rounding."""
+        tr, pid, tid = self.tracer, self._trace_pid, req.rid + 1
+        tr.complete("queue_wait", req.submit_t, req.admit_t,
+                    cat="request", pid=pid, tid=tid,
+                    args={"rid": req.rid, "attempts": req.attempts})
+        tr.complete("prefill", req.admit_t, req.first_token_t,
+                    cat="request", pid=pid, tid=tid,
+                    args={"rid": req.rid, "chunks": req.chunks})
+        tr.instant("first_token", t=req.first_token_t, cat="request",
+                   pid=pid, tid=tid, args={"rid": req.rid})
+
+    def _trace_req(self, req: Request, name: str,
+                   t: Optional[float] = None, **extra) -> None:
+        tr = self.tracer
+        if tr is not None:
+            tr.instant(name, t=t, cat="request", pid=self._trace_pid,
+                       tid=req.rid + 1, args={"rid": req.rid, **extra})
 
     # ------------------------------------------------------------------
     def _prefill_group(self, group) -> None:
@@ -514,7 +566,7 @@ class ContinuousScheduler:
         ``group`` is ``[(request, slot, Admission|None)]`` — the admission
         carries the paged pool's page plan, ``None`` in dense mode. Shared
         between both cache modes so their bookkeeping cannot diverge."""
-        t_admit = time.monotonic()
+        t_admit = obs_clock.now()
         for req, _, _ in group:
             req.admit_t = t_admit       # slot granted; prefill starts now
         prompts = np.stack([r.prompt for r, _, _ in group])
@@ -522,6 +574,20 @@ class ContinuousScheduler:
             req_layers, toks_dev = self._prefill(
                 self.params, jnp.asarray(prompts))
         self.prefill_steps += 1
+        tr = self.tracer
+        if tr is not None:
+            # host wall time of the dispatched (async) forward; the
+            # np.asarray(toks_dev) below is the sync point, so the span
+            # closes there — measured next to the plans' modeled roofline
+            args = {"batch": len(group),
+                    "prompt_len": int(prompts.shape[1]),
+                    "m": int(prompts.size)}
+            model = self._modeled("prefill", prompts.size)
+            if model:
+                args.update(model)
+            np.asarray(toks_dev)
+            tr.complete("prefill", t_admit, obs_clock.now(), cat="kernel",
+                        pid=self._trace_pid, args=args)
         if self.cache_mode == "paged":
             self.pool.insert([a for _, _, a in group], req_layers)
         else:
@@ -535,7 +601,7 @@ class ContinuousScheduler:
                 self._draft_layers, draft_layers,
                 jnp.asarray([s for _, s, _ in group]))
         toks = np.asarray(toks_dev)
-        now = time.monotonic()
+        now = obs_clock.now()
         for (req, slot, _), tok in zip(group, toks):
             req.slot = slot
             req.state = "live"
@@ -546,6 +612,8 @@ class ContinuousScheduler:
             self._prev_tok[slot] = req.prompt[-1]
             self._live[slot] = req
             self._dirty = True
+            if tr is not None:
+                self._trace_first_token(req)
             if req.done:                 # max_new == 1 (or instant EOS)
                 self._evict(slot)
 
@@ -568,6 +636,12 @@ class ContinuousScheduler:
             return False
         if self.pool.n_free_pages / self.pool.usable_pages < frac:
             self.admission_pauses += 1
+            tr = self.tracer
+            if tr is not None:
+                tr.instant("admission_pause", pid=self._trace_pid,
+                           args={"free_page_frac": round(
+                               self.pool.n_free_pages
+                               / self.pool.usable_pages, 4)})
             return True
         return False
 
@@ -581,6 +655,7 @@ class ContinuousScheduler:
             adm = self.pool.admit(self.queue.peek().prompt)
             if adm is None:
                 self.deferrals += 1
+                self._trace_req(self.queue.peek(), "defer")
                 return
             group = [(self.queue.pop(), adm.slot, adm)]
             plen = group[0][0].prompt_len
@@ -610,6 +685,7 @@ class ContinuousScheduler:
                 adm = self.pool.admit(req.prompt, use_prefix=False)
                 if adm is None:
                     self.deferrals += 1
+                    self._trace_req(req, "defer")
                     return
                 slot = adm.slot
             else:
@@ -619,11 +695,12 @@ class ContinuousScheduler:
             req.slot = slot
             req.state = "live"
             req.prefill_pos = 0
-            req.admit_t = time.monotonic()
+            req.admit_t = obs_clock.now()
             self._prefills[slot] = req
+            self._trace_req(req, "admit", t=req.admit_t, slot=slot)
 
     def _admit(self) -> None:
-        now = time.monotonic()
+        now = obs_clock.now()
         if self._admission_paused():
             return
         if self._chunker is not None:
@@ -667,9 +744,19 @@ class ContinuousScheduler:
     def _evict(self, slot: int) -> None:
         req = self._release_slot(slot)
         req.state = "done"
-        req.done_t = time.monotonic()
+        req.done_t = obs_clock.now()
         self._finished.append(req)
         self.total_drained += 1
+        tr = self.tracer
+        if tr is not None and req.first_token_t is not None:
+            # the decode phase as one retrospective span: its dur over
+            # (gen_len - 1) tokens is exactly Request.tpot_s
+            tr.complete("decode", req.first_token_t, req.done_t,
+                        cat="request", pid=self._trace_pid,
+                        tid=req.rid + 1,
+                        args={"rid": req.rid, "tokens": len(req.tokens)})
+            self._trace_req(req, "done", t=req.done_t,
+                            tokens=len(req.tokens))
 
     def _replay(self, slot: int) -> Request:
         """Reset a live request for a from-scratch replay (preemption or
@@ -690,8 +777,10 @@ class ContinuousScheduler:
         request from scratch later; it re-enters at the queue *head* (the
         oldest-never-preempted rule in ``_grow_paged`` guarantees drain
         progress)."""
-        self.queue.push_front(self._replay(slot))
+        req = self._replay(slot)
+        self.queue.push_front(req)
         self.preemptions += 1
+        self._trace_req(req, "preempt", slot=slot)
 
     def _fail_live(self, slot: int, reason: str) -> None:
         """Terminal failure of an in-flight request: slot and pages are
@@ -704,10 +793,12 @@ class ContinuousScheduler:
     def _fail(self, req: Request, reason: str) -> None:
         req.state = "failed"
         req.fail_reason = reason
-        req.done_t = time.monotonic()
+        req.done_t = obs_clock.now()
         self._finished.append(req)
         self.total_drained += 1
         self.failed_requests += 1
+        self._trace_req(req, "failed", t=req.done_t, reason=reason,
+                        attempts=req.attempts)
         log.warning("request %d failed: %s (attempts=%d, %d tokens in)",
                     req.rid, reason, req.attempts, len(req.tokens))
 
@@ -728,9 +819,11 @@ class ContinuousScheduler:
             return
         self.fault_retries += 1
         backoff = self.resilience.retry_backoff_s
-        req.not_before = (time.monotonic()
+        req.not_before = (obs_clock.now()
                           + backoff * (2 ** (req.attempts - 1))
                           if backoff else 0.0)
+        self._trace_req(req, "quarantine", slot=slot,
+                        attempts=req.attempts)
         self.queue.requeue(self._replay(slot))
         log.warning("quarantined slot %d (request %d): non-finite logits; "
                     "retry %d/%d", slot, req.rid, req.attempts, retries)
@@ -741,7 +834,7 @@ class ContinuousScheduler:
         slot/pages are reclaimed refcount-clean)."""
         if not self._any_deadline:
             return
-        now = time.monotonic()
+        now = obs_clock.now()
         for req in self.queue.take_expired(now):
             self._fail(req, FAIL_DEADLINE)
             self.deadline_cancels += 1
@@ -792,29 +885,48 @@ class ContinuousScheduler:
         catches the draft cache up with a B=1 whole-prompt draft
         prefill)."""
         if not self._prefills:
+            self._chunk_meta = None
             return
         spec_active = self.spec is not None and not self.spec_disabled
         k = self.spec.k if spec_active else 0
         tpots = [r.slo.tpot_target_s for r in self._live.values()
                  if r.slo is not None
                  and getattr(r.slo, "tpot_target_s", None) is not None]
-        jobs, _meta = plan_chunks(
+        jobs, meta = plan_chunks(
             list(self._prefills.items()), cfg=self.sched,
             budget=self.sched.budget_for(self.max_slots, k),
             n_decode_tokens=len(self._live) * (1 + k),
-            max_len=self.max_len, now=time.monotonic(),
+            max_len=self.max_len, now=obs_clock.now(),
             step_s=self._step_ema,
             tpot_floor=min(tpots) if tpots else None)
+        self._chunk_meta = meta
         if not jobs:
             return
+        t_window = obs_clock.now()
         greedy, ok = self._chunker.advance(self.params, self.pool, jobs)
         self.chunk_steps += 1
-        now = time.monotonic()
+        now = obs_clock.now()
+        tr = self.tracer
+        if tr is not None:
+            args = {"rows": len(jobs),
+                    "tokens": sum(c for _, _, c in jobs)}
+            args.update(meta)
+            model = self._modeled("chunk", len(jobs) * max(
+                c for _, _, c in jobs))
+            if model:
+                args.update(model)
+            tr.complete("chunk_window", t_window, now, cat="kernel",
+                        pid=self._trace_pid, args=args)
         completed = []
         for i, (slot, req, c) in enumerate(jobs):
             if not ok[i]:
                 self._quarantine(slot)
                 continue
+            if tr is not None:
+                tr.complete("chunk", t_window, now, cat="request",
+                            pid=self._trace_pid, tid=req.rid + 1,
+                            args={"rid": req.rid, "tokens": c,
+                                  "pos": req.prefill_pos})
             req.prefill_pos += c
             req.chunks += 1
             self.chunk_tokens_committed += c
@@ -832,6 +944,8 @@ class ContinuousScheduler:
                 self._tok[slot] = tok
                 self._prev_tok[slot] = int(req.prompt[-1])
                 self.prefill_completions += 1
+                if tr is not None:
+                    self._trace_first_token(req)
                 if req.done:             # max_new == 1 (or instant EOS)
                     self._evict(slot)
                 elif self.spec is not None:
@@ -877,7 +991,7 @@ class ContinuousScheduler:
         (or the spec draft -> verify -> rollback round) under the
         numerical guard, evict/quarantine."""
         self._step_no += 1
-        t_step = time.monotonic()
+        t_step = obs_clock.now()
         faults = self._plan_faults()
         self._expire_deadlines()
         self._depth_stat.push(self.queue.depth())
@@ -892,6 +1006,9 @@ class ContinuousScheduler:
         if draft_down:
             self.injector.count("draft_fail")
             self.draft_fallbacks += 1
+            if self.tracer is not None:
+                self.tracer.instant("draft_fallback", pid=self._trace_pid,
+                                    args={"step": self._step_no})
         if self.cache_mode == "paged":
             self._grow_paged(1 + (self.spec.k
                                   if spec_active and not draft_down else 0))
@@ -911,6 +1028,7 @@ class ContinuousScheduler:
             self._note_step_time(t_step)
             return
         mask = self._nan_mask(faults)
+        t_decode = obs_clock.now()
         with kops.serving_phase("decode"):
             if self.cache_mode == "paged":
                 if self.pool.table_dirty:
@@ -927,6 +1045,16 @@ class ContinuousScheduler:
         self.decode_steps += 1
         toks = np.asarray(self._dev_tok)
         ok = np.asarray(ok_dev)
+        tr = self.tracer
+        if tr is not None:
+            # the np.asarray reads above are the sync point, so this span
+            # covers dispatch + device execution of the decode forward
+            args = {"live": len(self._live), "m": self.max_slots}
+            model = self._modeled("decode", self.max_slots)
+            if model:
+                args.update(model)
+            tr.complete("decode_step", t_decode, obs_clock.now(),
+                        cat="kernel", pid=self._trace_pid, args=args)
         for slot in list(self._live):
             req = self._live[slot]
             if not ok[slot]:
@@ -944,14 +1072,45 @@ class ContinuousScheduler:
                 self._evict(slot)
         self._note_step_time(t_step)
 
+    @property
+    def _step_ema(self) -> float:
+        """Registry-backed EWMA of recent step wall time — the
+        budgeter's clock for deadline pressure (how many steps fit
+        before a TTFT deadline) and TPOT protection (is the step already
+        slower than the tightest live target)."""
+        return self._step_time.value or 0.0
+
     def _note_step_time(self, t0: float) -> None:
-        """EMA of recent step wall time — the budgeter's clock for
-        deadline pressure (how many steps fit before a TTFT deadline)
-        and TPOT protection (is the step already slower than the
-        tightest live target)."""
-        dt = time.monotonic() - t0
-        self._step_ema = (0.7 * self._step_ema + 0.3 * dt
-                          if self._step_ema else dt)
+        """Feed the step-time EWMA, flag stragglers (same registry
+        mechanism as the train supervisor's ``StragglerWatchdog``), and
+        emit the per-step timeline counters."""
+        dt = obs_clock.now() - t0
+        prev = self._step_time.value
+        self._step_time.update(dt)
+        straggler = prev is not None and dt > _STRAGGLER_FACTOR * prev
+        if straggler:
+            self.metrics.counter("straggler_steps").inc()
+        tr = self.tracer
+        if tr is None:
+            return
+        if straggler:
+            tr.instant("straggler_step", pid=self._trace_pid,
+                       args={"dt_s": round(dt, 6),
+                             "ewma_s": round(prev, 6)})
+        tr.counter("sched", {"queue_depth": self.queue.depth(),
+                             "live_slots": len(self._live),
+                             "prefilling": len(self._prefills)},
+                   pid=self._trace_pid)
+        util = {"step_ms": round(dt * 1e3, 3)}
+        if self.cache_mode == "paged":
+            util["free_page_frac"] = round(
+                self.pool.n_free_pages / self.pool.usable_pages, 4)
+        meta = self._chunk_meta
+        if meta is not None:
+            util["token_budget_util"] = round(min(1.0, (
+                meta["assigned"] + meta["decode_tokens"])
+                / max(meta["budget"], 1)), 4)
+        tr.counter("util", util, pid=self._trace_pid)
 
     def _step_spec(self, faults=None) -> None:
         """One speculative round (DESIGN.md §10): draft k tokens per slot
@@ -960,12 +1119,24 @@ class ContinuousScheduler:
         target cache back past the rejected tail."""
         from repro.spec import rollback as rb
         k = self.spec.k
+        tr = self.tracer
+        t_draft = obs_clock.now()
         with kops.serving_phase("decode"):       # draft GEMMs are M=slots
             self._draft_layers, drafts = self._draft_round(
                 self.draft.params, self._draft_layers, self._dev_pos,
                 self._dev_prev, self._dev_tok)
+        if tr is not None:
+            # draft plans are keyed separately (("draft",)+key) and are
+            # excluded from _phase_model, so this span carries measured
+            # shape args only — no modeled roofline
+            jax.block_until_ready(drafts)
+            tr.complete("draft", t_draft, obs_clock.now(), cat="kernel",
+                        pid=self._trace_pid,
+                        args={"live": len(self._live), "k": k,
+                              "m": self.max_slots})
         window = jnp.concatenate([self._dev_tok[:, None], drafts], axis=1)
         mask = self._nan_mask(faults)
+        t_verify = obs_clock.now()
         with kops.serving_phase("verify"):
             if self.cache_mode == "paged":
                 if self.pool.table_dirty:
@@ -983,6 +1154,15 @@ class ContinuousScheduler:
         greedy = np.asarray(greedy)
         n_acc = np.asarray(n_acc)
         ok = np.asarray(ok_dev)
+        if tr is not None:
+            # the np.asarray reads above are the sync point
+            args = {"live": len(self._live), "k": k,
+                    "m": self.max_slots * (k + 1)}
+            model = self._modeled("verify", self.max_slots * (k + 1))
+            if model:
+                args.update(model)
+            tr.complete("verify", t_verify, obs_clock.now(), cat="kernel",
+                        pid=self._trace_pid, args=args)
         round_slots = 0
         round_accepted = 0
         for slot in list(self._live):
@@ -1036,6 +1216,10 @@ class ContinuousScheduler:
                 if mean < floor:
                     self.spec_disabled = True
                     self.spec_disables += 1
+                    if tr is not None:
+                        tr.instant("spec_disabled", pid=self._trace_pid,
+                                   args={"acceptance": round(mean, 4),
+                                         "floor": floor})
                     log.warning(
                         "spec decoding disabled: rolling acceptance %.3f "
                         "< floor %.3f over %d rounds", mean, floor,
@@ -1054,10 +1238,10 @@ class ContinuousScheduler:
         own loop and ``collect_metrics`` after, so manually-driven spans
         report the same JSON ``run()`` would."""
         assert self.params is not None, "load(params) first"
-        self._depth_stat = _RunningStat()
-        self._live_stat = _RunningStat()
+        self._depth_stat = _RunningStat("queue_depth")
+        self._live_stat = _RunningStat("live_slots")
         return {
-            "t0": time.monotonic(),
+            "t0": obs_clock.now(),
             "n0": self.total_drained,
             "p0": self.prefill_steps,
             "d0": self.decode_steps,
@@ -1143,7 +1327,7 @@ class ContinuousScheduler:
         """Build the metrics JSON for the span since ``begin_metrics``."""
         n0, p0, d0 = snap["n0"], snap["p0"], snap["d0"]
         s0, f0, c0 = snap["s0"], snap["f0"], snap["c0"]
-        wall = time.monotonic() - snap["t0"]
+        wall = obs_clock.now() - snap["t0"]
         done = self._finished[n0:]
         gen = sum(len(r.tokens) for r in done)
         ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
@@ -1255,3 +1439,35 @@ class ContinuousScheduler:
                 },
             },
         }
+
+
+# ---------------------------------------------------------------------------
+# Registry-backed scheduler counters (DESIGN.md §15). Call sites — and
+# external readers like distributed.router and the test suite — keep the
+# bare attribute idiom (``eng.total_drained += 1``); these properties
+# route every read/write through the engine's MetricsRegistry, so
+# ``engine.metrics.snapshot()`` sees the full counter set without a
+# second bookkeeping path. ``spec_disabled`` stays a plain bool flag.
+_ENGINE_COUNTERS = (
+    "total_drained", "prefill_steps", "decode_steps", "preemptions",
+    "deferrals", "spec_rounds", "spec_slot_rounds", "spec_proposed",
+    "spec_accepted", "spec_emitted", "spec_page_reclaims", "chunk_steps",
+    "chunk_tokens_committed", "prefill_completions", "quarantines",
+    "fault_retries", "failed_requests", "admission_pauses",
+    "deadline_cancels", "spec_disables", "draft_fallbacks",
+)
+
+
+def _counter_property(name: str) -> property:
+    def _get(self):
+        return self.metrics.counter(name).value
+
+    def _set(self, v):
+        self.metrics.counter(name).value = int(v)
+
+    return property(_get, _set, doc=f"registry-backed counter {name!r}")
+
+
+for _cname in _ENGINE_COUNTERS:
+    setattr(ContinuousScheduler, _cname, _counter_property(_cname))
+del _cname

@@ -12,16 +12,20 @@ it drains like any other, just without a full token stream.
 Metrics captured per request (emitted by ``engine.ContinuousScheduler`` as
 JSON): time-to-first-token (queue wait + prefill), end-to-end latency,
 decode throughput, terminal state + failure reason, and retry attempts.
-All timestamps are ``time.monotonic`` floats.
+All timestamps are monotonic floats from ``repro.obs.clock`` — the one
+clock source shared with the engine, the SLO queue, the traffic harness,
+and the tracer, so deadlines, backoff windows, trace spans, and latency
+metrics stay mutually comparable (and fake-able together in tests).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-import time
 from typing import Deque, List, Optional
 
 import numpy as np
+
+from repro.obs import clock as obs_clock
 
 
 @dataclasses.dataclass
@@ -175,7 +179,7 @@ class RequestQueue:
                       eos_id=eos_id, deadline_s=deadline_s,
                       max_retries=max_retries, slo=slo,
                       seq=self.submitted,
-                      submit_t=(time.monotonic() if submit_t is None
+                      submit_t=(obs_clock.now() if submit_t is None
                                 else submit_t))
         self._next_rid += 1
         self.submitted += 1

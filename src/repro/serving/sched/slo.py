@@ -21,9 +21,9 @@ from __future__ import annotations
 
 import collections
 import math
-import time
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
+from repro.obs import clock as obs_clock
 from repro.serving.queue import Request, RequestQueue
 from repro.serving.sched.config import SchedConfig
 
@@ -123,7 +123,7 @@ class SLOQueue(RequestQueue):
                 (self._replays and self._replays[0] is self._peeked)
                 or self._peeked in self._q):
             return self._peeked
-        self._peeked = self._best(time.monotonic())
+        self._peeked = self._best(obs_clock.now())
         return self._peeked
 
     def empty(self) -> bool:

@@ -24,6 +24,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import clock as obs_clock
+
 __all__ = ["Arrival", "TrafficConfig", "make_schedule", "run_open_loop"]
 
 
@@ -123,12 +125,12 @@ def run_open_loop(engine, schedule: Sequence[Arrival], *,
     the engine's standard JSON plus a ``traffic`` block."""
     assert engine.params is not None, "load(params) first"
     snap = engine.begin_metrics()
-    t0 = time.monotonic()
+    t0 = obs_clock.now()
     reqs: List[Any] = []
     i, n = 0, len(schedule)
     late = 0.0
     while i < n or engine.has_work():
-        now = time.monotonic() - t0
+        now = obs_clock.now() - t0
         while i < n and schedule[i].t * time_scale <= now:
             a = schedule[i]
             late = max(late, now - a.t * time_scale)
@@ -149,13 +151,19 @@ def run_open_loop(engine, schedule: Sequence[Arrival], *,
             time.sleep(min(max(schedule[i].t * time_scale - now, 0.0),
                            0.005))
     metrics = engine.collect_metrics(snap)
-    makespan = time.monotonic() - t0
+    makespan = obs_clock.now() - t0
     span = schedule[-1].t - schedule[0].t if n > 1 else 0.0
+    # a one-arrival schedule (or a zero-span / time_scale=0 burst) has no
+    # meaningful arrival rate: report 0.0 — numeric, so downstream
+    # aggregation never trips over None — and flag the degeneracy
+    # explicitly instead of leaving callers to infer it
+    degenerate = n <= 1 or span <= 0 or time_scale <= 0
     metrics["traffic"] = {
         "n": n,
         "time_scale": time_scale,
-        "offered_rate": (round((n - 1) / span, 3)
-                         if span > 0 and time_scale > 0 else None),
+        "offered_rate": (0.0 if degenerate
+                         else round((n - 1) / span, 3)),
+        "degenerate_schedule": degenerate,
         "makespan_s": round(makespan, 4),
         # how far submission lagged the schedule at worst (a large value
         # means the host couldn't keep the open loop open — the engine

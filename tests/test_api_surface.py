@@ -13,7 +13,7 @@ import pytest
 GOLDEN = {
     "repro": {
         "configs", "core", "checkpoint", "data", "distributed", "kernels",
-        "launch", "models", "optim", "paging", "serving", "spec",
+        "launch", "models", "obs", "optim", "paging", "serving", "spec",
         "TernaryWeight", "Dense2Bit", "Tiled", "Bitplane", "Base3", "pack",
         "ternary_gemm", "ternary_gemm_plan",
     },
@@ -39,7 +39,7 @@ GOLDEN = {
     "repro.kernels": {
         "ternary_gemm", "ternary_gemm_plan", "GemmPlan",
         "register_kernel", "kernel_registry", "serving_phase",
-        "SERVING_PHASES",
+        "SERVING_PHASES", "kernel_probe",
         "fused_mlp", "fused_mlp_plan", "FusedMlpPlan",
         "register_fused", "fused_registry", "precompute_fused_plans",
         "fused_mlp_pallas",
@@ -73,6 +73,12 @@ GOLDEN = {
     },
     "repro.checkpoint": {"save", "restore", "latest_step",
                          "CheckpointCorruptError"},
+    "repro.obs": {
+        "clock", "trace", "metrics",
+        "Tracer", "load_trace", "validate_events",
+        "MetricsRegistry", "Counter", "Gauge", "Histogram", "Ewma",
+        "RunningStat", "percentiles",
+    },
 }
 
 # Formats every deployment depends on being registered + dispatchable.
